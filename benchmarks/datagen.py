@@ -1,0 +1,77 @@
+"""Synthetic traffic generators shared by the paper-reproduction benches.
+
+Two data models (EXPERIMENTS.md §Table I discusses why both are needed):
+
+  * ``uniform``  — the paper's literal "random inputs and weights": iid
+    uniform bytes.  Analytically, popcount ordering's gain is bounded here
+    by E[HD | same popcount] = 3.5 bits/byte vs 4.0 unordered (~12.5 % on
+    the ordered side).
+  * ``conv``     — LeNet-like conv traffic: spatially-correlated synthetic
+    images streamed as im2col patches with a repeated quantized kernel.
+    This reproduces the paper's Table-I magnitudes (their workload is the
+    first two LeNet layers).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def uniform_pairs(packets: int, elems: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    inp = rng.integers(0, 256, (packets, elems), dtype=np.uint8)
+    wgt = rng.integers(0, 256, (packets, elems), dtype=np.uint8)
+    return inp, wgt
+
+
+def synth_images(n: int, hw: int = 32, sparsity: float = 0.55, smooth: int = 2,
+                 seed: int = 0) -> np.ndarray:
+    """MNIST-like 8-bit images: smoothed noise thresholded to sparse strokes."""
+    rng = np.random.default_rng(seed)
+    imgs = rng.normal(size=(n, hw, hw))
+    for _ in range(smooth):
+        imgs = (imgs + np.roll(imgs, 1, 1) + np.roll(imgs, -1, 1)
+                + np.roll(imgs, 1, 2) + np.roll(imgs, -1, 2)) / 5
+    thr = np.quantile(imgs, sparsity, axis=(1, 2), keepdims=True)
+    v = np.clip(imgs - thr, 0, None)
+    v = v / (v.max(axis=(1, 2), keepdims=True) + 1e-9) * 255
+    return v.astype(np.uint8)
+
+
+def im2col(img: np.ndarray, k: int = 5) -> np.ndarray:
+    out = img.shape[0] - k + 1
+    return np.lib.stride_tricks.sliding_window_view(img, (k, k)).reshape(
+        out * out, k * k
+    )
+
+
+def conv_streams(n_images: int = 24, kernel: int = 5, elems: int = 64,
+                 seed: int = 42, column_major: bool = False):
+    """(input_packets, weight_packets) for one PE's link (one output channel,
+    matching the paper's platform where the allocation unit feeds each PE its
+    own stream).  Inputs are im2col patches streamed patch-major
+    (``column_major=False``, the non-optimized order) or position-major
+    (``column_major=True`` — the paper's column-major layout: all patches'
+    values at kernel position 0, then position 1, ...); weights follow the
+    same traversal of the repeated kernel."""
+    rng = np.random.default_rng(seed)
+    imgs = synth_images(n_images, seed=seed)
+    k2 = kernel * kernel
+    kern = (rng.normal(size=k2) * 60 + 128).clip(0, 255).astype(np.uint8)
+    inps, wgts = [], []
+    for im in imgs:
+        patches = im2col(im, kernel)  # (P, 25)
+        wmat = np.broadcast_to(kern, patches.shape)
+        if column_major:
+            inps.append(patches.T.reshape(-1))
+            wgts.append(wmat.T.reshape(-1))
+        else:
+            inps.append(patches.reshape(-1))
+            wgts.append(wmat.reshape(-1))
+    inp_stream = np.concatenate(inps)
+    wgt_stream = np.concatenate(wgts)
+    p = inp_stream.size // elems
+    return (
+        inp_stream[: p * elems].reshape(p, elems),
+        wgt_stream[: p * elems].reshape(p, elems),
+    )

@@ -1,0 +1,113 @@
+"""Regenerate the §Dry-run table and §Roofline sections of EXPERIMENTS.md
+from the dry-run JSON records (idempotent; keyed on HTML markers)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import re
+
+from repro.configs import ARCH_NAMES, arch_shapes
+from repro.configs.shapes import SHAPES
+from repro.roofline import analyse
+
+
+def dryrun_table() -> str:
+    lines = [
+        "| arch | shape | mesh | kind | compile | peak GiB/dev (TPU-adj) | "
+        "HLO flops/dev | wire bytes/dev | collectives |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    recs = {}
+    for f in sorted(glob.glob("experiments/dryrun/*.json")):
+        r = json.load(open(f))
+        recs[(r["arch"], r["shape"], r["mesh"])] = r
+    for arch in ARCH_NAMES:
+        for shape in arch_shapes(arch):
+            for mesh in ("16x16", "2x16x16"):
+                r = recs.get((arch, shape, mesh))
+                if r is None:
+                    lines.append(f"| {arch} | {shape} | {mesh} | — | MISSING | | | | |")
+                    continue
+                if r["status"] != "ok":
+                    lines.append(
+                        f"| {arch} | {shape} | {mesh} | — | {r['status']} | | | | |")
+                    continue
+                peak = r.get("tpu_peak_bytes_per_device", 0) / 2**30
+                fits = "✓" if peak < 16 else "OVER"
+                flops = r.get("hlo_flops_per_device")
+                wire = r.get("wire_bytes_per_device")
+                colls = r.get("collectives", {})
+                cstr = " ".join(
+                    f"{k.split('-')[0]}-{k.split('-')[1][:1]}:{v['count']}"
+                    if "-" in k else f"{k}:{v['count']}"
+                    for k, v in sorted(colls.items())
+                ) or "—"
+                lines.append(
+                    f"| {arch} | {shape} | {mesh} | {r['kind']} | "
+                    f"{r['compile_sec']:.0f}s | {peak:.2f} {fits} | "
+                    f"{'%.2e' % flops if flops else '—'} | "
+                    f"{'%.2e' % wire if wire is not None else '—'} | {cstr} |"
+                )
+    skips = [
+        f"{a} x long_500k" for a in ARCH_NAMES if "long_500k" not in arch_shapes(a)
+    ]
+    lines += ["", f"Skipped (documented, DESIGN.md §4): {', '.join(skips)}."]
+    return "\n".join(lines)
+
+
+def roofline_section() -> str:
+    lines = [
+        "Terms per (arch x shape), single-pod 16x16 (cost pass: unrolled-"
+        "extrapolated; see §Dry-run methodology).  `mem floor` = TPU-adjusted "
+        "resident bytes / HBM bw (every live byte crosses HBM >= once); "
+        "`mem hlo` = XLA bytes-accessed / HBM bw (upper bound — the "
+        "CPU-backend compile fuses less than TPU).  Dominant term and the "
+        "roofline fraction use the floor.",
+        "",
+        "| arch | shape | compute s | mem floor s | mem hlo s | collective s |"
+        " dominant | useful ratio | roofline frac | one-line lever |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    levers = {
+        "compute": "cut remat recompute / FLOP-optimal attention",
+        "memory": "shrink resident set: smaller chunks, quantized caches",
+        "collective": "resharding (pure-DP for small models), saved "
+                      "collective outputs, int8 wire",
+    }
+    for f in sorted(glob.glob("experiments/dryrun/*__16x16.json")):
+        r = json.load(open(f))
+        if r.get("status") != "ok" or "hlo_flops_per_device" not in r:
+            continue
+        shp = SHAPES[r["shape"]]
+        t = analyse(r, shp.seq_len, shp.global_batch)
+        lines.append(
+            f"| {t.arch} | {t.shape} | {t.compute_s:.3e} | "
+            f"{t.memory_floor_s:.3e} | {t.memory_hlo_s:.3e} | "
+            f"{t.collective_s:.3e} | {t.dominant} | {t.useful_ratio:.3f} | "
+            f"{t.roofline_fraction:.3f} | {levers[t.dominant]} |"
+        )
+    return "\n".join(lines)
+
+
+def splice(text: str, marker: str, content: str) -> str:
+    pattern = re.compile(
+        rf"<!-- {marker} -->.*?(?=\n## |\Z)", re.DOTALL
+    )
+    replacement = f"<!-- {marker} -->\n{content}\n"
+    if pattern.search(text):
+        return pattern.sub(lambda _: replacement, text)
+    return text + f"\n{replacement}"
+
+
+def main() -> None:
+    path = "EXPERIMENTS.md"
+    text = open(path).read()
+    text = splice(text, "DRYRUN_TABLE", dryrun_table())
+    text = splice(text, "ROOFLINE", roofline_section())
+    open(path, "w").write(text)
+    print("EXPERIMENTS.md sections regenerated")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Microbenchmarks of the Pallas kernels (interpret mode on CPU; on-TPU
+these compile to real kernels — the numbers here track algorithmic cost and
+regression, not TPU throughput)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import bt_count, psu_sort, quantize_egress
+
+
+def _time(fn, *args, iters=3):
+    fn(*args)  # compile/warm
+    t0 = time.monotonic()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.monotonic() - t0) / iters * 1e6
+
+
+def run() -> list[tuple[str, float, str]]:
+    rng = np.random.default_rng(0)
+    rows = []
+    for p, n in [(256, 25), (1024, 64)]:
+        x = jnp.asarray(rng.integers(0, 256, (p, n), dtype=np.uint8))
+        us = _time(lambda v: psu_sort(v)[0], x)
+        rows.append((f"kernel/psu/P{p}xN{n}", us, f"{us / p:.2f}us/packet"))
+        us = _time(lambda v: psu_sort(v, k=4)[0], x)
+        rows.append((f"kernel/psu_app/P{p}xN{n}", us, f"{us / p:.2f}us/packet"))
+    s = jnp.asarray(rng.integers(0, 256, (16384, 16), dtype=np.uint8))
+    us = _time(bt_count, s)
+    rows.append(("kernel/bt_count/16k_flits", us, f"{16384 * 16 / us:.1f}MB/s"))
+    g = jnp.asarray(rng.normal(size=(1 << 20,)).astype(np.float32))
+    us = _time(lambda v: quantize_egress(v)[0], g)
+    rows.append(("kernel/quantize/1M", us, f"{(1 << 20) * 4 / us:.1f}MB/s"))
+    return rows

@@ -1,0 +1,61 @@
+"""Benchmark harness — one module per paper table/figure plus the
+beyond-paper traffic and roofline reports.  Prints ``name,us_per_call,
+derived`` CSV (the harness contract).
+
+  table1_bt        -> paper Table I   (BT per flit, 4 orderings, 2 data models)
+  fig5_area        -> paper Fig. 5    (area breakdown, 4 designs, 2 sizes)
+  fig7_power       -> paper Fig. 6/7  (link-related + PE power reductions)
+  lenet_workload   -> paper §IV-B     (conv+pool platform, PSU in the loop)
+  arch_bt          -> paper §V future work (transformer traffic BT)
+  kernel_bench     -> Pallas kernel microbenchmarks
+  roofline_report  -> deliverable (g) tables from the dry-run records
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from . import (
+        arch_bt,
+        fig5_area,
+        fig7_power,
+        kernel_bench,
+        lenet_workload,
+        roofline_report,
+        table1_bt,
+    )
+
+    mods = [
+        ("table1_bt", table1_bt),
+        ("fig5_area", fig5_area),
+        ("fig7_power", fig7_power),
+        ("lenet_workload", lenet_workload),
+        ("arch_bt", arch_bt),
+        ("kernel_bench", kernel_bench),
+        ("roofline_report", roofline_report),
+    ]
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, mod in mods:
+        if only and only != name:
+            continue
+        t0 = time.monotonic()
+        try:
+            rows = mod.run()
+        except Exception as e:  # keep the harness running; report the failure
+            print(f"{name},0,FAILED: {type(e).__name__}: {e}")
+            failures += 1
+            continue
+        for rname, us, derived in rows:
+            print(f'{rname},{us:.2f},"{derived}"')
+        print(f"# {name} done in {time.monotonic() - t0:.1f}s", file=sys.stderr)
+    if failures:
+        raise SystemExit(f"{failures} benchmark modules failed")
+
+
+if __name__ == "__main__":
+    main()

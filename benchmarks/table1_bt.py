@@ -1,0 +1,118 @@
+"""Table I reproduction: BT per 128-bit flit under four orderings.
+
+Paper values (for reference, 100k packets of paired random data):
+  non-optimized 63.072 | column-major 54.011 (-14.37 %) |
+  ACC 50.346 (-20.18 %) | APP 50.896 (-19.31 %)
+
+We report both data models (see datagen.py): the paper's reductions are
+reproduced on the conv-traffic model; uniform iid bytes show the analytic
+~5 % ceiling for paired framing (derivation in EXPERIMENTS.md §Table I).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+
+from repro.core import (
+    LinkConfig,
+    app_sort_indices,
+    bt_per_flit,
+    make_order,
+    measure,
+    pack_to_flits,
+)
+
+from .datagen import conv_streams, uniform_pairs
+
+PAPER = {
+    "none": (63.072, 0.0),
+    "column_major": (54.011, 14.366),
+    "acc": (50.346, 20.177),
+    "app": (50.896, 19.305),
+}
+# input-side BT/flit from Table I (the stream the PSU actually orders);
+# the weight-stream generation is underspecified in the paper (see
+# EXPERIMENTS.md §Table I), so the input side is the calibration target.
+PAPER_INPUT = {"none": 31.035, "column_major": 26.004, "acc": 22.333, "app": 22.887}
+
+STRATS = ("none", "column_major", "acc", "app")
+
+
+def _measure_separate(vals, strat, lanes=16):
+    order = make_order(strat, jnp.asarray(vals), lanes=lanes)
+    v = jnp.take_along_axis(jnp.asarray(vals), order, axis=-1)
+    flits = pack_to_flits(v, lanes, "lane").reshape(-1, lanes)
+    return float(bt_per_flit(flits))
+
+
+def run(packets: int = 20000) -> list[tuple[str, float, str]]:
+    rows = []
+
+    # --- paired uniform framing (paper's literal setup) ---
+    cfg = LinkConfig()
+    inp, wgt = uniform_pairs(packets, cfg.elems_per_packet)
+    inp, wgt = jnp.asarray(inp), jnp.asarray(wgt)
+    t0 = time.monotonic()
+    base = measure(inp, wgt, cfg, "none")
+    for strat in STRATS:
+        r = measure(inp, wgt, cfg, strat)
+        red = float(r.reduction_vs(base)) * 100
+        rows.append((
+            f"table1/uniform/{strat}",
+            (time.monotonic() - t0) * 1e6 / packets,
+            f"bt_per_flit={float(r.overall_bt_per_flit):.3f} red={red:.2f}% "
+            f"paper_bt={PAPER[strat][0]} paper_red={PAPER[strat][1]}%",
+        ))
+
+    # --- conv-traffic model (reproduces the paper's magnitudes) ---
+    inp, wgt = conv_streams()
+    inp_cm, wgt_cm = conv_streams(column_major=True)
+    t0 = time.monotonic()
+    base_i = _measure_separate(inp, "none")
+    base_w = _measure_separate(wgt, "none")
+    for strat in STRATS:
+        if strat == "column_major":
+            # the paper's column-major is a LAYOUT of the im2col traversal
+            # (position-major), not a per-packet permutation
+            bi = _measure_separate(inp_cm, "none")
+            bw = _measure_separate(wgt_cm, "none")
+        else:
+            bi = _measure_separate(inp, strat)
+            bw = _measure_separate(wgt, strat)
+        red = 100 * (1 - (bi + bw) / (base_i + base_w))
+        in_red = 100 * (1 - bi / base_i)
+        paper_in_red = 100 * (1 - PAPER_INPUT[strat] / PAPER_INPUT["none"])
+        rows.append((
+            f"table1/conv/{strat}",
+            (time.monotonic() - t0) * 1e6 / inp.shape[0],
+            f"in={bi:.3f} (paper {PAPER_INPUT[strat]}) wt={bw:.3f} "
+            f"overall_red={red:.2f}% input_red={in_red:.2f}% "
+            f"(paper input_red={paper_in_red:.2f}%)",
+        ))
+
+    # APP retention of ACC's reduction (paper: 95.5 %)
+    acc_i, app_i = _measure_separate(inp, "acc"), _measure_separate(inp, "app")
+    acc_w, app_w = _measure_separate(wgt, "acc"), _measure_separate(wgt, "app")
+    red_acc = 1 - (acc_i + acc_w) / (base_i + base_w)
+    red_app = 1 - (app_i + app_w) / (base_i + base_w)
+    rows.append((
+        "table1/conv/app_retention",
+        0.0,
+        f"app/acc={100 * red_app / red_acc:.1f}% (paper 95.5%)",
+    ))
+
+    # beyond-paper: bucket-count sweep (pairs with the fig5 area k-sweep to
+    # complete the area/BT trade-off curve the paper fixes at k=4)
+    for k in (2, 4, 8):
+        order = app_sort_indices(jnp.asarray(inp), k=k)
+        v = jnp.take_along_axis(jnp.asarray(inp), order, axis=-1)
+        flits = pack_to_flits(v, 16, "lane").reshape(-1, 16)
+        bi = float(bt_per_flit(flits))
+        rows.append((
+            f"table1/conv/k_sweep/k{k}", 0.0,
+            f"input_bt={bi:.3f} input_red={100 * (1 - bi / base_i):.2f}% "
+            f"(acc={100 * (1 - acc_i / base_i):.2f}%)",
+        ))
+    return rows

@@ -1,0 +1,52 @@
+"""Quickstart: the popcount-sorting unit in 60 seconds.
+
+Runs the ACC/APP PSU (Pallas kernel) on a packet of bytes, shows the
+Fig.-2-style ordered stream, measures the link-BT saving, and prints the
+area model's Fig.-5 numbers.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import LinkConfig, bitonic_area, bucket_map, csn_area, measure, popcount, psu_area
+from repro.kernels import psu_reorder, psu_sort
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    packet = jnp.asarray(rng.integers(0, 256, (1, 16), dtype=np.uint8))
+    print("input bytes   :", [f"{int(v):02x}" for v in packet[0]])
+    print("'1'-bit counts:", np.asarray(popcount(packet))[0].tolist())
+    print("APP buckets   :", np.asarray(bucket_map(popcount(packet)))[0].tolist())
+
+    order, rank = psu_sort(packet, k=4)
+    print("APP sort order:", np.asarray(order)[0].tolist())
+    out = psu_reorder(packet, k=4)
+    print("ordered stream:", [f"{int(v):02x}" for v in out[0]],
+          "(popcount-bucket monotone, Fig. 2)")
+
+    # Table-I style link measurement on 2000 packets
+    cfg = LinkConfig()
+    inp = jnp.asarray(rng.integers(0, 256, (2000, cfg.elems_per_packet), np.uint8))
+    wgt = jnp.asarray(rng.integers(0, 256, (2000, cfg.elems_per_packet), np.uint8))
+    base = measure(inp, wgt, cfg, "none")
+    for strat in ("acc", "app"):
+        r = measure(inp, wgt, cfg, strat)
+        print(f"{strat.upper():4s} ordering: {float(r.overall_bt_per_flit):.2f} "
+              f"BT/flit vs {float(base.overall_bt_per_flit):.2f} "
+              f"({float(r.reduction_vs(base)) * 100:.1f} % reduction)")
+
+    print("\nArea model (22 nm, N=25 window — paper Fig. 5):")
+    for name, a in [("Bitonic", bitonic_area(25)), ("CSN", csn_area(25)),
+                    ("ACC-PSU", psu_area(25)), ("APP-PSU", psu_area(25, k=4))]:
+        print(f"  {name:8s} {a.total:8.0f} um^2 "
+              f"(popcount {a.popcount:.0f} + sort {a.sort:.0f})")
+    acc, app = psu_area(25), psu_area(25, k=4)
+    print(f"  APP vs ACC: -{100 * (1 - app.total / acc.total):.1f} % "
+          "(paper: -35.4 %)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""End-to-end training driver: a ~100M-param LM on the synthetic pipeline.
+
+Fault-tolerant by construction: atomic checkpoints + deterministic data; a
+killed run resumes bit-exactly (try Ctrl-C mid-run and re-launch).
+
+    PYTHONPATH=src python examples/train_lm.py --steps 300        # full run
+    PYTHONPATH=src python examples/train_lm.py --steps 5 --tiny   # smoke
+
+The default config is an internlm2-family decoder (~95M params: 12 layers,
+d_model 512, GQA 8/4, d_ff 2048, 92544 vocab tied).  A few hundred steps on
+the affine-recurrence corpus drop loss from ~11.5 toward the corpus entropy
+floor (CPU: ~30 s/step at this scale; on TPU this config is minutes).
+"""
+
+import argparse
+
+from repro.configs import get_config
+from repro.data import DataConfig
+from repro.optim import AdamWConfig
+from repro.train import TrainLoopConfig, train
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--ckpt", default="/tmp/repro_train_lm")
+    ap.add_argument("--tiny", action="store_true", help="toy width (CI smoke)")
+    args = ap.parse_args()
+
+    if args.tiny:
+        cfg = get_config(
+            "internlm2-1.8b", n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+            d_ff=128, vocab=512, attn_impl="dense", tie_embeddings=True,
+        )
+    else:
+        cfg = get_config(
+            "internlm2-1.8b", n_layers=12, d_model=512, n_heads=8, n_kv_heads=4,
+            d_ff=2048, tie_embeddings=True, attn_impl="dense",
+        )  # ~95M params
+    n_params = cfg.param_count()
+    print(f"arch: {cfg.name}-derived  params ~{n_params / 1e6:.0f}M")
+
+    data = DataConfig(vocab=cfg.vocab, seq_len=args.seq, global_batch=args.batch,
+                      seed=0, noise=0.1)
+    # schedule horizon independent of --steps so short runs stay at peak lr
+    opt = AdamWConfig(peak_lr=3e-4, warmup_steps=20,
+                      total_steps=max(args.steps, 1000))
+    loop = TrainLoopConfig(
+        steps=args.steps, checkpoint_every=25, checkpoint_dir=args.ckpt,
+        log_every=5,
+    )
+    result = train(cfg, data, opt, loop)
+    losses = [m["loss"] for m in result["log"]]
+    print(f"loss: first {losses[0]:.3f} -> last {losses[-1]:.3f}")
+
+
+if __name__ == "__main__":
+    main()

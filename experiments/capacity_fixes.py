@@ -1,0 +1,61 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Capacity-fix pass: apply the §Perf levers to every remaining over-16GiB
+cell (EXPERIMENTS.md §Perf addendum).  Lever mapping:
+
+  * granite (24 heads % 16 != 0 -> attention fully replicated per TP rank):
+    logical remesh to TP in {4, 8} so heads shard; prefill also takes scan
+    attention (unrolled-block liveness).
+  * 32k prefill cells: scan attention (B2 lever).
+  * internvl2 train: ZeRO-1 instead of FSDP (weight re-gathers under remat
+    were the temp driver; TP params 5 GiB + data-sharded Adam fits).
+  * qwen3-moe train: FSDP + 8 microbatches (dispatch buffers halve).
+  * whisper train: 4 microbatches + chunked loss.
+"""
+import json
+import repro.launch.specs as specs
+from repro.launch.dryrun import run_cell
+
+FIXES = [
+    ("granite-moe-3b-a800m", "train_4k", "fix_mesh64x4", {}, (64, 4), None),
+    ("granite-moe-3b-a800m", "prefill_32k", "fix_scan_mesh32x8",
+     {"attn_impl": "chunked", "attn_chunk": 4096}, (32, 8), None),
+    ("internvl2-26b", "train_4k", "fix_zero1",
+     {"fsdp": False, "zero1": True}, None, None),
+    ("qwen3-moe-30b-a3b", "train_4k", "fix_mb8", {}, None, 8),
+    ("whisper-medium", "train_4k", "fix_mb4_logitschunk",
+     {"logits_chunk": 512}, None, 4),
+    ("qwen3-4b", "prefill_32k", "fix_scan",
+     {"attn_impl": "chunked", "attn_chunk": 4096}, None, None),
+    ("zamba2-1.2b", "prefill_32k", "fix_scan",
+     {"attn_impl": "chunked", "attn_chunk": 4096}, None, None),
+    ("qwen3-moe-30b-a3b", "prefill_32k", "fix_scan",
+     {"attn_impl": "chunked", "attn_chunk": 4096}, None, None),
+    ("internvl2-26b", "prefill_32k", "fix_scan",
+     {"attn_impl": "chunked", "attn_chunk": 4096}, None, None),
+    # round 2: (64,4) left granite train at 23.1 GiB (state-dominated);
+    # ZeRO-1 + TP=8 + mb4 lands at 6.9 GiB
+    ("granite-moe-3b-a800m", "train_4k", "fix2_mesh32x8_zero1_mb4",
+     {"zero1": True}, (32, 8), 4),
+]
+
+os.makedirs("experiments/perf", exist_ok=True)
+for arch, shape, tag, over, mesh_shape, mb in FIXES:
+    out = f"experiments/perf/{arch}__{shape}__{tag}.json"
+    if os.path.exists(out):
+        print("skip", tag); continue
+    saved = specs.DEFAULT_TRAIN_MICROBATCHES
+    saved_map = dict(specs.TRAIN_MICROBATCHES)
+    if mb:
+        specs.TRAIN_MICROBATCHES[arch] = mb
+    try:
+        rec = run_cell(arch, shape, multi_pod=False, cfg_overrides=over,
+                       mesh_shape=mesh_shape, with_cost_pass=False)
+        rec["perf_tag"] = tag
+        json.dump(rec, open(out, "w"), indent=1)
+    except Exception as e:
+        print(f"{arch} {shape} {tag} FAILED: {type(e).__name__}: {e}")
+    finally:
+        specs.TRAIN_MICROBATCHES.clear(); specs.TRAIN_MICROBATCHES.update(saved_map)
+        specs.DEFAULT_TRAIN_MICROBATCHES = saved

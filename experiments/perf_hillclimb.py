@@ -1,0 +1,81 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimb driver: run the three chosen cells' optimization
+iterations and record before/after JSONs under experiments/perf/.
+
+Cells (chosen per the assignment from the baseline roofline table):
+  A. mamba2-370m    x train_4k    — most collective-bound cell
+  B. codeqwen1.5-7b x prefill_32k — worst roofline fraction (+ over-memory)
+  C. internlm2-1.8b x train_4k    — most representative of the paper's
+     technique (link/collective-traffic levers: remat policy that stops
+     re-running forward all-reduces; compressed wire)
+
+Baselines are the untouched sweep records (experiments/dryrun/...); each
+iteration here reruns the cell with one config change.
+
+  PYTHONPATH=src python experiments/perf_hillclimb.py [tag ...]
+"""
+
+import json  # noqa: E402
+import shutil  # noqa: E402
+import sys  # noqa: E402
+
+ITERS = [
+    # (arch, shape, tag, overrides)
+    ("mamba2-370m", "train_4k", "A1_pure_dp", {"pure_dp": True}),
+    ("mamba2-370m", "train_4k", "A2_pure_dp_mb4", {"pure_dp": True}),  # + mb=4
+    ("codeqwen1.5-7b", "prefill_32k", "B1_attn_chunk_2048", {"attn_chunk": 2048}),
+    ("codeqwen1.5-7b", "prefill_32k", "B2_attn_scan", {"attn_impl": "chunked"}),
+    ("codeqwen1.5-7b", "prefill_32k", "B3_scan_chunk4k",
+     {"attn_impl": "chunked", "attn_chunk": 4096}),
+    ("internlm2-1.8b", "train_4k", "C1_save_block_io",
+     {"remat_policy": "save_block_io"}),
+    ("internlm2-1.8b", "train_4k", "C2_save_block_io_mb4",
+     {"remat_policy": "save_block_io"}),  # + mb=4
+]
+
+
+def main() -> None:
+    from repro.launch.dryrun import run_cell
+    import repro.launch.specs as specs
+
+    only = set(sys.argv[1:])
+    os.makedirs("experiments/perf", exist_ok=True)
+    # copy sweep baselines for side-by-side reading
+    for arch, shape in {(a, s) for a, s, _, _ in ITERS}:
+        src = f"experiments/dryrun/{arch}__{shape}__16x16.json"
+        dst = f"experiments/perf/{arch}__{shape}__baseline.json"
+        if os.path.exists(src) and not os.path.exists(dst):
+            shutil.copy(src, dst)
+
+    for arch, shape, tag, over in ITERS:
+        if only and tag not in only:
+            continue
+        out = f"experiments/perf/{arch}__{shape}__{tag}.json"
+        if os.path.exists(out):
+            print(f"skip existing {tag}")
+            continue
+        mb_override = 4 if tag.endswith("_mb4") else None
+        saved = dict(specs.TRAIN_MICROBATCHES)
+        saved_default = specs.DEFAULT_TRAIN_MICROBATCHES
+        if mb_override:
+            specs.TRAIN_MICROBATCHES[arch] = mb_override
+            specs.DEFAULT_TRAIN_MICROBATCHES = mb_override
+        try:
+            rec = run_cell(arch, shape, multi_pod=False, cfg_overrides=over)
+            rec["perf_tag"] = tag
+            rec["overrides"] = {**over, **({"microbatches": mb_override} if mb_override else {})}
+            with open(out, "w") as f:
+                json.dump(rec, f, indent=1)
+        except Exception as e:
+            print(f"{tag} FAILED: {type(e).__name__}: {e}")
+        finally:
+            specs.TRAIN_MICROBATCHES.clear()
+            specs.TRAIN_MICROBATCHES.update(saved)
+            specs.DEFAULT_TRAIN_MICROBATCHES = saved_default
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimb round 2 (after round-1 measurement + parser fixes).
+
+New hypotheses (napkin math in EXPERIMENTS.md §Perf):
+  A3: pure-DP + SSD chunk 128 — intra-chunk quadratic term halves
+  B2b: scan attention re-measured with the loop-unroll cost fix
+  B4: logical remesh (32, 8) for prefill — batch 32 fully data-sharded,
+      TP degree 8: per-AR payload/device halves and ring factor drops
+  C3: save_block_io + logical remesh (64, 4) — TP all-reduce payload
+      scales with per-device batch; predicted wire ~5x down
+  C4: C3 + int8-EF wire (2x demonstrated in HLO; applied analytically)
+"""
+
+import json  # noqa: E402
+
+ITERS = [
+    ("mamba2-370m", "train_4k", "A3_pure_dp_chunk128", {"pure_dp": True},
+     {"ssm_chunk": 128}, None),
+    # scan-attention FLOPs are chunk-size-invariant (masked full-KV = S^2);
+    # measure at chunk 4096 so the unrolled cost pass compiles 8x8 = 64
+    # blocks/layer instead of 1024
+    ("codeqwen1.5-7b", "prefill_32k", "B2b_attn_scan_remeasure",
+     {"attn_impl": "chunked", "attn_chunk": 4096}, {}, None),
+    ("codeqwen1.5-7b", "prefill_32k", "B4_mesh32x8", {}, {}, (32, 8)),
+    ("codeqwen1.5-7b", "prefill_32k", "B5_scan_mesh32x8",
+     {"attn_impl": "chunked", "attn_chunk": 4096}, {}, (32, 8)),
+    ("internlm2-1.8b", "train_4k", "C3_blockio_mesh64x4",
+     {"remat_policy": "save_block_io"}, {}, (64, 4)),
+    ("mamba2-370m", "train_4k", "A1b_pure_dp_remeasure", {"pure_dp": True},
+     {}, None),
+]
+
+
+def main() -> None:
+    import dataclasses
+    import sys
+
+    from repro.configs import get_config
+    from repro.launch.dryrun import run_cell
+
+    only = set(sys.argv[1:])
+    os.makedirs("experiments/perf", exist_ok=True)
+    for arch, shape, tag, over, extra, mesh_shape in ITERS:
+        if only and tag not in only:
+            continue
+        out = f"experiments/perf/{arch}__{shape}__{tag}.json"
+        if os.path.exists(out):
+            print(f"skip existing {tag}")
+            continue
+        over = dict(over)
+        if "ssm_chunk" in extra:
+            base = get_config(arch)
+            over["ssm"] = dataclasses.replace(base.ssm, chunk=extra["ssm_chunk"])
+        try:
+            rec = run_cell(arch, shape, multi_pod=False, cfg_overrides=over,
+                           mesh_shape=mesh_shape)
+            rec["perf_tag"] = tag
+            with open(out, "w") as f:
+                json.dump(rec, f, indent=1)
+        except Exception as e:
+            print(f"{tag} FAILED: {type(e).__name__}: {e}")
+
+
+if __name__ == "__main__":
+    main()

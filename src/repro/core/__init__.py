@@ -1,0 +1,65 @@
+# The paper's primary contribution: comparison-free popcount sorting
+# (ACC-PSU / APP-PSU) for link bit-transition reduction, plus the BT /
+# link-power / area models used to evaluate it.
+from .popcount import (
+    bucket_boundaries,
+    bucket_map,
+    num_bucket_bits,
+    popcount,
+    popcount_lut4,
+)
+from .sorting import (
+    acc_sort_indices,
+    app_sort_indices,
+    apply_order,
+    counting_sort_indices,
+    counting_sort_ranks,
+    invert_permutation,
+)
+from .ordering import ORDER_STRATEGIES, make_order, order_packets
+from .bt import BTReport, bit_transitions, bt_per_flit, bt_report
+from .link import LinkConfig, LinkPowerModel, pack_to_flits, paired_stream, measure
+from .area import (
+    AREA_ANCHORS,
+    PSUArea,
+    PSUTiming,
+    bitonic_area,
+    bitonic_timing,
+    csn_area,
+    psu_area,
+    psu_timing,
+)
+
+__all__ = [
+    "popcount",
+    "popcount_lut4",
+    "bucket_map",
+    "bucket_boundaries",
+    "num_bucket_bits",
+    "counting_sort_ranks",
+    "counting_sort_indices",
+    "acc_sort_indices",
+    "app_sort_indices",
+    "apply_order",
+    "invert_permutation",
+    "make_order",
+    "order_packets",
+    "ORDER_STRATEGIES",
+    "bit_transitions",
+    "bt_per_flit",
+    "bt_report",
+    "BTReport",
+    "LinkConfig",
+    "LinkPowerModel",
+    "pack_to_flits",
+    "paired_stream",
+    "measure",
+    "psu_area",
+    "bitonic_area",
+    "csn_area",
+    "PSUArea",
+    "AREA_ANCHORS",
+    "PSUTiming",
+    "psu_timing",
+    "bitonic_timing",
+]

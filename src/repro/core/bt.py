@@ -1,0 +1,71 @@
+"""Bit-transition (BT) counting — the paper's evaluation metric.
+
+Dynamic link power is proportional to switching activity: each bit that flips
+between consecutive flits on a W-bit link charges/discharges wire capacitance
+(paper §I).  BT of a flit stream is therefore the Hamming distance between
+consecutive flits, summed over the stream.
+
+Streams are represented as uint8 arrays shaped ``(num_flits, bytes_per_flit)``;
+a 128-bit link has ``bytes_per_flit = 16``.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .popcount import popcount
+
+__all__ = ["bit_transitions", "bt_per_flit", "BTReport", "bt_report"]
+
+
+def bit_transitions(stream: jax.Array, width: int = 8) -> jax.Array:
+    """Total bit transitions over a flit stream.
+
+    Args:
+      stream: (T, B) integer array; element [t, b] is byte lane b of flit t.
+      width: bits per element (8 for byte lanes).
+
+    Returns:
+      int32 scalar: sum over t of HammingDistance(flit_t, flit_{t+1}).
+    """
+    a = stream.astype(jnp.uint32)
+    flips = jnp.bitwise_xor(a[1:], a[:-1])
+    return popcount(flips, width).sum()
+
+
+def bt_per_flit(stream: jax.Array, width: int = 8) -> jax.Array:
+    """Average BT per transmitted flit (the paper's Table-I normalisation).
+
+    The paper reports "Bit Transitions per 128-bit flit" = total BT divided by
+    the number of flits sent (boundaries = flits - 1, which for 400 000 flits
+    is indistinguishable from flits).
+    """
+    t = stream.shape[0]
+    return bit_transitions(stream, width) / jnp.maximum(t, 1)
+
+
+class BTReport(NamedTuple):
+    """Per-side BT accounting matching Table I columns."""
+
+    input_bt_per_flit: jax.Array
+    weight_bt_per_flit: jax.Array
+    overall_bt_per_flit: jax.Array
+
+    def reduction_vs(self, base: "BTReport") -> jax.Array:
+        """Overall BT reduction relative to a baseline report (fraction)."""
+        return 1.0 - self.overall_bt_per_flit / base.overall_bt_per_flit
+
+
+def bt_report(stream: jax.Array, input_lanes: int, width: int = 8) -> BTReport:
+    """Split BT between the input half and weight half of each flit.
+
+    The Table-I link carries input bytes in lanes [0, input_lanes) and weight
+    bytes in the remaining lanes (DESIGN.md §1: 128-bit flit = 64-bit input +
+    64-bit weight for the paired framing).
+    """
+    inp = bt_per_flit(stream[:, :input_lanes], width)
+    wgt = bt_per_flit(stream[:, input_lanes:], width)
+    return BTReport(inp, wgt, inp + wgt)

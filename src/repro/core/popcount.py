@@ -1,0 +1,93 @@
+"""Popcount ('1'-bit count) primitives — the paper's stage 1.
+
+The hardware popcount unit (Fig. 1) computes the Hamming weight of each W-bit
+input element with 4-bit LUTs whose outputs are summed by an adder tree.  We
+provide:
+
+  * :func:`popcount` — production path (``jax.lax.population_count``).
+  * :func:`popcount_lut4` — hardware-faithful 4-bit-LUT + adder formulation,
+    used as the oracle for the Pallas kernel and in tests to show equivalence
+    with the circuit-level description.
+  * :func:`bucket_map` — the APP-PSU coarse-bucket mapping (paper §III-B.2).
+
+All functions are jit-/vmap-safe and operate elementwise on integer arrays.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "popcount",
+    "popcount_lut4",
+    "bucket_map",
+    "bucket_boundaries",
+    "num_bucket_bits",
+]
+
+
+def popcount(x: jax.Array, width: int = 8) -> jax.Array:
+    """Exact '1'-bit count of each element of ``x``.
+
+    Args:
+      x: integer array; only the low ``width`` bits of each element count.
+      width: element bit width W (paper uses W=8 fixed-point).
+
+    Returns:
+      int32 array of the same shape with values in ``[0, width]``.
+    """
+    if width < 1 or width > 32:
+        raise ValueError(f"width must be in [1, 32], got {width}")
+    ux = x.astype(jnp.uint32)
+    if width < 32:
+        ux = ux & jnp.uint32((1 << width) - 1)
+    return jax.lax.population_count(ux).astype(jnp.int32)
+
+
+def popcount_lut4(x: jax.Array, width: int = 8) -> jax.Array:
+    """Hardware-faithful popcount: 4-bit LUT lookups aggregated by adders.
+
+    Mirrors the circuit in Fig. 1: the W-bit input is split into ceil(W/4)
+    nibbles, each nibble indexes a 16-entry LUT holding its Hamming weight,
+    and the LUT outputs are summed.  Numerically identical to
+    :func:`popcount`; kept separate so tests can assert the equivalence the
+    paper's synthesis flow relies on.
+    """
+    if width < 1 or width > 32:
+        raise ValueError(f"width must be in [1, 32], got {width}")
+    lut = jnp.array([bin(i).count("1") for i in range(16)], dtype=jnp.int32)
+    ux = x.astype(jnp.uint32) & jnp.uint32((1 << width) - 1)
+    total = jnp.zeros(x.shape, dtype=jnp.int32)
+    n_nibbles = (width + 3) // 4
+    for n in range(n_nibbles):
+        nib = (ux >> jnp.uint32(4 * n)) & jnp.uint32(0xF)
+        total = total + lut[nib.astype(jnp.int32)]
+    return total
+
+
+def bucket_boundaries(width: int, k: int) -> list[int]:
+    """Exact popcount values assigned to each bucket (python-side helper).
+
+    Returns a list of length ``width + 1`` mapping popcount value -> bucket.
+    For W=8, k=4 this reproduces the paper's mapping
+    {0,1,2}->0, {3,4}->1, {5,6}->2, {7,8}->3.
+    """
+    return [(p * k) // (width + 1) for p in range(width + 1)]
+
+
+def bucket_map(p: jax.Array, width: int = 8, k: int = 4) -> jax.Array:
+    """APP-PSU deterministic coarse-bucket mapping (paper §III-B.2).
+
+    Maps exact '1'-bit counts ``p`` in [0, width] to bucket indices in
+    [0, k).  The mapping is the uniform partition ``bucket = p*k // (W+1)``,
+    which for W=8, k=4 reproduces the paper's example exactly.
+    """
+    if k < 1 or k > width + 1:
+        raise ValueError(f"k must be in [1, width+1]; got k={k}, width={width}")
+    return (p.astype(jnp.int32) * k) // (width + 1)
+
+
+def num_bucket_bits(k: int) -> int:
+    """Datapath width of the bucket index: ceil(log2(k)) bits (>=1)."""
+    return max(1, (k - 1).bit_length())

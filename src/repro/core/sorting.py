@@ -1,0 +1,115 @@
+"""Comparison-free popcount sorting — ACC-PSU and APP-PSU (paper §III).
+
+The hardware unit (Fig. 1) has three stages after popcount:
+
+  1. one-hot encode each '1'-bit count (or bucket index),
+  2. frequency histogram + prefix sum  -> per-value start addresses,
+  3. index mapping: scatter element index i to address
+     ``start[key_i] + (#earlier elements with the same key)``.
+
+That is exactly a *stable counting sort*.  We implement the same dataflow in
+JAX, batched over a leading packet axis, so the software model, the Pallas
+kernel (``repro.kernels.psu``) and the RTL description share one structure.
+
+TPU adaptation note (DESIGN.md §3): the hardware scatter stage writes to an
+SRAM at computed addresses; random scatter is slow on TPU, so the permutation
+is materialised with a one-hot matmul (MXU-friendly).  Both formulations are
+provided and tested equal.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .popcount import bucket_map, popcount
+
+__all__ = [
+    "counting_sort_ranks",
+    "counting_sort_indices",
+    "acc_sort_indices",
+    "app_sort_indices",
+    "apply_order",
+    "invert_permutation",
+]
+
+
+def counting_sort_ranks(keys: jax.Array, num_buckets: int) -> jax.Array:
+    """Stable counting-sort *ranks* (the hardware 'index mapping' addresses).
+
+    Args:
+      keys: int array (..., N) with values in [0, num_buckets).
+      num_buckets: number of distinct key values (W+1 for ACC, k for APP).
+
+    Returns:
+      int32 (..., N): ``rank[i]`` = output position of input element i.
+      Stable: equal keys keep their input order.
+    """
+    keys = keys.astype(jnp.int32)
+    onehot = jax.nn.one_hot(keys, num_buckets, dtype=jnp.int32)  # (..., N, K)
+    hist = onehot.sum(axis=-2)  # (..., K)          stage: frequency histogram
+    starts = jnp.cumsum(hist, axis=-1) - hist  # exclusive prefix sum
+    within = jnp.cumsum(onehot, axis=-2) - onehot  # earlier same-key count
+    start_i = jnp.take_along_axis(
+        jnp.broadcast_to(starts[..., None, :], onehot.shape),
+        keys[..., None],
+        axis=-1,
+    )[..., 0]
+    within_i = jnp.take_along_axis(within, keys[..., None], axis=-1)[..., 0]
+    return start_i + within_i
+
+
+def invert_permutation(perm: jax.Array) -> jax.Array:
+    """Invert a (batched) permutation via one-hot matmul (TPU-friendly).
+
+    ``out[perm[i]] = i`` without random scatter: builds the one-hot matrix of
+    ``perm`` and contracts it with ``arange`` — the MXU form of the hardware
+    index-mapping SRAM write (DESIGN.md §3).
+    """
+    n = perm.shape[-1]
+    onehot = jax.nn.one_hot(perm, n, dtype=jnp.int32)  # (..., N, N)
+    idx = jnp.arange(n, dtype=jnp.int32)
+    # out[j] = sum_i onehot[i, j] * i
+    return jnp.einsum("...ij,i->...j", onehot, idx)
+
+
+def counting_sort_indices(keys: jax.Array, num_buckets: int) -> jax.Array:
+    """Stable sorted order: ``order[j]`` = input index of the j-th output.
+
+    ``order = inverse(rank)``; gathering data with ``order`` yields the
+    sorted stream the transmitting unit puts on the link.
+    """
+    return invert_permutation(counting_sort_ranks(keys, num_buckets))
+
+
+@partial(jax.jit, static_argnames=("width", "descending"))
+def acc_sort_indices(
+    values: jax.Array, width: int = 8, descending: bool = False
+) -> jax.Array:
+    """ACC-PSU: stable sort order of ``values`` (..., N) by exact popcount."""
+    keys = popcount(values, width)
+    if descending:
+        keys = width - keys
+    return counting_sort_indices(keys, width + 1)
+
+
+@partial(jax.jit, static_argnames=("width", "k", "descending"))
+def app_sort_indices(
+    values: jax.Array, width: int = 8, k: int = 4, descending: bool = False
+) -> jax.Array:
+    """APP-PSU: stable sort order by the k-bucket approximate popcount."""
+    keys = bucket_map(popcount(values, width), width, k)
+    if descending:
+        keys = (k - 1) - keys
+    return counting_sort_indices(keys, k)
+
+
+def apply_order(data: jax.Array, order: jax.Array) -> jax.Array:
+    """Permute elements along the last axis: ``out[..., j] = data[..., order[j]]``.
+
+    This is the transmitting unit's rearrangement step (paper §III-A).
+    Supports batched ``order`` matching data's leading dims.
+    """
+    return jnp.take_along_axis(data, order, axis=-1)

@@ -1,0 +1,15 @@
+# The paper's compute hot-spot IS a sorting circuit, so the kernels here are
+# the paper's contribution itself, TPU-native (DESIGN.md §3):
+#   psu.py      - popcount-sorting unit (ACC/APP), the Fig. 1 dataflow
+#   btcount.py  - bit-transition counting over flit streams (the metric)
+#   quantize.py - int8 egress quantizer for the compressed all-reduce path
+# ops.py holds the jit'd wrappers, ref.py the pure-jnp oracles.
+from .ops import bt_count, default_interpret, psu_reorder, psu_sort, quantize_egress
+
+__all__ = [
+    "psu_sort",
+    "psu_reorder",
+    "bt_count",
+    "quantize_egress",
+    "default_interpret",
+]

@@ -1,0 +1,106 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+These handle padding/trimming, static-arg plumbing and the CPU-validation
+(interpret) switch.  ``interpret`` defaults to True when no TPU is present so
+the whole framework runs (slowly but correctly) on CPU; on TPU the compiled
+kernels are used.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .btcount import bt_count_pallas
+from .psu import psu_sort_pallas
+from .quantize import quantize_egress_pallas
+
+__all__ = ["psu_sort", "psu_reorder", "bt_count", "quantize_egress", "default_interpret"]
+
+
+def default_interpret() -> bool:
+    """Interpret kernels unless running on real TPU hardware."""
+    return jax.default_backend() != "tpu"
+
+
+@partial(
+    jax.jit,
+    static_argnames=("width", "k", "descending", "block_packets", "interpret"),
+)
+def psu_sort(
+    packets: jax.Array,
+    width: int = 8,
+    k: int | None = None,
+    descending: bool = False,
+    block_packets: int = 64,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """(order, rank) of each packet by (approximate) popcount.
+
+    Accepts any (P, N) integer array; P is padded to the kernel block size
+    and trimmed on return.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    p, n = packets.shape
+    bp = min(block_packets, max(1, p))
+    pad = (-p) % bp
+    x = jnp.pad(packets.astype(jnp.int32), ((0, pad), (0, 0)))
+    order, rank = psu_sort_pallas(
+        x,
+        width=width,
+        k=k,
+        descending=descending,
+        block_packets=bp,
+        interpret=interpret,
+    )
+    return order[:p], rank[:p]
+
+
+def psu_reorder(
+    packets: jax.Array,
+    width: int = 8,
+    k: int | None = None,
+    descending: bool = False,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Packets with elements transmitted in PSU order (gather by ``order``)."""
+    order, _ = psu_sort(
+        packets, width=width, k=k, descending=descending, interpret=interpret
+    )
+    return jnp.take_along_axis(packets, order, axis=-1)
+
+
+@partial(jax.jit, static_argnames=("width", "block_rows", "interpret"))
+def bt_count(
+    stream: jax.Array,
+    width: int = 8,
+    block_rows: int = 512,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Total bit transitions of a (T, L) flit stream."""
+    if interpret is None:
+        interpret = default_interpret()
+    return bt_count_pallas(
+        stream, width=width, block_rows=block_rows, interpret=interpret
+    )
+
+
+@partial(jax.jit, static_argnames=("block", "interpret"))
+def quantize_egress(
+    x: jax.Array, block: int = 256, interpret: bool | None = None
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Blockwise int8 quantization of a flat vector (pads internally).
+
+    Returns (q, scales, padded_size) where q/scales cover the padded vector;
+    callers keep ``padded_size`` to dequantize and trim.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    m = x.shape[0]
+    pad = (-m) % block
+    xp = jnp.pad(x.astype(jnp.float32), (0, pad))
+    q, s = quantize_egress_pallas(xp, block=block, interpret=interpret)
+    return q, s, jnp.int32(m + pad)

@@ -1,0 +1,130 @@
+"""Pallas TPU kernel: the popcount-sorting unit (ACC-PSU / APP-PSU).
+
+One grid step sorts a *block of packets* resident in VMEM, reproducing the
+hardware dataflow of Fig. 1 stage-for-stage on TPU vector units
+(DESIGN.md §3):
+
+  popcount stage   -> bit-twiddling on int32 lanes (VPU), replacing the
+                      4-bit LUT + adder tree,
+  bucket encoder   -> integer multiply/divide (APP only; compiled away for
+                      ACC exactly as the paper's synthesis prunes the LUT),
+  one-hot + histogram + prefix sum -> lane cumsums over a (BP, N, K) one-hot
+                      tensor (the hardware prefix-sum stage is literally the
+                      cumsum over the bucket axis),
+  index mapping    -> rank = starts[key] + #earlier-equal, then the scatter
+                      SRAM write becomes a one-hot compare + weighted sum
+                      (MXU/VPU-friendly; no random-access writes).
+
+Block shapes: packets are (BP, N) int32 in VMEM; the (BP, N, K) and
+(BP, N, N) intermediates bound VMEM use, so BP defaults to 64 packets
+(N=64, K<=9: ~3.3 MB of int32 temporaries, well inside a v5e core's VMEM).
+On real TPU the N axis should be padded to the 128-lane boundary; the
+wrapper in ``ops.py`` does this transparently.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+__all__ = ["psu_sort_pallas"]
+
+
+def _popcount_bits(x: jax.Array, width: int) -> jax.Array:
+    """Branch-free popcount of the low ``width`` bits of int32 lanes.
+
+    SWAR bit-twiddling; valid for width <= 16 (paper uses W=8).  This is the
+    VPU replacement for the hardware 4-bit-LUT + adder tree.
+    """
+    mask = jnp.int32((1 << width) - 1)
+    v = x & mask
+    v = v - ((v >> 1) & jnp.int32(0x55555555))
+    v = (v & jnp.int32(0x33333333)) + ((v >> 2) & jnp.int32(0x33333333))
+    v = (v + (v >> 4)) & jnp.int32(0x0F0F0F0F)
+    if width > 8:
+        v = v + (v >> 8)
+    return v & jnp.int32(0x1F)
+
+
+def _psu_kernel(
+    x_ref, order_ref, rank_ref, *, width: int, k: int | None, descending: bool
+):
+    """Sort one (BP, N) block of packets by (approximate) popcount."""
+    x = x_ref[...].astype(jnp.int32)
+    bp, n = x.shape
+
+    # --- popcount stage (+ APP bucket encoder) ---
+    p = _popcount_bits(x, width)
+    if k is None:
+        key, nb = p, width + 1
+    else:
+        key, nb = (p * k) // (width + 1), k
+    if descending:
+        key = (nb - 1) - key
+
+    # --- one-hot / histogram / prefix-sum stages ---
+    iota_k = lax.broadcasted_iota(jnp.int32, (bp, n, nb), 2)
+    onehot = (key[:, :, None] == iota_k).astype(jnp.int32)  # (BP, N, K)
+    within = jnp.cumsum(onehot, axis=1) - onehot  # earlier-equal count
+    hist = onehot.sum(axis=1)  # (BP, K)
+    starts = jnp.cumsum(hist, axis=1) - hist  # exclusive prefix sum
+
+    # --- index mapping stage ---
+    rank = ((within + starts[:, None, :]) * onehot).sum(axis=2)  # (BP, N)
+
+    # scatter as one-hot compare + weighted sum: order[j] = i s.t. rank_i = j
+    iota_j = lax.broadcasted_iota(jnp.int32, (bp, n, n), 2)
+    iota_i = lax.broadcasted_iota(jnp.int32, (bp, n, n), 1)
+    sel = (rank[:, :, None] == iota_j).astype(jnp.int32)
+    order = (sel * iota_i).sum(axis=1)  # (BP, N)
+
+    order_ref[...] = order
+    rank_ref[...] = rank
+
+
+def psu_sort_pallas(
+    packets: jax.Array,
+    *,
+    width: int = 8,
+    k: int | None = None,
+    descending: bool = False,
+    block_packets: int = 64,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Sort indices for a batch of packets with the PSU kernel.
+
+    Args:
+      packets: (P, N) integer array; P must be a multiple of
+        ``block_packets`` (use the ``ops.py`` wrapper for padding).
+      width: element bit width W.
+      k: APP bucket count, or ``None`` for the exact ACC unit.
+      descending: sort high-popcount-first (paper Fig. 2 streams a
+        decreasing trend).
+      block_packets: packets per grid step (VMEM block height).
+      interpret: run the kernel body in Python (CPU validation mode).
+
+    Returns:
+      (order, rank) int32 arrays of shape (P, N).
+    """
+    p, n = packets.shape
+    if p % block_packets != 0:
+        raise ValueError(f"P={p} not a multiple of block_packets={block_packets}")
+    grid = (p // block_packets,)
+    kern = functools.partial(_psu_kernel, width=width, k=k, descending=descending)
+    out_shape = [
+        jax.ShapeDtypeStruct((p, n), jnp.int32),
+        jax.ShapeDtypeStruct((p, n), jnp.int32),
+    ]
+    spec = pl.BlockSpec((block_packets, n), lambda i: (i, 0))
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[spec],
+        out_specs=[spec, spec],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(packets.astype(jnp.int32))

@@ -1,0 +1,70 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Each function mirrors one kernel in this package with straightforward
+``jnp`` code; kernel tests sweep shapes/dtypes and ``assert_allclose``
+against these.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.popcount import bucket_map, popcount
+from repro.core.sorting import counting_sort_indices, counting_sort_ranks
+
+__all__ = ["psu_sort_ref", "bt_count_ref", "quantize_egress_ref"]
+
+
+def psu_sort_ref(
+    packets: jax.Array, width: int = 8, k: int | None = None, descending: bool = False
+) -> tuple[jax.Array, jax.Array]:
+    """Oracle for the PSU kernel.
+
+    Args:
+      packets: (P, N) integer payloads.
+      k: APP bucket count; ``None`` = exact (ACC).
+
+    Returns:
+      (order, rank): both (P, N) int32.  ``order[p, j]`` is the input index
+      transmitted j-th; ``rank[p, i]`` is the output slot of input element i.
+    """
+    keys = popcount(packets, width)
+    nb = width + 1
+    if k is not None:
+        keys = bucket_map(keys, width, k)
+        nb = k
+    if descending:
+        keys = (nb - 1) - keys
+    rank = counting_sort_ranks(keys, nb)
+    order = counting_sort_indices(keys, nb)
+    return order.astype(jnp.int32), rank.astype(jnp.int32)
+
+
+def bt_count_ref(stream: jax.Array, width: int = 8) -> jax.Array:
+    """Oracle for the BT-count kernel: total bit transitions of a flit
+    stream (T, L)."""
+    a = stream.astype(jnp.uint32)
+    flips = jnp.bitwise_xor(a[1:], a[:-1])
+    return popcount(flips, width).sum().astype(jnp.int32)
+
+
+def quantize_egress_ref(
+    x: jax.Array, block: int = 256
+) -> tuple[jax.Array, jax.Array]:
+    """Oracle for the int8 egress quantizer (gradient-compression path).
+
+    Per-block symmetric int8 quantization: x is (M,) float32, viewed as
+    (M // block, block); scale = max|x| / 127 per block.
+
+    Returns:
+      (q, scales): int8 (M,) and float32 (M // block,).
+    """
+    m = x.shape[0]
+    if m % block != 0:
+        raise ValueError(f"size {m} not divisible by block {block}")
+    xb = x.reshape(m // block, block)
+    scale = jnp.max(jnp.abs(xb), axis=1) / 127.0
+    safe = jnp.where(scale > 0, scale, 1.0)
+    q = jnp.clip(jnp.round(xb / safe[:, None]), -127, 127).astype(jnp.int8)
+    return q.reshape(m), scale

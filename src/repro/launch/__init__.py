@@ -1,0 +1,26 @@
+# Launch layer: production mesh, sharding rules, dry-run specs.
+# NOTE: repro.launch.dryrun must be imported/run as the entry point BEFORE
+# other jax use (it sets the 512-device XLA flag); import it lazily.
+from .mesh import axis_size, dp_axes, make_production_mesh, make_smoke_mesh
+from .sharding import (
+    batch_shardings,
+    cache_shardings,
+    opt_shardings,
+    param_spec,
+    params_shardings,
+)
+from .specs import DryrunCase, build_case
+
+__all__ = [
+    "make_production_mesh",
+    "make_smoke_mesh",
+    "dp_axes",
+    "axis_size",
+    "param_spec",
+    "params_shardings",
+    "opt_shardings",
+    "batch_shardings",
+    "cache_shardings",
+    "build_case",
+    "DryrunCase",
+]

@@ -1,0 +1,175 @@
+"""Dry-run case construction: abstract inputs (ShapeDtypeStruct — no
+allocation) + shardings + the function to lower, per (arch x shape).
+
+``train`` lowers the full train_step (fwd + bwd + AdamW update, donated
+buffers); ``prefill`` lowers prompt processing returning (logits, cache);
+``decode`` lowers one serve_step against a seq_len KV/SSM cache.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.configs.shapes import SHAPES, ShapeSpec
+from repro.models import decode_step, init_cache, param_shapes, prefill
+from repro.models.config import ModelConfig
+from repro.optim import AdamWConfig
+from repro.optim import init as opt_init
+from repro.train import make_train_step
+
+from .mesh import dp_axes
+from .sharding import (
+    batch_shardings,
+    cache_shardings,
+    opt_shardings,
+    params_shardings,
+    replicated,
+)
+
+ENC_FRAMES = 1500  # whisper stub frontend length (DESIGN.md §4)
+
+# Gradient-accumulation microbatches per train cell: chosen so the scanned
+# (production) lowering's peak bytes/device fits 16 GiB v5e (§Dry-run).
+TRAIN_MICROBATCHES = {
+    "gemma-7b": 4,
+    "codeqwen1.5-7b": 4,
+    "internvl2-26b": 8,
+    "qwen3-moe-30b-a3b": 4,
+}
+DEFAULT_TRAIN_MICROBATCHES = 2
+
+# Optimized per-cell profiles from the §Perf hillclimb + capacity-fix passes
+# (EXPERIMENTS.md §Perf): (cfg_overrides, mesh_shape | None, microbatches |
+# None).  Select with ``repro.launch.dryrun --profile optimized`` or
+# ``OPTIMIZED_PROFILES[(arch, shape)]``.
+_SCAN_ATTN = {"attn_impl": "chunked", "attn_chunk": 4096}
+OPTIMIZED_PROFILES: dict[tuple[str, str], tuple[dict, tuple | None, int | None]] = {
+    ("mamba2-370m", "train_4k"): ({"pure_dp": True}, None, None),  # A3 base
+    ("codeqwen1.5-7b", "prefill_32k"): (dict(_SCAN_ATTN), (32, 8), None),  # B5
+    ("internlm2-1.8b", "train_4k"): (
+        {"remat_policy": "save_block_io", "zero1": True}, (128, 2), None),  # C6
+    ("granite-moe-3b-a800m", "train_4k"): ({"zero1": True}, (32, 8), 4),
+    ("granite-moe-3b-a800m", "prefill_32k"): (dict(_SCAN_ATTN), (32, 8), None),
+    ("internvl2-26b", "train_4k"): ({"fsdp": False, "zero1": True}, None, None),
+    ("internvl2-26b", "prefill_32k"): (dict(_SCAN_ATTN), None, None),
+    ("qwen3-moe-30b-a3b", "train_4k"): ({}, None, 8),
+    ("qwen3-moe-30b-a3b", "prefill_32k"): (dict(_SCAN_ATTN), None, None),
+    ("whisper-medium", "train_4k"): ({"logits_chunk": 512}, None, 4),
+    ("qwen3-4b", "prefill_32k"): (dict(_SCAN_ATTN), None, None),
+    ("zamba2-1.2b", "prefill_32k"): (dict(_SCAN_ATTN), None, None),
+}
+
+
+def _sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+@dataclasses.dataclass
+class DryrunCase:
+    arch: str
+    shape: ShapeSpec
+    cfg: ModelConfig
+    kind: str
+    fn: Callable
+    args: tuple  # abstract arg pytrees
+    donate: tuple[int, ...]
+
+    def shardings(self, mesh) -> tuple[Any, Any]:
+        """(in_shardings, out_shardings) matching ``self.args`` / outputs."""
+        cfg = self.cfg
+        p_shapes = self.args[0]
+        mode = "train" if self.kind == "train" else "serve"
+        p_sh = params_shardings(cfg, mesh, p_shapes, mode=mode)
+        if self.kind == "train":
+            o_sh = opt_shardings(cfg, mesh, self.args[1], p_shapes)
+            b_sh = batch_shardings(cfg, mesh, self.args[2])
+            metrics_sh = {k: replicated(mesh) for k in ("loss", "grad_norm", "lr")}
+            return (p_sh, o_sh, b_sh), (p_sh, o_sh, metrics_sh)
+        if self.kind == "prefill":
+            b_sh = batch_shardings(cfg, mesh, self.args[1])
+            return (p_sh, b_sh), None  # cache/logits shardings: GSPMD-chosen
+        # decode
+        c_sh = cache_shardings(cfg, mesh, self.args[1])
+        t_sh = batch_shardings(cfg, mesh, {"tokens": self.args[2]})["tokens"]
+        dp = dp_axes(mesh)
+        b, v = self.args[2].shape[0], cfg.vocab
+        dpn = 1
+        for a in dp:
+            dpn *= mesh.shape[a]
+        lspec = P(dp if b % dpn == 0 else None, None,
+                  "model" if v % mesh.shape["model"] == 0 else None)
+        return (p_sh, c_sh, t_sh), (NamedSharding(mesh, lspec), c_sh)
+
+
+def build_case(arch: str, shape_name: str, **cfg_overrides) -> DryrunCase:
+    # Dry-run default: UNROLL layer scans.  XLA's HloCostAnalysis visits
+    # while-loop bodies once, so scanned lowerings under-report FLOPs/bytes
+    # by ~n_layers; unrolled lowerings make cost_analysis exact (the
+    # runnable-production config keeps scan_layers=True).
+    cfg_overrides.setdefault("scan_layers", False)
+    shape = SHAPES[shape_name]
+    if shape.kind != "train":
+        # serving stores weights in bf16 (production inference precision);
+        # fp32 masters exist only in the training job
+        cfg_overrides.setdefault("param_dtype", "bfloat16")
+    cfg = get_config(arch, **cfg_overrides)
+    p_shapes = param_shapes(cfg)
+    s, gb = shape.seq_len, shape.global_batch
+    fam = cfg.family
+
+    if shape.kind == "train":
+        opt_shapes = jax.eval_shape(opt_init, p_shapes)
+        batch: dict[str, jax.ShapeDtypeStruct] = {}
+        if fam in ("encdec", "audio"):
+            batch["frames"] = _sds((gb, ENC_FRAMES, cfg.d_model), cfg.dtype)
+            batch["tokens"] = _sds((gb, s), jnp.int32)
+            batch["labels"] = _sds((gb, s), jnp.int32)
+        elif fam == "vlm":
+            nf = cfg.n_frontend_tokens
+            batch["patches"] = _sds((gb, nf, cfg.d_model), cfg.dtype)
+            batch["tokens"] = _sds((gb, s - nf), jnp.int32)
+            batch["labels"] = _sds((gb, s), jnp.int32)
+        else:
+            batch["tokens"] = _sds((gb, s), jnp.int32)
+            batch["labels"] = _sds((gb, s), jnp.int32)
+        mb = TRAIN_MICROBATCHES.get(arch, DEFAULT_TRAIN_MICROBATCHES)
+        step_fn = make_train_step(cfg, AdamWConfig(total_steps=10_000), microbatches=mb)
+        return DryrunCase(
+            arch, shape, cfg, "train",
+            lambda p, o, b: step_fn(p, o, b),
+            (p_shapes, opt_shapes, batch),
+            donate=(0, 1),
+        )
+
+    if shape.kind == "prefill":
+        batch: dict[str, jax.ShapeDtypeStruct] = {}
+        if fam in ("encdec", "audio"):
+            batch["frames"] = _sds((gb, ENC_FRAMES, cfg.d_model), cfg.dtype)
+            batch["tokens"] = _sds((gb, s), jnp.int32)
+            fn = lambda p, b: prefill(p, cfg, b["tokens"], s, frames=b["frames"])
+        elif fam == "vlm":
+            nf = cfg.n_frontend_tokens
+            batch["patches"] = _sds((gb, nf, cfg.d_model), cfg.dtype)
+            batch["tokens"] = _sds((gb, s - nf), jnp.int32)
+            fn = lambda p, b: prefill(
+                p, cfg, b["tokens"], s, inputs_embeds=b["patches"]
+            )
+        else:
+            batch["tokens"] = _sds((gb, s), jnp.int32)
+            fn = lambda p, b: prefill(p, cfg, b["tokens"], s)
+        return DryrunCase(arch, shape, cfg, "prefill", fn, (p_shapes, batch), donate=())
+
+    # decode: one new token against a seq_len cache
+    enc_len = ENC_FRAMES if fam in ("encdec", "audio") else 0
+    cache_shapes = jax.eval_shape(lambda: init_cache(cfg, gb, s, enc_len=enc_len))
+    tokens = _sds((gb, 1), jnp.int32)
+    fn = lambda p, c, t: decode_step(p, cfg, c, t)
+    return DryrunCase(
+        arch, shape, cfg, "decode", fn, (p_shapes, cache_shapes, tokens), donate=(1,)
+    )

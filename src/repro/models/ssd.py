@@ -1,0 +1,217 @@
+"""Mamba-2 / SSD (state-space duality) block [arXiv:2405.21060].
+
+Implements the chunked SSD algorithm: intra-chunk terms are dense matmuls
+(MXU-friendly), inter-chunk state is carried by a short ``lax.scan`` over
+chunk boundaries — so sequence memory is O(S * Lc) instead of O(S^2) and the
+carried state is (B, H, N, P) only at chunk edges.
+
+Decode is the exact recurrence ``h = exp(dt*A) h + dt * B ⊗ x`` with a
+rolling causal-conv cache, giving O(1) state per token — which is why the
+``long_500k`` shape runs for the SSM/hybrid archs only (DESIGN.md §4).
+
+Einsum index conventions: b=batch, c=chunk, l/m=position-in-chunk, h=head,
+n=state dim, p=head dim.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .config import ModelConfig
+from .layers import dense_init, rms_norm
+
+Params = Dict[str, Any]
+
+
+def ssm_dims(cfg: ModelConfig) -> tuple[int, int, int, int, int]:
+    """(d_inner, n_heads, head_dim, n_groups, d_state)."""
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    if d_inner % s.head_dim:
+        raise ValueError(f"d_inner {d_inner} not divisible by head_dim {s.head_dim}")
+    return d_inner, d_inner // s.head_dim, s.head_dim, s.n_groups, s.d_state
+
+
+def init_ssd(key: jax.Array, cfg: ModelConfig) -> Params:
+    pdt = jnp.dtype(cfg.param_dtype)
+    d = cfg.d_model
+    s = cfg.ssm
+    d_inner, n_heads, _, n_groups, d_state = ssm_dims(cfg)
+    d_xbc = d_inner + 2 * n_groups * d_state
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * d_inner + 2 * n_groups * d_state + n_heads), d, pdt),
+        "conv_w": dense_init(ks[1], (s.d_conv, d_xbc), s.d_conv, pdt),
+        "conv_b": jnp.zeros((d_xbc,), pdt),
+        "a_log": jnp.log(jnp.arange(1, n_heads + 1, dtype=jnp.float32)).astype(pdt),
+        "dt_bias": jnp.zeros((n_heads,), pdt),
+        "d_skip": jnp.ones((n_heads,), pdt),
+        "norm_w": jnp.ones((d_inner,), pdt),
+        "out_proj": dense_init(ks[3], (d_inner, d), d_inner, pdt),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over time.  x: (B, S, C); w: (K, C)."""
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(k):  # K is tiny (4): unrolled taps fuse into one kernel
+        out = out + pad[:, i : i + x.shape[1], :] * w[i][None, None, :]
+    return out + b[None, None, :]
+
+
+def _split_xbc(xbc: jax.Array, cfg: ModelConfig):
+    d_inner, n_heads, hd, n_groups, d_state = ssm_dims(cfg)
+    x = xbc[..., :d_inner]
+    bmat = xbc[..., d_inner : d_inner + n_groups * d_state]
+    cmat = xbc[..., d_inner + n_groups * d_state :]
+    bsz, s = x.shape[:2]
+    x = x.reshape(bsz, s, n_heads, hd)
+    rep = n_heads // n_groups
+    bmat = jnp.repeat(bmat.reshape(bsz, s, n_groups, d_state), rep, axis=2)
+    cmat = jnp.repeat(cmat.reshape(bsz, s, n_groups, d_state), rep, axis=2)
+    return x, bmat, cmat
+
+
+def ssd_scan(
+    x: jax.Array,  # (B, S, H, P)
+    dt: jax.Array,  # (B, S, H)  (post-softplus)
+    a: jax.Array,  # (H,) negative decay rates
+    bmat: jax.Array,  # (B, S, H, N)
+    cmat: jax.Array,  # (B, S, H, N)
+    chunk: int,
+    h0: jax.Array | None = None,  # (B, H, N, P) initial state
+    unroll: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Chunked SSD: returns (y (B,S,H,P), final_state (B,H,N,P))."""
+    bsz, s, h, p = x.shape
+    n = bmat.shape[-1]
+    lc = min(chunk, s)
+    if s % lc:
+        raise ValueError(f"seq {s} not divisible by chunk {lc}")
+    nc = s // lc
+    xf = x.astype(jnp.float32).reshape(bsz, nc, lc, h, p)
+    dtf = dt.astype(jnp.float32).reshape(bsz, nc, lc, h)
+    bf = bmat.astype(jnp.float32).reshape(bsz, nc, lc, h, n)
+    cf = cmat.astype(jnp.float32).reshape(bsz, nc, lc, h, n)
+
+    da = dtf * a[None, None, None, :]  # log-decay per step
+    cum = jnp.cumsum(da, axis=2)  # (B, C, L, H)
+    # intra-chunk: M[l,m] = (C_l . B_m) * exp(cum_l - cum_m) * dt_m  (l >= m)
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,C,L,M,H)
+    tril = jnp.tril(jnp.ones((lc, lc), bool))
+    seg = jnp.where(tril[None, None, :, :, None], seg, -jnp.inf)
+    mmat = jnp.einsum("bclhn,bcmhn->bclmh", cf, bf) * jnp.exp(seg) * dtf[:, :, None, :, :]
+    y_intra = jnp.einsum("bclmh,bcmhp->bclhp", mmat, xf)
+
+    # chunk states: S_c = sum_m exp(cum_last - cum_m) dt_m B_m (x) x_m
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)  # (B,C,L,H)
+    s_c = jnp.einsum("bclh,bclhn,bclhp->bchnp", decay_to_end * dtf, bf, xf)
+    t_c = jnp.exp(cum[:, :, -1, :])  # (B, C, H) total chunk decay
+
+    def step(hprev, inputs):
+        sc, tc = inputs  # (B,H,N,P), (B,H)
+        hnew = hprev * tc[..., None, None] + sc
+        return hnew, hprev
+
+    hinit = (
+        jnp.zeros((bsz, h, n, p), jnp.float32)
+        if h0 is None
+        else h0.astype(jnp.float32)
+    )
+    hlast, hprevs = lax.scan(
+        step,
+        hinit,
+        (jnp.moveaxis(s_c, 1, 0), jnp.moveaxis(t_c, 1, 0)),
+        unroll=unroll,
+    )
+    hprevs = jnp.moveaxis(hprevs, 0, 1)  # (B, C, H, N, P) state entering chunk
+    y_inter = jnp.einsum("bclhn,bchnp->bclhp", cf * jnp.exp(cum)[..., None], hprevs)
+    y = (y_intra + y_inter).reshape(bsz, s, h, p)
+    return y.astype(x.dtype), hlast
+
+
+def ssd_block(
+    params: Params, x: jax.Array, cfg: ModelConfig, return_cache: bool = False
+):
+    """Full-sequence Mamba-2 block (training / prefill).  x: (B, S, d).
+
+    With ``return_cache`` also returns the decode cache (final SSM state +
+    causal-conv tail) so prefill can hand off to ``ssd_decode``.
+    """
+    dt_ = x.dtype
+    d_inner, n_heads, hd, n_groups, d_state = ssm_dims(cfg)
+    proj = x @ params["in_proj"].astype(dt_)
+    z = proj[..., :d_inner]
+    xbc_raw = proj[..., d_inner : -n_heads]
+    dt_raw = proj[..., -n_heads:]
+    xbc = jax.nn.silu(
+        _causal_conv(xbc_raw, params["conv_w"].astype(dt_), params["conv_b"].astype(dt_))
+    )
+    xs, bmat, cmat = _split_xbc(xbc, cfg)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+    y, hlast = ssd_scan(
+        xs, dt, a, bmat, cmat, cfg.ssm.chunk, unroll=not cfg.scan_layers
+    )
+    y = y + xs * params["d_skip"].astype(dt_)[None, None, :, None]
+    y = y.reshape(*x.shape[:2], d_inner)
+    y = rms_norm(y * jax.nn.silu(z), params["norm_w"], cfg.rms_eps)
+    out = y @ params["out_proj"].astype(dt_)
+    if not return_cache:
+        return out
+    k = cfg.ssm.d_conv - 1
+    # cache layout matches init_ssd_cache: state (B, H, N, P), conv tail raw
+    cache = {"state": hlast, "conv": xbc_raw[:, -k:, :].astype(dt_)}
+    return out, cache
+
+
+def init_ssd_cache(cfg: ModelConfig, batch: int, dtype) -> Params:
+    d_inner, n_heads, hd, n_groups, d_state = ssm_dims(cfg)
+    d_xbc = d_inner + 2 * n_groups * d_state
+    return {
+        "state": jnp.zeros((batch, n_heads, d_state, hd), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm.d_conv - 1, d_xbc), dtype),
+    }
+
+
+def ssd_decode(
+    params: Params, x: jax.Array, cache: Params, cfg: ModelConfig
+) -> tuple[jax.Array, Params]:
+    """Single-token decode.  x: (B, 1, d); O(1) state update."""
+    dt_ = x.dtype
+    d_inner, n_heads, hd, n_groups, d_state = ssm_dims(cfg)
+    proj = x @ params["in_proj"].astype(dt_)
+    z = proj[..., :d_inner]
+    xbc = proj[..., d_inner : -n_heads]
+    dt_raw = proj[..., -n_heads:]
+
+    # rolling causal-conv cache: window = [conv_cache, xbc_t]
+    win = jnp.concatenate([cache["conv"], xbc], axis=1)  # (B, K, d_xbc)
+    w = params["conv_w"].astype(dt_)
+    conv_out = jnp.einsum("bkc,kc->bc", win, w) + params["conv_b"].astype(dt_)
+    xbc_t = jax.nn.silu(conv_out)[:, None, :]
+    new_conv = win[:, 1:, :]
+
+    xs, bmat, cmat = _split_xbc(xbc_t, cfg)  # (B,1,H,P), (B,1,H,N)
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32)
+    )[:, 0]  # (B,H)
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+    decay = jnp.exp(dt * a[None, :])  # (B,H)
+    xs32 = xs.astype(jnp.float32)[:, 0]
+    b32 = bmat.astype(jnp.float32)[:, 0]
+    c32 = cmat.astype(jnp.float32)[:, 0]
+    state = cache["state"] * decay[..., None, None] + jnp.einsum(
+        "bh,bhn,bhp->bhnp", dt, b32, xs32
+    )
+    y = jnp.einsum("bhn,bhnp->bhp", c32, state).astype(dt_)
+    y = y + xs[:, 0] * params["d_skip"].astype(dt_)[None, :, None]
+    y = y.reshape(x.shape[0], 1, d_inner)
+    y = rms_norm(y * jax.nn.silu(z), params["norm_w"], cfg.rms_eps)
+    return y @ params["out_proj"].astype(dt_), {"state": state, "conv": new_conv}

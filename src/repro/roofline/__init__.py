@@ -1,0 +1,23 @@
+from .analysis import (
+    HBM_BW,
+    ICI_BW,
+    PEAK_FLOPS,
+    RooflineTerms,
+    analyse,
+    model_flops_global,
+    wire_bytes_per_device,
+)
+from .collect import collect_from_compiled, parse_collectives, summarize_collectives
+
+__all__ = [
+    "PEAK_FLOPS",
+    "HBM_BW",
+    "ICI_BW",
+    "RooflineTerms",
+    "analyse",
+    "wire_bytes_per_device",
+    "model_flops_global",
+    "collect_from_compiled",
+    "parse_collectives",
+    "summarize_collectives",
+]

@@ -1,0 +1,161 @@
+"""Three-term roofline from dry-run records (EXPERIMENTS.md §Roofline).
+
+    compute    = HLO_FLOPs_per_device / peak_FLOPs        [s]
+    memory     = HLO_bytes_per_device / HBM_bw            [s]
+    collective = wire_bytes_per_device / ICI_link_bw      [s]
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI (assignment-provided).
+
+Wire factors per collective kind (ring algorithms, group size n):
+    all-reduce         2 (n-1)/n   x result bytes
+    all-gather           (n-1)/n   x result bytes
+    reduce-scatter       (n-1)     x result bytes (result is the shard)
+    all-to-all           (n-1)/n   x result bytes
+    collective-permute   1         x result bytes
+
+MODEL_FLOPS: 6·N·D train (2 fwd + 4 bwd), 2·N·D prefill, 2·N_active·B
+decode — per device after dividing by chip count.  The ratio
+MODEL_FLOPS / HLO_FLOPs exposes remat/dispatch/redundancy waste.
+
+Link-energy column (the paper's metric on ICI traffic): wire bytes ->
+128-bit flits -> BT x per-transition energy, with the measured ordering
+reduction factor applied (repro.traffic) — see EXPERIMENTS.md §Arch-BT.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s
+ICI_BW = 50e9  # bytes/s/link
+
+_WIRE_FACTOR = {
+    "all-reduce": lambda n: 2.0 * (n - 1) / n,
+    "all-gather": lambda n: (n - 1) / n,
+    "reduce-scatter": lambda n: float(n - 1),
+    "all-to-all": lambda n: (n - 1) / n,
+    "collective-permute": lambda n: 1.0,
+}
+
+
+def wire_bytes_per_device(rec: dict[str, Any]) -> float:
+    if "wire_bytes_per_device" in rec:
+        return float(rec["wire_bytes_per_device"])
+    total = 0.0
+    for op in rec.get("collective_ops", []):
+        n = op.get("group") or 2
+        n = max(n, 2)
+        total += _WIRE_FACTOR[op["kind"]](n) * op["bytes"] * op.get("trip", 1)
+    return total
+
+
+def _attention_flops(rec: dict[str, Any], seq_len: int, global_batch: int) -> float:
+    """Attention (QK^T + PV) FLOPs — part of useful MODEL_FLOPS.
+
+    Dense/MoE/VLM: causal full attention over seq_len.  SSM archs: the SSD
+    scan's state FLOPs are already ~proportional to params x tokens (no
+    quadratic term).  Hybrid: shared attention every k layers.
+    """
+    from repro.configs import get_config
+
+    cfg = get_config(rec["arch"])
+    hd = cfg.resolved_head_dim
+    d_attn = cfg.n_heads * hd
+    if cfg.family == "ssm":
+        return 0.0
+    if cfg.family == "hybrid":
+        n_attn_layers = cfg.n_layers // cfg.shared_attn_every
+    else:
+        n_attn_layers = cfg.n_layers
+    mult = 3.0 if rec["kind"] == "train" else 1.0  # fwd+bwd vs fwd
+    if cfg.family in ("encdec", "audio"):
+        enc_len = 1500  # whisper stub frontend (launch/specs.ENC_FRAMES)
+        if rec["kind"] == "decode":
+            per_tok = 4.0 * cfg.n_layers * (seq_len + enc_len) * d_attn
+            return global_batch * per_tok
+        # encoder bidirectional S_enc^2 + decoder causal S^2/2 + cross S*S_enc
+        fwd = 4.0 * global_batch * d_attn * (
+            cfg.n_enc_layers * enc_len**2
+            + cfg.n_layers * (seq_len**2 / 2 + seq_len * enc_len)
+        )
+        return mult * fwd
+    if rec["kind"] == "decode":
+        # each new token attends the full cache
+        return 4.0 * global_batch * n_attn_layers * seq_len * d_attn
+    # causal: 4*S^2/2 = 2 S^2 per layer (QK + PV) forward
+    return mult * 2.0 * global_batch * n_attn_layers * seq_len**2 * d_attn
+
+
+def model_flops_global(rec: dict[str, Any], seq_len: int, global_batch: int) -> float:
+    n_active = rec["active_params"]
+    attn = _attention_flops(rec, seq_len, global_batch)
+    if rec["kind"] == "train":
+        return 6.0 * n_active * seq_len * global_batch + attn
+    if rec["kind"] == "prefill":
+        return 2.0 * n_active * seq_len * global_batch + attn
+    return 2.0 * n_active * global_batch + attn  # decode: one token/sequence
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    kind: str
+    compute_s: float
+    memory_hlo_s: float  # XLA bytes-accessed / HBM: UPPER bound (CPU-backend
+    #                      compiles fuse less than TPU; see report caveats)
+    memory_floor_s: float  # resident bytes (TPU-adjusted peak) / HBM: every
+    #                        live byte crosses HBM at least once per step
+    collective_s: float
+    model_flops_per_device: float
+    hlo_flops_per_device: float
+    useful_ratio: float
+
+    @property
+    def dominant(self) -> str:
+        """Dominant term, using the memory FLOOR (the defensible bound)."""
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_floor_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_floor_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the binding roofline that useful model FLOPs occupy:
+        (model_flops/peak) / max(term) — 1.0 means the dominant resource is
+        spent entirely on useful compute."""
+        if self.bound_s <= 0:
+            return 0.0
+        return (self.model_flops_per_device / PEAK_FLOPS) / self.bound_s
+
+
+def analyse(rec: dict[str, Any], seq_len: int, global_batch: int) -> RooflineTerms:
+    chips = rec["num_devices"]
+    mf = model_flops_global(rec, seq_len, global_batch) / chips
+    hf = rec["hlo_flops_per_device"]
+    floor_bytes = rec.get(
+        "tpu_peak_bytes_per_device", rec.get("peak_bytes_per_device", 0)
+    )
+    return RooflineTerms(
+        arch=rec["arch"],
+        shape=rec["shape"],
+        mesh=rec["mesh"],
+        kind=rec["kind"],
+        compute_s=hf / PEAK_FLOPS,
+        memory_hlo_s=rec["hlo_bytes_per_device"] / HBM_BW,
+        memory_floor_s=floor_bytes / HBM_BW,
+        collective_s=wire_bytes_per_device(rec) / ICI_BW,
+        model_flops_per_device=mf,
+        hlo_flops_per_device=hf,
+        useful_ratio=mf / hf if hf else 0.0,
+    )

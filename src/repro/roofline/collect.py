@@ -1,0 +1,241 @@
+"""Extract roofline inputs from a compiled (dry-run) executable.
+
+``cost_analysis`` provides HLO FLOPs and bytes for the per-device SPMD
+module; collective traffic is NOT in cost_analysis, so we parse the
+post-partitioning HLO text and sum result bytes of every collective op,
+keeping the op kind and replica-group size so the analysis layer can apply
+wire factors (ring all-reduce moves ~2x its payload, etc.).
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[\d+\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_COMP_HEAD_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\([^)]*\)\s*->")
+_WHILE_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_WHILE_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_CALL_RE = re.compile(r"(?:call|fusion)\(.*?to_apply=%?([\w.\-]+)")
+_COND_RE = re.compile(r"conditional\(.*?branch_computations=\{([^}]*)\}")
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _split_computations(hlo_text: str) -> dict[str, list[str]]:
+    """Map computation name -> its instruction lines.  ENTRY is ''-prefixed
+    with its real name; we also record which computation is the entry."""
+    comps: dict[str, list[str]] = {}
+    current = None
+    for line in hlo_text.splitlines():
+        if not line.startswith(" ") and ("->" in line) and ("{" in line):
+            m = _COMP_HEAD_RE.match(line.strip())
+            if m:
+                current = m.group(1)
+                comps.setdefault(current, [])
+                if line.lstrip().startswith("ENTRY"):
+                    comps["__entry__"] = comps[current]
+                continue
+        if current is not None:
+            if line.strip() == "}":
+                current = None
+            else:
+                comps[current].append(line.strip())
+    return comps
+
+
+def _line_collective(stripped: str) -> dict[str, Any] | None:
+    if "=" not in stripped:
+        return None
+    for kind in _COLLECTIVES:
+        if f" {kind}(" in stripped or f" {kind}-start(" in stripped:
+            lhs = (
+                stripped.split(f"{kind}-start(")[0]
+                if f" {kind}-start(" in stripped
+                else stripped.split(f"{kind}(")[0]
+            )
+            try:
+                type_part = lhs.split("=", 1)[1]
+            except IndexError:
+                return None
+            group = None
+            m = _GROUPS_IOTA_RE.search(stripped)
+            if m:
+                group = int(m.group(2))
+            else:
+                m = _GROUPS_LIST_RE.search(stripped)
+                if m:
+                    group = len([x for x in m.group(1).split(",") if x.strip()])
+            return {"kind": kind, "bytes": _shape_bytes(type_part), "group": group}
+    return None
+
+
+def parse_collectives(hlo_text: str) -> list[dict[str, Any]]:
+    """Collective records with DYNAMIC execution counts.
+
+    Scan-over-layers / microbatching lower to HLO while-loops whose bodies
+    contain each collective once; we walk the call graph from ENTRY and
+    multiply by loop trip counts (largest s32 constant in the loop condition
+    — the standard counted-loop pattern jax emits).  Each returned record
+    carries ``trip`` = number of dynamic executions.
+    """
+    comps = _split_computations(hlo_text)
+    entry_lines = comps.get("__entry__")
+    if entry_lines is None:
+        # fallback: flat static scan
+        out = []
+        for line in hlo_text.splitlines():
+            rec = _line_collective(line.strip())
+            if rec:
+                rec["trip"] = 1
+                out.append(rec)
+        return out
+
+    def trip_count(cond_name: str) -> int:
+        consts = [int(c) for c in _CONST_RE.findall("\n".join(comps.get(cond_name, [])))]
+        return max(consts) if consts else 1
+
+    out: list[dict[str, Any]] = []
+    seen: set[tuple[str, int]] = set()
+
+    def walk(comp_name: str, mult: int) -> None:
+        key = (comp_name, mult)
+        if key in seen:  # guard cycles; computations are DAGs in practice
+            return
+        seen.add(key)
+        for line in comps.get(comp_name, []):
+            rec = _line_collective(line)
+            if rec:
+                rec = dict(rec)
+                rec["trip"] = mult
+                out.append(rec)
+            if " while(" in line:
+                mc = _WHILE_COND_RE.search(line)
+                mb = _WHILE_BODY_RE.search(line)
+                if mc and mb:
+                    walk(mb.group(1), mult * trip_count(mc.group(1)))
+                continue
+            m = _CALL_RE.search(line)
+            if m:
+                walk(m.group(1), mult)
+            m = _COND_RE.search(line)
+            if m:
+                for branch in m.group(1).split(","):
+                    walk(branch.strip().lstrip("%"), mult)
+
+    entry_name = next(k for k, v in comps.items() if v is entry_lines and k != "__entry__")
+    walk(entry_name, 1)
+    return out
+
+
+def summarize_collectives(records: list[dict]) -> dict[str, dict]:
+    summary: dict[str, dict] = {}
+    for r in records:
+        trip = r.get("trip", 1)
+        s = summary.setdefault(r["kind"], {"count": 0, "bytes": 0})
+        s["count"] += trip
+        s["bytes"] += r["bytes"] * trip
+    return summary
+
+
+_WIRE_FACTOR = {
+    "all-reduce": lambda n: 2.0 * (n - 1) / n,
+    "all-gather": lambda n: (n - 1) / n,
+    "reduce-scatter": lambda n: float(n - 1),
+    "all-to-all": lambda n: (n - 1) / n,
+    "collective-permute": lambda n: 1.0,
+}
+
+
+def wire_bytes(collective_ops: list[dict]) -> float:
+    """Ring-algorithm wire bytes per device (factors above, trips applied)."""
+    total = 0.0
+    for op in collective_ops:
+        n = max(op.get("group") or 2, 2)
+        total += _WIRE_FACTOR[op["kind"]](n) * op["bytes"] * op.get("trip", 1)
+    return total
+
+
+_UPCAST_HDR_RE = re.compile(
+    r"\(param[\w.]*: bf16\[([0-9,]*)\]\) -> f32\[\1\]"
+)
+_UPCAST_LINE_RE = re.compile(r"= f32(\[[0-9,]+\])[^=]*? convert\(")
+
+
+def cpu_bf16_upcast_bytes(hlo_text: str, min_bytes: int = 1 << 26) -> int:
+    """Bytes of loop-invariant bf16->f32 whole-array converts.
+
+    XLA:CPU has no native bf16 compute, so it materialises f32 copies of
+    bf16 weight stacks / KV caches (hoisted out of the layer loop).  These
+    buffers do NOT exist on the TPU target; we measure them so the dry-run
+    can report a TPU-adjusted peak (EXPERIMENTS.md §Dry-run caveats).
+    """
+    total = 0
+    for m in _UPCAST_HDR_RE.finditer(hlo_text):
+        dims = m.group(1)
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        if n * 4 >= min_bytes:
+            total += n * 4
+    return total
+
+
+def collect_from_compiled(
+    *, arch: str, shape: str, kind: str, mesh_desc: str, num_devices: int,
+    compiled, cfg,
+) -> dict[str, Any]:
+    cost = compiled.cost_analysis() or {}
+    if isinstance(cost, list):  # older jax returns [dict]
+        cost = cost[0] if cost else {}
+    hlo = compiled.as_text()
+    colls = parse_collectives(hlo)
+    mem = compiled.memory_analysis()
+    mem_rec = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes"):
+        v = getattr(mem, attr, None)
+        if v is not None:
+            mem_rec[attr] = int(v)
+
+    return {
+        "arch": arch,
+        "shape": shape,
+        "kind": kind,
+        "mesh": mesh_desc,
+        "num_devices": num_devices,
+        "hlo_flops_per_device": float(cost.get("flops", 0.0)),
+        "hlo_bytes_per_device": float(cost.get("bytes accessed", 0.0)),
+        "collectives": summarize_collectives(colls),
+        "collective_ops": colls,
+        "wire_bytes_per_device": wire_bytes(colls),
+        "memory": mem_rec,
+        "params": int(cfg.param_count()),
+        "active_params": int(cfg.active_param_count()),
+    }

@@ -1,0 +1,70 @@
+"""int8 KV-cache quantization for decode (beyond-paper link-traffic lever).
+
+The decode-time KV cache is the second-largest HBM stream after weights
+(§Roofline: decode cells are memory-dominant).  Symmetric per-(batch, head)
+int8 storage halves-to-quarters the cache footprint and its HBM traffic;
+combined with sign-magnitude recoding (repro.traffic) the modeled BT of the
+cache stream drops further — the paper's metric applied to the cache bus.
+
+Layout: q_k/q_v int8 with fp32 scales of shape (L, B, H_kv); scales are
+per-(layer, batch, head) amax / 127 maintained with a running max so decode
+appends never rescale history (monotone amax => earlier entries stay exact).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+def quantize_kv(k: jax.Array, scale: jax.Array) -> jax.Array:
+    """k: (..., S, Hkv, D) bf16/f32; scale: broadcastable (..., 1, Hkv, 1)."""
+    safe = jnp.maximum(scale, 1e-8)
+    return jnp.clip(jnp.round(k.astype(jnp.float32) / safe), -127, 127).astype(
+        jnp.int8
+    )
+
+
+def dequantize_kv(q: jax.Array, scale: jax.Array, dtype) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def quantize_cache(cache: Params) -> Params:
+    """Convert a populated bf16 cache (from ``prefill``) to int8 storage."""
+    out: Params = {k: v for k, v in cache.items() if k not in ("k", "v")}
+    for name in ("k", "v"):
+        if name not in cache:
+            return cache  # SSM-only cache: nothing to quantize
+        t = cache[name]  # (L, B, S, Hkv, D)
+        amax = jnp.max(jnp.abs(t.astype(jnp.float32)), axis=(2, 4), keepdims=True)
+        scale = amax / 127.0
+        out[f"{name}_q"] = quantize_kv(t, scale)
+        out[f"{name}_scale"] = scale[:, :, 0, :, 0]  # (L, B, Hkv)
+    out["quantized"] = jnp.bool_(True)
+    return out
+
+
+def dequantize_cache(cache: Params, dtype=jnp.bfloat16) -> Params:
+    """Materialise the bf16 view expected by ``decode_step``."""
+    if "k_q" not in cache:
+        return cache
+    out: Params = {
+        k: v
+        for k, v in cache.items()
+        if k not in ("k_q", "v_q", "k_scale", "v_scale", "quantized")
+    }
+    for name in ("k", "v"):
+        scale = cache[f"{name}_scale"][:, :, None, :, None]
+        out[name] = dequantize_kv(cache[f"{name}_q"], scale, dtype)
+    return out
+
+
+def cache_bytes(cache: Params) -> int:
+    """Storage bytes of a cache pytree (for the traffic/footprint reports)."""
+    return sum(
+        leaf.size * leaf.dtype.itemsize for leaf in jax.tree.leaves(cache)
+    )

@@ -1,0 +1,266 @@
+"""Popcount-ordering applied to real model traffic — the paper's technique
+as a first-class framework feature (DESIGN.md §3.3).
+
+Three integration points, all exploiting order-insensitive accumulation:
+
+  1. **Contraction-axis weight permutation** (`apply_mlp_ordering`,
+     `apply_head_ordering`): for ``y = act(x @ Wg, x @ Wu) @ Wd`` the d_ff
+     axis order is free — permuting Wg/Wu columns together with Wd rows is a
+     numeric no-op (up to fp addition order).  We order d_ff rows by the
+     popcount bucket of their int8-quantized bytes so the *weight stream*
+     (HBM -> VMEM during decode; the dominant decode traffic) has monotone
+     Hamming weight — the TPU analogue of the paper's link ordering.
+     Attention heads are permuted analogously (KV-head groups move with
+     their q-head blocks and output rows).
+
+  2. **Gradient egress permutation** (`egress_permutation`): a static
+     permutation of the int8 gradient wire image, derived from the weight
+     bytes so it is identical on every replica (value-dependent per-step
+     sorting would desynchronise the reduction — recorded as an adaptation
+     from the paper's per-packet sorting, DESIGN.md §8).
+
+  3. **BT accounting** (`stream_bt_report`): models any tensor as a 128-bit
+     flit stream and measures bit transitions before/after ordering with the
+     Pallas BT kernel — this is what feeds the link-energy column of the
+     roofline report.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.popcount import popcount
+from repro.core.sorting import counting_sort_indices
+from repro.kernels import bt_count
+from repro.models.config import ModelConfig
+
+Strategy = Literal["none", "acc", "app"]
+
+
+# --------------------------------------------------------------------------
+# int8 views and popcount keys
+# --------------------------------------------------------------------------
+
+
+def int8_view(w: jax.Array) -> jax.Array:
+    """Symmetric per-tensor int8 quantization of a weight tensor (the wire /
+    HBM-stream image used for BT accounting and ordering keys)."""
+    amax = jnp.max(jnp.abs(w.astype(jnp.float32)))
+    scale = jnp.maximum(amax / 127.0, 1e-12)
+    return jnp.clip(jnp.round(w.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+
+
+def to_sign_magnitude(q_int8: jax.Array) -> jax.Array:
+    """Recode two's-complement int8 as sign-magnitude bytes.
+
+    Beyond-paper optimization (EXPERIMENTS.md §Arch-BT): two's complement
+    decorrelates popcount from magnitude (-1 = 0xFF has popcount 8), which
+    both halves the ordering signal and inflates baseline BT.  Sign-magnitude
+    makes popcount monotone in |value| — near-zero weights become near-zero
+    bytes — cutting weight-stream BT by ~50 % *before* any ordering.  In
+    hardware this is one XOR per bit at the link interface.
+    """
+    q = q_int8.astype(jnp.int16)
+    sign = (q < 0).astype(jnp.uint8) << 7
+    return (sign | jnp.abs(q).astype(jnp.uint8)).astype(jnp.uint8)
+
+
+def row_bucket_keys(
+    rows_int8: jax.Array, strategy: Strategy, k: int = 4
+) -> jax.Array:
+    """Bucket key per row of an (R, B) int8 matrix.
+
+    Row key = total '1'-bit count of the row's bytes, mapped to buckets the
+    same way the paper maps element popcounts: ACC keeps the exact count
+    quantised to W+1=9 levels (matching the element-granularity datapath),
+    APP coarsens to k buckets.
+    """
+    bits = popcount(rows_int8.astype(jnp.uint8), 8).sum(axis=-1)  # (R,)
+    nbytes = rows_int8.shape[-1]
+    max_bits = 8 * nbytes
+    levels = 9 if strategy == "acc" else k
+    return (bits * levels) // (max_bits + 1)
+
+
+def row_order(rows_int8: jax.Array, strategy: Strategy, k: int = 4) -> jax.Array:
+    """Stable comparison-free sort order of rows by popcount bucket."""
+    if strategy == "none":
+        return jnp.arange(rows_int8.shape[0], dtype=jnp.int32)
+    levels = 9 if strategy == "acc" else k
+    keys = row_bucket_keys(rows_int8, strategy, k)
+    return counting_sort_indices(keys, levels)
+
+
+# --------------------------------------------------------------------------
+# contraction-axis weight permutation (numeric no-op graph rewrites)
+# --------------------------------------------------------------------------
+
+
+def mlp_permutation(mlp_params: dict, strategy: Strategy, k: int = 4) -> jax.Array:
+    """d_ff permutation keyed on the down-projection rows (streamed axis)."""
+    down = mlp_params["down"]  # (ff, d)
+    return row_order(int8_view(down), strategy, k)
+
+
+def apply_mlp_ordering(
+    mlp_params: dict, perm: jax.Array
+) -> dict:
+    """Permute the d_ff axis: gate/up columns and down rows move together."""
+    out = dict(mlp_params)
+    if "gate" in out:
+        out["gate"] = out["gate"][..., perm]
+    out["up"] = out["up"][..., perm]
+    out["down"] = jnp.take(out["down"], perm, axis=-2)
+    return out
+
+
+def head_permutation(attn_params: dict, cfg: ModelConfig, strategy: Strategy, k: int = 4) -> jax.Array:
+    """KV-head-group permutation keyed on wk bytes (groups move atomically
+    so GQA head->group mapping is preserved)."""
+    wk = attn_params["wk"]  # (d, Hkv, hd)
+    hkv = wk.shape[-2]
+    rows = int8_view(wk).transpose(1, 0, 2).reshape(hkv, -1)
+    return row_order(rows, strategy, k)
+
+
+def apply_head_ordering(attn_params: dict, cfg: ModelConfig, perm: jax.Array) -> dict:
+    """Permute KV-head groups (wk/wv) and the matching q-head blocks (wq/wo)."""
+    out = dict(attn_params)
+    rep = cfg.q_rep
+    hkv = out["wk"].shape[-2]
+    out["wk"] = jnp.take(out["wk"], perm, axis=-2)
+    out["wv"] = jnp.take(out["wv"], perm, axis=-2)
+    d, h, hd = out["wq"].shape
+    wq = out["wq"].reshape(d, hkv, rep, hd)
+    out["wq"] = jnp.take(wq, perm, axis=1).reshape(d, h, hd)
+    wo = out["wo"].reshape(hkv, rep, hd, -1)
+    out["wo"] = jnp.take(wo, perm, axis=0).reshape(h, hd, -1)
+    return out
+
+
+def apply_weight_ordering(
+    params: dict, cfg: ModelConfig, strategy: Strategy = "app", k: int = 4
+) -> dict:
+    """Order every layer's MLP d_ff axis and attention KV groups.
+
+    Layer-stacked params get per-layer permutations via vmap.  Returns a new
+    params pytree; model outputs are unchanged up to fp summation order
+    (verified in tests/test_traffic.py).
+    """
+    if strategy == "none":
+        return params
+    out = dict(params)
+
+    def order_layer(lp: dict) -> dict:
+        lp = dict(lp)
+        if "mlp" in lp:
+            perm = mlp_permutation(lp["mlp"], strategy, k)
+            lp["mlp"] = apply_mlp_ordering(lp["mlp"], perm)
+        if "attn" in lp:
+            perm = head_permutation(lp["attn"], cfg, strategy, k)
+            lp["attn"] = apply_head_ordering(lp["attn"], cfg, perm)
+        return lp
+
+    for key in ("layers", "enc_layers", "trailing"):
+        if key in out and isinstance(out[key], dict) and (
+            "mlp" in out[key] or "attn" in out[key]
+        ):
+            out[key] = jax.vmap(order_layer)(out[key])
+    if "shared" in out:
+        out["shared"] = order_layer(out["shared"])
+    return out
+
+
+# --------------------------------------------------------------------------
+# gradient egress permutation (static, replica-identical)
+# --------------------------------------------------------------------------
+
+
+def egress_permutation(
+    weights_flat_int8: jax.Array, packet: int = 64, strategy: Strategy = "app", k: int = 4
+) -> tuple[np.ndarray, np.ndarray]:
+    """Static wire permutation: int8 positions grouped into ``packet``-byte
+    packets, packets ordered within by the *weight* byte popcount bucket.
+
+    Returns (perm, inv_perm) as numpy int32 (host-side, computed once).
+    """
+    m = weights_flat_int8.shape[0]
+    usable = (m // packet) * packet
+    w = np.asarray(weights_flat_int8[:usable]).reshape(-1, packet)
+    bits = np.bitwise_count(w.view(np.uint8)).astype(np.int32)
+    levels = 9 if strategy == "acc" else k
+    keys = (bits * levels) // 9
+    order = np.argsort(keys, axis=1, kind="stable")
+    base = np.arange(0, usable, packet, dtype=np.int64)[:, None]
+    perm = (base + order).reshape(-1)
+    perm = np.concatenate([perm, np.arange(usable, m, dtype=np.int64)])
+    inv = np.empty_like(perm)
+    inv[perm] = np.arange(m, dtype=np.int64)
+    return perm.astype(np.int32), inv.astype(np.int32)
+
+
+# --------------------------------------------------------------------------
+# BT accounting over modeled flit streams
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class BTStreamReport:
+    name: str
+    num_flits: int
+    bt_none: float
+    bt_ordered: float
+
+    @property
+    def reduction(self) -> float:
+        return 1.0 - self.bt_ordered / max(self.bt_none, 1e-9)
+
+
+def tensor_flit_stream(t_int8: jax.Array, lanes: int = 16) -> jax.Array:
+    """View a tensor's int8 image as a (T, lanes) flit stream (128-bit link).
+
+    Rows stream in the tensor's native last-axis-major order — for a weight
+    matrix that is exactly the HBM row stream the decode path reads.
+    """
+    flat = t_int8.reshape(-1)
+    usable = (flat.shape[0] // lanes) * lanes
+    return flat[:usable].reshape(-1, lanes)
+
+
+def stream_bt_report(
+    name: str,
+    tensor: jax.Array,
+    strategy: Strategy = "app",
+    k: int = 4,
+    row_axis: int = -2,
+    lanes: int = 16,
+    sign_magnitude: bool = False,
+    layout: Literal["row", "col"] = "row",
+) -> BTStreamReport:
+    """BT of streaming ``tensor`` before/after popcount row ordering.
+
+    ``layout="row"`` streams whole rows (the HBM-natural order; row ordering
+    only touches row-boundary flits).  ``layout="col"`` interleaves rows
+    column-major so consecutive flits carry *adjacent rows in the sorted
+    order* — the layout under which row ordering has leverage (see the
+    measured trade-off in EXPERIMENTS.md §Arch-BT).
+    """
+    t8 = int8_view(tensor)
+    mat = jnp.moveaxis(t8, row_axis, 0).reshape(t8.shape[row_axis], -1)
+    if sign_magnitude:
+        mat = to_sign_magnitude(mat)
+
+    def stream(m):
+        mm = m.T if layout == "col" else m
+        return tensor_flit_stream(mm, lanes)
+
+    base_stream = stream(mat)
+    bt0 = int(bt_count(base_stream))
+    order = row_order(mat, strategy, k)
+    bt1 = int(bt_count(stream(jnp.take(mat, order, axis=0))))
+    return BTStreamReport(name, base_stream.shape[0], bt0, bt1)

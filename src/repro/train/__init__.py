@@ -1,0 +1,10 @@
+from .loop import SimulatedPreemption, TrainLoopConfig, train
+from .step import make_loss_fn, make_train_step
+
+__all__ = [
+    "make_train_step",
+    "make_loss_fn",
+    "train",
+    "TrainLoopConfig",
+    "SimulatedPreemption",
+]

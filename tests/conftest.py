@@ -1,0 +1,15 @@
+import os
+
+# Tests must see the real (single) CPU device — the 512-device flag belongs
+# to the dry-run entry point ONLY (repro/launch/dryrun.py).
+assert "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", "")
+
+from hypothesis import HealthCheck, settings
+
+settings.register_profile(
+    "repro",
+    max_examples=25,
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow],
+)
+settings.load_profile("repro")

@@ -1,0 +1,38 @@
+"""Analytical area model: the paper's Fig. 5 anchors must hold exactly."""
+
+import pytest
+
+from repro.core import AREA_ANCHORS, bitonic_area, csn_area, psu_area
+
+
+def test_paper_anchors_exact():
+    assert psu_area(25, k=4).total == pytest.approx(AREA_ANCHORS[("app", 25)], rel=5e-3)
+    assert psu_area(49, k=4).total == pytest.approx(AREA_ANCHORS[("app", 49)], rel=5e-3)
+    assert psu_area(25).total == pytest.approx(AREA_ANCHORS[("acc", 25)], rel=5e-3)
+
+
+def test_headline_claims():
+    acc, app = psu_area(25), psu_area(25, k=4)
+    # 35.4 % overall reduction (paper abstract)
+    assert 1 - app.total / acc.total == pytest.approx(0.354, abs=0.005)
+    # 24.9 % popcount-unit and 36.7 % sorting-unit reductions (paper §IV-B.3)
+    assert 1 - app.popcount / acc.popcount == pytest.approx(0.249, abs=0.005)
+    assert 1 - app.sort / acc.sort == pytest.approx(0.367, abs=0.005)
+
+
+def test_fig5_ordering():
+    """APP < ACC < Bitonic < CSN for both kernel sizes (Fig. 5)."""
+    for n in (25, 49):
+        app, acc = psu_area(n, k=4).total, psu_area(n).total
+        bit, csn = bitonic_area(n).total, csn_area(n).total
+        assert app < acc < bit < csn
+
+
+def test_monotone_in_k_and_n():
+    areas = [psu_area(25, k=k).total for k in (2, 4, 8)]
+    assert areas == sorted(areas)
+    assert psu_area(49, k=4).total > psu_area(25, k=4).total
+
+
+def test_csn_is_80pct_more_logic():
+    assert csn_area(25).sort == pytest.approx(bitonic_area(25).sort * 1.8)

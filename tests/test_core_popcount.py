@@ -1,0 +1,64 @@
+"""Unit + property tests for the popcount stage (paper Fig. 1, stage 1)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given
+from hypothesis import strategies as st
+
+from repro.core import bucket_boundaries, bucket_map, num_bucket_bits, popcount, popcount_lut4
+
+
+def test_popcount_matches_numpy():
+    rng = np.random.default_rng(0)
+    x = rng.integers(0, 256, (4096,), dtype=np.uint8)
+    got = np.asarray(popcount(jnp.asarray(x)))
+    want = np.bitwise_count(x).astype(np.int32)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_lut4_circuit_equivalence():
+    """The 4-bit-LUT + adder formulation (hardware) == direct popcount."""
+    x = jnp.arange(256, dtype=jnp.uint8)
+    np.testing.assert_array_equal(np.asarray(popcount(x)), np.asarray(popcount_lut4(x)))
+
+
+@pytest.mark.parametrize("width", [4, 8, 12, 16])
+def test_widths(width):
+    rng = np.random.default_rng(width)
+    x = jnp.asarray(rng.integers(0, 1 << width, (512,), dtype=np.uint32))
+    got = np.asarray(popcount(x, width))
+    want = np.bitwise_count(np.asarray(x) & ((1 << width) - 1)).astype(np.int32)
+    np.testing.assert_array_equal(got, want)
+    np.testing.assert_array_equal(np.asarray(popcount_lut4(x, width)), want)
+
+
+def test_paper_bucket_mapping():
+    """W=8, k=4 must reproduce the paper's example mapping exactly:
+    {0,1,2}->B0, {3,4}->B1, {5,6}->B2, {7,8}->B3 (paper §III-B.2)."""
+    assert bucket_boundaries(8, 4) == [0, 0, 0, 1, 1, 2, 2, 3, 3]
+    p = jnp.arange(9)
+    np.testing.assert_array_equal(
+        np.asarray(bucket_map(p, 8, 4)), [0, 0, 0, 1, 1, 2, 2, 3, 3]
+    )
+
+
+def test_paper_example_sequence():
+    """Input '1'-bit counts {4,1,7,5,3,5} -> bucket indices {1,0,3,2,1,2}."""
+    p = jnp.asarray([4, 1, 7, 5, 3, 5])
+    np.testing.assert_array_equal(np.asarray(bucket_map(p)), [1, 0, 3, 2, 1, 2])
+
+
+@given(st.integers(1, 9), st.integers(0, 8))
+def test_bucket_map_properties(k, p):
+    b = int(bucket_map(jnp.int32(p), 8, k))
+    assert 0 <= b < k
+    # monotone in p
+    if p > 0:
+        assert b >= int(bucket_map(jnp.int32(p - 1), 8, k))
+
+
+def test_bucket_bits():
+    assert num_bucket_bits(4) == 2  # paper: 2-bit index for k=4
+    assert num_bucket_bits(9) == 4  # exact: ceil(log2(9))
+    assert num_bucket_bits(2) == 1

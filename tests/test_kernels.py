@@ -1,0 +1,73 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given
+from hypothesis import strategies as st
+
+from repro.kernels import bt_count, psu_reorder, psu_sort, quantize_egress
+from repro.kernels.ref import bt_count_ref, psu_sort_ref, quantize_egress_ref
+
+
+@pytest.mark.parametrize("shape", [(1, 8), (3, 25), (64, 64), (65, 49), (130, 32)])
+@pytest.mark.parametrize("k", [None, 2, 4, 8])
+def test_psu_matches_oracle(shape, k):
+    rng = np.random.default_rng(hash((shape, k)) % 2**31)
+    x = jnp.asarray(rng.integers(0, 256, shape, dtype=np.uint8))
+    o, r = psu_sort(x, k=k)
+    oref, rref = psu_sort_ref(x, k=k)
+    np.testing.assert_array_equal(np.asarray(o), np.asarray(oref))
+    np.testing.assert_array_equal(np.asarray(r), np.asarray(rref))
+
+
+@pytest.mark.parametrize("dtype", [np.uint8, np.int32])
+def test_psu_dtypes(dtype):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.integers(0, 256, (16, 16)).astype(dtype))
+    o, _ = psu_sort(x)
+    oref, _ = psu_sort_ref(x)
+    np.testing.assert_array_equal(np.asarray(o), np.asarray(oref))
+
+
+def test_psu_descending():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.integers(0, 256, (8, 32), dtype=np.uint8))
+    out = np.asarray(psu_reorder(x, descending=True))
+    p = np.bitwise_count(out).astype(np.int32)  # signed: np.diff must not wrap
+    assert all((np.diff(row) <= 0).all() for row in p)
+
+
+@given(st.integers(2, 600), st.sampled_from([8, 16, 128]))
+def test_bt_kernel_matches_oracle(t, lanes):
+    rng = np.random.default_rng(t * lanes)
+    s = jnp.asarray(rng.integers(0, 256, (t, lanes), dtype=np.uint8))
+    assert int(bt_count(s)) == int(bt_count_ref(s))
+
+
+def test_bt_kernel_block_boundaries():
+    # sizes straddling the 512-row block boundary
+    for t in (511, 512, 513, 1025):
+        rng = np.random.default_rng(t)
+        s = jnp.asarray(rng.integers(0, 256, (t, 16), dtype=np.uint8))
+        assert int(bt_count(s)) == int(bt_count_ref(s))
+
+
+@pytest.mark.parametrize("m", [256, 300, 8192, 100_000])
+def test_quantizer_matches_oracle(m):
+    rng = np.random.default_rng(m)
+    x = jnp.asarray(rng.normal(size=(m,)).astype(np.float32) * rng.lognormal(0, 2))
+    q, s, mp = quantize_egress(x)
+    qr, sr = quantize_egress_ref(jnp.pad(x, (0, int(mp) - m)))
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(qr))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-6)
+
+
+def test_quantizer_roundtrip_error_bound():
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.normal(size=(4096,)).astype(np.float32))
+    q, s, _ = quantize_egress(x)
+    deq = (q.astype(jnp.float32).reshape(-1, 256) * s[:, None]).reshape(-1)[:4096]
+    amax_per_block = np.abs(np.asarray(x).reshape(-1, 256)).max(1)
+    err = np.abs(np.asarray(deq - x)).reshape(-1, 256).max(1)
+    assert (err <= amax_per_block / 127.0 * 0.5 + 1e-7).all()

@@ -1,0 +1,91 @@
+"""MoE layer invariants: routing, capacity, padding, dropless decode."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import smoke_config
+from repro.models.moe import capacity, init_moe, moe_block
+
+KEY = jax.random.key(3)
+
+
+def _cfg(**kw):
+    return smoke_config("granite-moe-3b-a800m", dtype="float32", **kw)
+
+
+def test_padded_experts_receive_no_tokens():
+    cfg = _cfg()
+    assert cfg.moe.padded_experts > cfg.moe.num_experts
+    p = init_moe(KEY, cfg)
+    x = jax.random.normal(KEY, (2, 16, cfg.d_model))
+    # route-only check: padded expert logits must be -inf-masked
+    logits = (x.reshape(1, 32, -1) @ p["router"]).astype(jnp.float32)
+    pad = jnp.arange(cfg.moe.padded_experts) >= cfg.moe.num_experts
+    masked = jnp.where(pad[None, None], -1e30, logits)
+    probs = jax.nn.softmax(masked, axis=-1)
+    assert float(probs[..., cfg.moe.num_experts:].max()) < 1e-12
+
+
+def test_dropless_capacity_no_drops():
+    cfg = _cfg()
+    p = init_moe(KEY, cfg)
+    x = jax.random.normal(KEY, (4, 8, cfg.d_model))
+    y1, _ = moe_block(p, x, cfg, dropless=True)
+    # with dropless, scaling cf arbitrarily cannot change the output
+    cfg2 = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=99.0)
+    )
+    y2, _ = moe_block(p, x, cfg2, dropless=True)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-6)
+
+
+def test_capacity_drops_are_real():
+    """With tiny capacity some tokens must be dropped -> outputs differ from
+    the dropless result (documents the capacity/quality trade-off)."""
+    cfg = _cfg()
+    cfg_small = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=0.25)
+    )
+    p = init_moe(KEY, cfg)
+    x = jax.random.normal(KEY, (4, 16, cfg.d_model))
+    y_drop, _ = moe_block(p, x, cfg_small)
+    y_full, _ = moe_block(p, x, cfg, dropless=True)
+    assert float(jnp.max(jnp.abs(y_drop - y_full))) > 1e-6
+
+
+def test_aux_loss_positive_and_balanced_bound():
+    cfg = _cfg()
+    p = init_moe(KEY, cfg)
+    x = jax.random.normal(KEY, (8, 32, cfg.d_model))
+    _, aux = moe_block(p, x, cfg)
+    assert float(aux) > 0
+    # Switch bound: aux_weight * E * sum(me*ce) >= aux_weight (at balance ~ 1)
+    assert float(aux) < cfg.moe.router_aux_weight * cfg.moe.num_experts
+
+
+def test_capacity_formula():
+    cfg = _cfg()
+    c = capacity(cfg, 128)
+    m = cfg.moe
+    assert c == int(np.ceil(128 * m.top_k * m.capacity_factor / m.num_experts))
+
+
+def test_moe_output_is_combination_of_expert_outputs():
+    """Single token, top-k=all -> output equals weighted expert sum."""
+    cfg = _cfg()
+    m = dataclasses.replace(cfg.moe, num_experts=4, top_k=4, pad_experts_to=4,
+                            capacity_factor=4.0, group_size=4)
+    cfg = dataclasses.replace(cfg, moe=m)
+    p = init_moe(KEY, cfg)
+    x = jax.random.normal(KEY, (1, 1, cfg.d_model))
+    y, _ = moe_block(p, x, cfg, dropless=True)
+    logits = (x[0] @ p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, -1)[0]
+    want = jnp.zeros((cfg.d_model,))
+    for e in range(4):
+        h = jax.nn.silu(x[0, 0] @ p["gate"][e]) * (x[0, 0] @ p["up"][e])
+        want = want + probs[e] * (h @ p["down"][e])
+    np.testing.assert_allclose(np.asarray(y[0, 0]), np.asarray(want), rtol=2e-4, atol=1e-5)

@@ -1,0 +1,69 @@
+"""Unit tests for the sharding rules (pure functions over paths/shapes)."""
+
+from types import SimpleNamespace
+
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.launch.sharding import param_spec
+
+MESH = SimpleNamespace(shape={"data": 16, "model": 16}, axis_names=("data", "model"))
+
+
+def spec(path, shape, arch="internlm2-1.8b", mode="train"):
+    return param_spec(path, shape, get_config(arch), MESH, mode)
+
+
+def test_attention_specs():
+    # q heads divisible -> TP on heads
+    assert spec("['layers']['attn']['wq']", (24, 2048, 16, 128)) == P(None, None, "model", None)
+    # kv heads 8 < 16 -> replicate (GQA rule)
+    assert spec("['layers']['attn']['wk']", (24, 2048, 8, 128)) == P()
+    # wo row-parallel on heads
+    assert spec("['layers']['attn']['wo']", (24, 16, 128, 2048)) == P(None, "model", None, None)
+    # granite: 24 heads not divisible -> d-contraction fallback
+    assert spec("['layers']['attn']['wq']", (32, 1536, 24, 64),
+                arch="granite-moe-3b-a800m") == P(None, "model", None, None)
+
+
+def test_mlp_specs():
+    assert spec("['layers']['mlp']['gate']", (24, 2048, 8192)) == P(None, None, "model")
+    assert spec("['layers']['mlp']['down']", (24, 8192, 2048)) == P(None, "model", None)
+
+
+def test_moe_specs():
+    # qwen3-moe: 128 experts / 16 -> EP
+    assert spec("['layers']['moe']['gate']", (48, 128, 2048, 768),
+                arch="qwen3-moe-30b-a3b", mode="serve") == P(None, "model", None, None)
+    # granite: 48 padded experts / 16 = 3 -> EP over padded dim
+    assert spec("['layers']['moe']['down']", (32, 48, 512, 1536),
+                arch="granite-moe-3b-a800m") == P(None, "model", None, None)
+
+
+def test_vocab_specs():
+    # divisible vocab -> shard vocab
+    assert spec("['embed']", (92544, 2048)) == P("model", None)
+    # mamba2 vocab 50280 not divisible -> shard d instead
+    assert spec("['embed']", (50280, 1024), arch="mamba2-370m") == P(None, "model")
+
+
+def test_ssd_specs():
+    assert spec("['layers']['ssd']['in_proj']", (48, 1024, 4384),
+                arch="mamba2-370m") == P(None, "model", None)
+    assert spec("['layers']['ssd']['conv_w']", (48, 4, 2304),
+                arch="mamba2-370m") == P()
+
+
+def test_norms_replicated():
+    assert spec("['layers']['attn_norm']", (24, 2048)) == P()
+    assert spec("['final_norm']", (2048,)) == P()
+
+
+def test_fsdp_mode_adds_data_axis():
+    s = spec("['layers']['moe']['gate']", (48, 128, 2048, 768),
+             arch="qwen3-moe-30b-a3b", mode="train")
+    assert "model" in s and "data" in s  # 2D: EP x FSDP
+    # serve mode: no FSDP (weights stay TP-only for decode latency)
+    s2 = spec("['layers']['moe']['gate']", (48, 128, 2048, 768),
+              arch="qwen3-moe-30b-a3b", mode="serve")
+    assert "data" not in s2
