@@ -11,21 +11,17 @@ Streams measured per architecture (smoke-scale weights, full-scale rules):
 
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import smoke_config
 from repro.kernels import bt_count
+from repro.link import LinkSpec, TxPipeline, tensor_flit_stream
 from repro.models import init_params
-from repro.traffic import (
-    egress_permutation,
-    int8_view,
-    row_order,
-    stream_bt_report,
-    tensor_flit_stream,
-    to_sign_magnitude,
-)
+from repro.traffic import egress_permutation, int8_view, stream_bt_report
 
 ARCHS = ["internlm2-1.8b", "qwen3-moe-30b-a3b", "mamba2-370m"]
 
@@ -70,16 +66,23 @@ def run() -> list[tuple[str, float, str]]:
         ))
 
     # 3. MoE dispatch buffer ordering: activations have token-norm structure
+    #    (token rows are an unordered set -> row-bucket TX pipeline applies)
     toks = jnp.asarray(
         rng.normal(size=(256, 128)) * rng.lognormal(0, 0.8, (256, 1))
     )
-    t8 = to_sign_magnitude(int8_view(toks))
-    base = int(bt_count(tensor_flit_stream(t8)))
-    order = row_order(t8, "app")
-    ordered = int(bt_count(tensor_flit_stream(jnp.take(t8, order, axis=0))))
+    t8 = int8_view(toks)
+    dispatch_spec = LinkSpec(
+        flits_per_packet=1, input_lanes=16, weight_lanes=0,
+        key="row_bucket", encode="sign_magnitude", pack="row", k=4,
+    )
+    base = TxPipeline(
+        dataclasses.replace(dispatch_spec, key="none")
+    ).measure_rows(t8, "moe_dispatch")
+    ordered = TxPipeline(dispatch_spec).measure_rows(t8, "moe_dispatch")
     rows.append((
         "arch_bt/moe_dispatch/app", 0.0,
-        f"bt_base={base} bt_ordered={ordered} red={100 * (1 - ordered / base):.2f}%",
+        f"bt_base={base.total_bt} bt_ordered={ordered.total_bt} "
+        f"red={100 * (1 - ordered.total_bt / base.total_bt):.2f}%",
     ))
 
     # 4. gradient egress image with weight-derived static permutation

@@ -9,7 +9,7 @@ BT reductions come from the measured conv-traffic model (table1 bench).
 
 from __future__ import annotations
 
-from repro.core import LinkPowerModel
+from repro.link import LinkPowerModel
 
 from .table1_bt import _measure_separate
 from .datagen import conv_streams

@@ -1,6 +1,13 @@
 """Microbenchmarks of the Pallas kernels (interpret mode on CPU; on-TPU
 these compile to real kernels — the numbers here track algorithmic cost and
-regression, not TPU throughput)."""
+regression, not TPU throughput).
+
+Includes the fused-vs-unfused TX-pipeline comparison: the unfused path is
+the seed's three-step ordered-BT measurement (``psu_sort`` launch -> host
+gather + flit pack -> ``bt_count`` launch), the fused path is the single
+``psu_stream`` launch.  Launch counts are measured from the traced jaxpr
+(every ``pallas_call`` equation, recursively), not asserted by hand.
+"""
 
 from __future__ import annotations
 
@@ -10,7 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels import bt_count, psu_sort, quantize_egress
+from repro.kernels import bt_count, psu_sort, psu_stream, quantize_egress
 
 
 def _time(fn, *args, iters=3):
@@ -19,6 +26,56 @@ def _time(fn, *args, iters=3):
     for _ in range(iters):
         jax.block_until_ready(fn(*args))
     return (time.monotonic() - t0) / iters * 1e6
+
+
+def count_pallas_launches(fn, *args) -> int:
+    """Number of ``pallas_call`` equations in the traced jaxpr of ``fn``
+    (recursing through pjit/scan/etc. sub-jaxprs)."""
+    try:  # jaxpr types' public home since jax 0.4.33
+        from jax.extend import core as jcore
+    except ImportError:  # older releases
+        from jax import core as jcore
+
+    def walk(jaxpr) -> int:
+        n = 0
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name == "pallas_call":
+                n += 1
+            for v in eqn.params.values():
+                for sub in _subjaxprs(v):
+                    n += walk(sub)
+        return n
+
+    def _subjaxprs(v):
+        if isinstance(v, jcore.ClosedJaxpr):
+            yield v.jaxpr
+        elif isinstance(v, jcore.Jaxpr):
+            yield v
+        elif isinstance(v, (tuple, list)):
+            for item in v:
+                yield from _subjaxprs(item)
+
+    return walk(jax.make_jaxpr(fn)(*args).jaxpr)
+
+
+def _tx_unfused(x, w):
+    """The seed's ordered-BT path: sort launch, host gather + lane pack,
+    BT launch per lane half."""
+    p, n = x.shape
+    lanes = 8
+    flits = n // lanes
+    order, _ = psu_sort(x, k=4)
+    oi = jnp.take_along_axis(x, order, axis=-1)
+    ow = jnp.take_along_axis(w, order, axis=-1)
+    fi = oi.reshape(p, lanes, flits).transpose(0, 2, 1)
+    fw = ow.reshape(p, lanes, flits).transpose(0, 2, 1)
+    stream = jnp.concatenate([fi, fw], axis=-1).reshape(p * flits, 2 * lanes)
+    return bt_count(stream[:, :lanes]) + bt_count(stream[:, lanes:])
+
+
+def _tx_fused(x, w):
+    res = psu_stream(x, w, k=4)
+    return res.bt_input + res.bt_weight
 
 
 def run() -> list[tuple[str, float, str]]:
@@ -30,6 +87,27 @@ def run() -> list[tuple[str, float, str]]:
         rows.append((f"kernel/psu/P{p}xN{n}", us, f"{us / p:.2f}us/packet"))
         us = _time(lambda v: psu_sort(v, k=4)[0], x)
         rows.append((f"kernel/psu_app/P{p}xN{n}", us, f"{us / p:.2f}us/packet"))
+
+    # fused vs unfused TX pipeline (ordered-BT measurement path)
+    p, n = 1024, 64
+    x = jnp.asarray(rng.integers(0, 256, (p, n), dtype=np.uint8))
+    w = jnp.asarray(rng.integers(0, 256, (p, n), dtype=np.uint8))
+    blocks = p // 64
+    lu = count_pallas_launches(_tx_unfused, x, w)
+    lf = count_pallas_launches(_tx_fused, x, w)
+    us_u = _time(_tx_unfused, x, w)
+    us_f = _time(_tx_fused, x, w)
+    assert int(_tx_unfused(x, w)) == int(_tx_fused(x, w))  # bit-exact paths
+    rows.append((
+        f"kernel/tx_unfused/P{p}xN{n}", us_u,
+        f"pallas_launches={lu} (sort + bt per half; host gather between)",
+    ))
+    rows.append((
+        f"kernel/tx_fused/P{p}xN{n}", us_f,
+        f"pallas_launches={lf} (one launch, {blocks} grid steps = 1/block; "
+        f"wall {us_u / max(us_f, 1e-9):.2f}x vs unfused on this backend)",
+    ))
+
     s = jnp.asarray(rng.integers(0, 256, (16384, 16), dtype=np.uint8))
     us = _time(bt_count, s)
     rows.append(("kernel/bt_count/16k_flits", us, f"{16384 * 16 / us:.1f}MB/s"))

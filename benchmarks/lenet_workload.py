@@ -1,26 +1,29 @@
 """§IV-B reproduction: LeNet conv1+pool workload through the PSU platform.
 
 16 PEs compute the first convolution (6 kernels, 5x5) and 2x2 mean-pool of
-LeNet-5 on synthetic MNIST-like images.  The allocation unit runs the PSU
-kernel (Pallas, interpret mode on CPU) over each packet, the transmitting
-units permute (input, weight) pairs, and we verify the CONVOLUTION OUTPUT is
-unchanged by the reordering (order-insensitive accumulation) while link BT
-drops — the end-to-end statement of the paper.
+LeNet-5 on synthetic MNIST-like images.  The allocation unit runs the fused
+TX pipeline (``repro.link.TxPipeline``: one Pallas launch sorts, reorders,
+packs and measures each packet block), the transmitting units permute
+(input, weight) pairs, and we verify the CONVOLUTION OUTPUT is unchanged by
+the reordering (order-insensitive accumulation) while link BT drops — the
+end-to-end statement of the paper.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import time
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels import bt_count, psu_sort
+from repro.link import LinkSpec, TxPipeline
 
 from .datagen import im2col, synth_images
 
 KERNEL = 5
 N_CH = 6
+ELEMS, LANES = 64, 16  # validated Table-I framing on the input link
 
 
 def conv_pool_reference(img: np.ndarray, kernels: np.ndarray):
@@ -32,16 +35,29 @@ def conv_pool_reference(img: np.ndarray, kernels: np.ndarray):
     return pooled.mean((1, 3))
 
 
+def _pipes() -> dict[str, TxPipeline]:
+    spec = LinkSpec(
+        width_bits=8 * LANES,
+        flits_per_packet=ELEMS // LANES,
+        input_lanes=LANES,
+        weight_lanes=0,
+    )
+    return {
+        name: TxPipeline(dataclasses.replace(spec, key=name))
+        for name in ("none", "acc", "app")
+    }
+
+
 def run(n_images: int = 6) -> list[tuple[str, float, str]]:
     rng = np.random.default_rng(0)
     imgs = synth_images(n_images, seed=7)
     kernels = rng.integers(0, 256, (N_CH, KERNEL * KERNEL), dtype=np.uint8)
+    pipes = _pipes()
 
     rows = []
     total_bt = {"none": 0, "acc": 0, "app": 0}
     t_psu = 0.0
     n_packets = 0
-    ELEMS, LANES = 64, 16  # validated Table-I framing on the input link
     for img in imgs:
         patches = im2col(img, KERNEL)  # (P, 25) uint8
         w_stream = np.broadcast_to(kernels[0], patches.shape)  # channel-0 link
@@ -51,22 +67,15 @@ def run(n_images: int = 6) -> list[tuple[str, float, str]]:
         x = jnp.asarray(flat_i[: p * ELEMS].reshape(p, ELEMS))
         w = jnp.asarray(flat_w[: p * ELEMS].reshape(p, ELEMS))
         t0 = time.monotonic()
-        order_acc, _ = psu_sort(x)
-        order_app, _ = psu_sort(x, k=4)
+        res = {name: pipes[name].run(x) for name in ("acc", "app")}
         t_psu += time.monotonic() - t0
         n_packets += p
-        for name, order in (
-            ("none", None), ("acc", order_acc), ("app", order_app)
-        ):
-            if order is None:
-                oi, ow = x, w
-            else:
-                oi = jnp.take_along_axis(x, order, axis=-1)
-                ow = jnp.take_along_axis(w, order, axis=-1)
-            # lane-major packing onto the 128-bit input link
-            flits = oi.reshape(p, LANES, ELEMS // LANES).transpose(0, 2, 1)
-            total_bt[name] += int(bt_count(flits.reshape(-1, LANES)))
+        total_bt["none"] += int(pipes["none"].run(x).bt_input)
+        for name, r in res.items():
+            total_bt[name] += int(r.bt_input)
             # order-insensitivity: per-packet MAC identical (exact, ints)
+            oi = jnp.take_along_axis(x, r.order, axis=-1)
+            ow = jnp.take_along_axis(w, r.order, axis=-1)
             macs0 = (x.astype(jnp.int32) * w.astype(jnp.int32)).sum(-1)
             macs1 = (oi.astype(jnp.int32) * ow.astype(jnp.int32)).sum(-1)
             assert bool(jnp.all(macs0 == macs1))

@@ -7,6 +7,10 @@ Paper values (for reference, 100k packets of paired random data):
 We report both data models (see datagen.py): the paper's reductions are
 reproduced on the conv-traffic model; uniform iid bytes show the analytic
 ~5 % ceiling for paired framing (derivation in EXPERIMENTS.md §Table I).
+
+All measurements run through ``repro.link.TxPipeline``; ACC/APP take the
+fused single-launch kernel path, 'none'/'column_major' the staged path
+(bit-identical, see tests/test_psu_stream.py).
 """
 
 from __future__ import annotations
@@ -15,14 +19,7 @@ import time
 
 import jax.numpy as jnp
 
-from repro.core import (
-    LinkConfig,
-    app_sort_indices,
-    bt_per_flit,
-    make_order,
-    measure,
-    pack_to_flits,
-)
+from repro.link import LinkSpec, TxPipeline
 
 from .datagen import conv_streams, uniform_pairs
 
@@ -40,29 +37,40 @@ PAPER_INPUT = {"none": 31.035, "column_major": 26.004, "acc": 22.333, "app": 22.
 STRATS = ("none", "column_major", "acc", "app")
 
 
-def _measure_separate(vals, strat, lanes=16):
-    order = make_order(strat, jnp.asarray(vals), lanes=lanes)
-    v = jnp.take_along_axis(jnp.asarray(vals), order, axis=-1)
-    flits = pack_to_flits(v, lanes, "lane").reshape(-1, lanes)
-    return float(bt_per_flit(flits))
+def _input_only_spec(strat: str, elems: int, lanes: int = 16, k: int = 4) -> LinkSpec:
+    """Spec for one PE's input-side link: all lanes carry input bytes."""
+    return LinkSpec(
+        width_bits=8 * lanes,
+        flits_per_packet=elems // lanes,
+        input_lanes=lanes,
+        weight_lanes=0,
+        key=strat,
+        k=k,
+    )
+
+
+def _measure_separate(vals, strat, lanes=16, k=4):
+    x = jnp.asarray(vals)
+    pipe = TxPipeline(_input_only_spec(strat, x.shape[-1], lanes, k))
+    return pipe.measure(x).overall_bt_per_flit
 
 
 def run(packets: int = 20000) -> list[tuple[str, float, str]]:
     rows = []
 
     # --- paired uniform framing (paper's literal setup) ---
-    cfg = LinkConfig()
-    inp, wgt = uniform_pairs(packets, cfg.elems_per_packet)
+    inp, wgt = uniform_pairs(packets, LinkSpec().elems_per_packet)
     inp, wgt = jnp.asarray(inp), jnp.asarray(wgt)
     t0 = time.monotonic()
-    base = measure(inp, wgt, cfg, "none")
+    base = TxPipeline(LinkSpec(key="none")).measure(inp, wgt)
     for strat in STRATS:
-        r = measure(inp, wgt, cfg, strat)
-        red = float(r.reduction_vs(base)) * 100
+        r = TxPipeline(LinkSpec(key=strat)).measure(inp, wgt)
+        red = r.reduction_vs(base) * 100
         rows.append((
             f"table1/uniform/{strat}",
             (time.monotonic() - t0) * 1e6 / packets,
-            f"bt_per_flit={float(r.overall_bt_per_flit):.3f} red={red:.2f}% "
+            f"bt_per_flit={r.overall_bt_per_flit:.3f} red={red:.2f}% "
+            f"fused={int(r.fused)} "
             f"paper_bt={PAPER[strat][0]} paper_red={PAPER[strat][1]}%",
         ))
 
@@ -106,10 +114,7 @@ def run(packets: int = 20000) -> list[tuple[str, float, str]]:
     # beyond-paper: bucket-count sweep (pairs with the fig5 area k-sweep to
     # complete the area/BT trade-off curve the paper fixes at k=4)
     for k in (2, 4, 8):
-        order = app_sort_indices(jnp.asarray(inp), k=k)
-        v = jnp.take_along_axis(jnp.asarray(inp), order, axis=-1)
-        flits = pack_to_flits(v, 16, "lane").reshape(-1, 16)
-        bi = float(bt_per_flit(flits))
+        bi = _measure_separate(inp, "app", k=k)
         rows.append((
             f"table1/conv/k_sweep/k{k}", 0.0,
             f"input_bt={bi:.3f} input_red={100 * (1 - bi / base_i):.2f}% "

@@ -1,17 +1,21 @@
 """The paper's own workload (§IV-B): LeNet conv1 + pool through the PSU
-platform, end to end — allocation unit runs the Pallas PSU, transmitting
-units reorder (input, weight) pairs, PEs accumulate order-insensitively, and
-the link power model converts measured BT into power savings.
+platform, end to end — the allocation unit runs the fused TX pipeline
+(``repro.link.TxPipeline``, one Pallas launch per packet block), the
+transmitting units reorder (input, weight) pairs, PEs accumulate
+order-insensitively, and the link power model converts measured BT into
+power savings.
 
     PYTHONPATH=src python examples/lenet_link_power.py
 """
+
+import dataclasses
 
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.datagen import im2col, synth_images
-from repro.core import LinkPowerModel, psu_area
-from repro.kernels import bt_count, psu_sort
+from repro.core import psu_area
+from repro.link import LinkSpec, TxPipeline
 
 KERNEL, ELEMS, LANES = 5, 64, 16
 
@@ -20,7 +24,18 @@ def main() -> None:
     rng = np.random.default_rng(0)
     imgs = synth_images(8, seed=7)
     kern = rng.integers(0, 256, KERNEL * KERNEL, dtype=np.uint8)
-    model = LinkPowerModel()
+
+    spec = LinkSpec(
+        width_bits=8 * LANES,
+        flits_per_packet=ELEMS // LANES,
+        input_lanes=LANES,
+        weight_lanes=0,
+    )
+    pipes = {
+        name: TxPipeline(dataclasses.replace(spec, key=name))
+        for name in ("none", "acc", "app")
+    }
+    model = pipes["none"].power
 
     bt = {"none": 0, "acc": 0, "app": 0}
     flits_sent = 0
@@ -33,16 +48,11 @@ def main() -> None:
         p = flat_i.size // ELEMS
         x = jnp.asarray(flat_i[: p * ELEMS].reshape(p, ELEMS))
         wj = jnp.asarray(flat_w[: p * ELEMS].reshape(p, ELEMS))
-        orders = {
-            "none": None,
-            "acc": psu_sort(x)[0],
-            "app": psu_sort(x, k=4)[0],
-        }
-        for name, order in orders.items():
-            oi = x if order is None else jnp.take_along_axis(x, order, -1)
-            ow = wj if order is None else jnp.take_along_axis(wj, order, -1)
-            flits = oi.reshape(p, LANES, ELEMS // LANES).transpose(0, 2, 1)
-            bt[name] += int(bt_count(flits.reshape(-1, LANES)))
+        for name, pipe in pipes.items():
+            res = pipe.run(x)
+            bt[name] += int(res.bt_input)
+            oi = jnp.take_along_axis(x, res.order, -1)
+            ow = jnp.take_along_axis(wj, res.order, -1)
             conv_checksum[name] += int(
                 (oi.astype(jnp.int64) * ow.astype(jnp.int64)).sum()
             )

@@ -1,8 +1,9 @@
 """Quickstart: the popcount-sorting unit in 60 seconds.
 
 Runs the ACC/APP PSU (Pallas kernel) on a packet of bytes, shows the
-Fig.-2-style ordered stream, measures the link-BT saving, and prints the
-area model's Fig.-5 numbers.
+Fig.-2-style ordered stream, measures the link-BT saving with the fused
+``repro.link.TxPipeline`` (one kernel launch per packet block), and prints
+the area model's Fig.-5 numbers.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -10,8 +11,9 @@ area model's Fig.-5 numbers.
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import LinkConfig, bitonic_area, bucket_map, csn_area, measure, popcount, psu_area
+from repro.core import bitonic_area, bucket_map, csn_area, popcount, psu_area
 from repro.kernels import psu_reorder, psu_sort
+from repro.link import LinkSpec, TxPipeline
 
 
 def main() -> None:
@@ -27,16 +29,17 @@ def main() -> None:
     print("ordered stream:", [f"{int(v):02x}" for v in out[0]],
           "(popcount-bucket monotone, Fig. 2)")
 
-    # Table-I style link measurement on 2000 packets
-    cfg = LinkConfig()
-    inp = jnp.asarray(rng.integers(0, 256, (2000, cfg.elems_per_packet), np.uint8))
-    wgt = jnp.asarray(rng.integers(0, 256, (2000, cfg.elems_per_packet), np.uint8))
-    base = measure(inp, wgt, cfg, "none")
+    # Table-I style link measurement on 2000 packets, fused TX pipeline
+    spec = LinkSpec()  # paper framing: 128-bit link, 4 flits, 8+8 lanes
+    inp = jnp.asarray(rng.integers(0, 256, (2000, spec.elems_per_packet), np.uint8))
+    wgt = jnp.asarray(rng.integers(0, 256, (2000, spec.elems_per_packet), np.uint8))
+    base = TxPipeline(LinkSpec(key="none")).measure(inp, wgt)
     for strat in ("acc", "app"):
-        r = measure(inp, wgt, cfg, strat)
-        print(f"{strat.upper():4s} ordering: {float(r.overall_bt_per_flit):.2f} "
-              f"BT/flit vs {float(base.overall_bt_per_flit):.2f} "
-              f"({float(r.reduction_vs(base)) * 100:.1f} % reduction)")
+        r = TxPipeline(LinkSpec(key=strat)).measure(inp, wgt)
+        print(f"{strat.upper():4s} ordering: {r.overall_bt_per_flit:.2f} "
+              f"BT/flit vs {base.overall_bt_per_flit:.2f} "
+              f"({r.reduction_vs(base) * 100:.1f} % reduction, "
+              f"fused={r.fused})")
 
     print("\nArea model (22 nm, N=25 window — paper Fig. 5):")
     for name, a in [("Bitonic", bitonic_area(25)), ("CSN", csn_area(25)),

@@ -3,21 +3,24 @@ the serving data path.
 
 Before serving, the contraction axes of every layer are popcount-ordered
 (`apply_weight_ordering`) — a numeric no-op verified here by comparing the
-generated tokens — and the modeled HBM weight-stream BT saving is reported,
-with sign-magnitude recoding (the beyond-paper encoding win).
+generated tokens — and the modeled HBM weight-stream BT saving is reported
+via the ``repro.link`` row-stream TX pipeline, with sign-magnitude recoding
+(the beyond-paper encoding win).
 
     PYTHONPATH=src python examples/serve_decode.py
 """
 
 import argparse
+import dataclasses
 
 import jax
 import numpy as np
 
 from repro.configs import get_config, smoke_config
+from repro.link import LinkSpec, TxPipeline
 from repro.models import init_params
 from repro.serve import generate
-from repro.traffic import apply_weight_ordering, stream_bt_report
+from repro.traffic import apply_weight_ordering, int8_view
 
 
 def main() -> None:
@@ -49,13 +52,18 @@ def main() -> None:
     assert same
 
     print("\nmodeled decode weight-stream BT (per layer-0 tensor):")
-    down = params["layers"]["mlp"]["down"][0]
+    down = int8_view(params["layers"]["mlp"]["down"][0])  # (ff, d) wire image
+    spec = LinkSpec(flits_per_packet=1, input_lanes=16, weight_lanes=0,
+                    pack="col", k=4)
     for sm in (False, True):
         for strat in ("none", "app"):
-            rep = stream_bt_report("down", down, strat, sign_magnitude=sm,
-                                   layout="col")
+            rep = TxPipeline(dataclasses.replace(
+                spec,
+                key="none" if strat == "none" else "row_bucket",
+                encode="sign_magnitude" if sm else "identity",
+            )).measure_rows(down, "mlp.down")
             print(f"  sign_magnitude={sm!s:5s} order={strat:4s} "
-                  f"BT/flit={rep.bt_ordered / rep.num_flits:6.2f}")
+                  f"BT/flit={rep.overall_bt_per_flit:6.2f}")
     print("(sign-magnitude recoding ~halves BT; ordering adds a few % on "
           "magnitude-structured rows — EXPERIMENTS.md §Arch-BT)")
 

@@ -1,0 +1,16 @@
+"""Small JAX version-compatibility surface.
+
+The repo targets a range of jax releases; APIs that moved between them are
+resolved here once so call sites stay clean.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["shard_map"]
+
+if hasattr(jax, "shard_map"):  # jax >= 0.6: promoted to the top level
+    shard_map = jax.shard_map
+else:  # jax <= 0.5: experimental namespace
+    from jax.experimental.shard_map import shard_map  # noqa: F401

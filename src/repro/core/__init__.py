@@ -1,6 +1,12 @@
 # The paper's primary contribution: comparison-free popcount sorting
 # (ACC-PSU / APP-PSU) for link bit-transition reduction, plus the BT /
 # link-power / area models used to evaluate it.
+#
+# The ordering-strategy and link-framing APIs moved to the repro.link
+# TX-pipeline subsystem; they are re-exported here LAZILY (PEP 562) through
+# the repro.core.ordering / repro.core.link shims so legacy imports keep
+# working without creating an import cycle (repro.link itself depends on
+# repro.core.bt / repro.core.sorting).
 from .popcount import (
     bucket_boundaries,
     bucket_map,
@@ -16,9 +22,7 @@ from .sorting import (
     counting_sort_ranks,
     invert_permutation,
 )
-from .ordering import ORDER_STRATEGIES, make_order, order_packets
 from .bt import BTReport, bit_transitions, bt_per_flit, bt_report
-from .link import LinkConfig, LinkPowerModel, pack_to_flits, paired_stream, measure
 from .area import (
     AREA_ANCHORS,
     PSUArea,
@@ -29,6 +33,29 @@ from .area import (
     psu_area,
     psu_timing,
 )
+
+_LINK_SHIM = {
+    # repro.core.ordering -> repro.link.stages
+    "make_order": "ordering",
+    "order_packets": "ordering",
+    "ORDER_STRATEGIES": "ordering",
+    # repro.core.link -> repro.link.framing / repro.link.power
+    "LinkConfig": "link",
+    "LinkPowerModel": "link",
+    "pack_to_flits": "link",
+    "paired_stream": "link",
+    "measure": "link",
+}
+
+
+def __getattr__(name: str):
+    shim = _LINK_SHIM.get(name)
+    if shim is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+
+    return getattr(importlib.import_module(f"{__name__}.{shim}"), name)
+
 
 __all__ = [
     "popcount",

@@ -1,146 +1,20 @@
-"""Link model: flit framing, stream assembly and the link power model.
+"""DEPRECATED shim — the link model moved to :mod:`repro.link`.
 
-The paper's platform transmits packets over a 128-bit link: each packet is 4
-flits, each flit carries 8 input bytes and 8 paired weight bytes (DESIGN.md
-§1).  This module packs (reordered) packet payloads into flit streams and
-provides the dynamic-power model used for Fig. 6/7:
-
-    P_link ∝ alpha · C · V^2 · f,  alpha ∝ BT per flit
-
-so *link-related power reduction = transfer_factor × BT reduction*, where the
-transfer factor < 1 absorbs the non-data switching floor (clock, control) of
-the transmission registers.  Calibrated from the paper: ACC 20.42 % BT ->
-18.27 % power gives transfer_factor ≈ 0.895.
+``LinkConfig`` (now an alias of :class:`repro.link.LinkSpec`), flit packing,
+paired-stream assembly and the power model live in the TX-pipeline
+subsystem; this module re-exports them so old imports keep working.  New
+code should import from ``repro.link`` (and prefer
+``repro.link.TxPipeline`` over the one-call ``measure``).
 """
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Literal
+from repro.link.framing import (  # noqa: F401
+    LinkConfig,
+    measure,
+    pack_to_flits,
+    paired_stream,
+)
+from repro.link.power import LinkPowerModel  # noqa: F401
 
-import jax
-import jax.numpy as jnp
-
-from .bt import BTReport, bt_report
-from .ordering import make_order
-
-__all__ = ["LinkConfig", "pack_to_flits", "paired_stream", "LinkPowerModel"]
-
-PackOrder = Literal["row", "lane"]
-
-
-@dataclasses.dataclass(frozen=True)
-class LinkConfig:
-    """Framing of the evaluation link (defaults = paper's Table-I setup)."""
-
-    width_bits: int = 128  # physical link width
-    flits_per_packet: int = 4
-    input_lanes: int = 8  # bytes of input data per flit
-    weight_lanes: int = 8  # bytes of weight data per flit
-
-    @property
-    def bytes_per_flit(self) -> int:
-        return self.width_bits // 8
-
-    @property
-    def elems_per_packet(self) -> int:
-        """(input, weight) pairs carried per packet."""
-        return self.flits_per_packet * self.input_lanes
-
-    def __post_init__(self) -> None:
-        if self.input_lanes + self.weight_lanes != self.bytes_per_flit:
-            raise ValueError(
-                "input_lanes + weight_lanes must fill the flit: "
-                f"{self.input_lanes}+{self.weight_lanes} != {self.bytes_per_flit}"
-            )
-
-
-def pack_to_flits(
-    values: jax.Array, lanes: int, pack: PackOrder = "lane"
-) -> jax.Array:
-    """Pack (P, N) packet payloads into (P, flits, lanes) flit halves.
-
-    ``pack="lane"`` places consecutive payload elements in the *same lane* of
-    consecutive flits (element e of a packet -> flit e % F, lane e // F), so a
-    popcount-sorted payload yields monotone lane streams — this is the
-    packing the transmitting unit uses after the PSU (paper Fig. 2 shows the
-    resulting per-flit popcount trend).  ``pack="row"`` is plain row-major.
-    """
-    p, n = values.shape
-    if n % lanes != 0:
-        raise ValueError(f"payload size {n} not divisible by lanes {lanes}")
-    flits = n // lanes
-    if pack == "row":
-        return values.reshape(p, flits, lanes)
-    if pack == "lane":
-        return values.reshape(p, lanes, flits).transpose(0, 2, 1)
-    raise ValueError(f"unknown pack order {pack!r}")
-
-
-def paired_stream(
-    inputs: jax.Array,
-    weights: jax.Array,
-    cfg: LinkConfig = LinkConfig(),
-    strategy: str = "none",
-    pack: PackOrder = "lane",
-    **order_kwargs: object,
-) -> jax.Array:
-    """Assemble the full link stream for P packets of (input, weight) pairs.
-
-    Applies ``strategy`` per packet (deriving the order from the input side,
-    moving the paired weights along), packs both halves into flits and
-    concatenates packets into one (P*F, bytes_per_flit) uint8 stream.
-    """
-    if inputs.shape != weights.shape:
-        raise ValueError(f"paired shapes differ: {inputs.shape} vs {weights.shape}")
-    if inputs.shape[-1] != cfg.elems_per_packet:
-        raise ValueError(
-            f"packet payload {inputs.shape[-1]} != "
-            f"flits*input_lanes = {cfg.elems_per_packet}"
-        )
-    order = make_order(strategy, inputs, lanes=cfg.input_lanes, **order_kwargs)
-    inp = jnp.take_along_axis(inputs, order, axis=-1)
-    wgt = jnp.take_along_axis(weights, order, axis=-1)
-    fi = pack_to_flits(inp, cfg.input_lanes, pack)
-    fw = pack_to_flits(wgt, cfg.weight_lanes, pack)
-    flits = jnp.concatenate([fi, fw], axis=-1)  # (P, F, bytes_per_flit)
-    return flits.reshape(-1, cfg.bytes_per_flit).astype(jnp.uint8)
-
-
-def measure(
-    inputs: jax.Array,
-    weights: jax.Array,
-    cfg: LinkConfig = LinkConfig(),
-    strategy: str = "none",
-    pack: PackOrder = "lane",
-    **order_kwargs: object,
-) -> BTReport:
-    """One-call Table-I measurement for a strategy."""
-    stream = paired_stream(inputs, weights, cfg, strategy, pack, **order_kwargs)
-    return bt_report(stream, cfg.input_lanes)
-
-
-@dataclasses.dataclass(frozen=True)
-class LinkPowerModel:
-    """Dynamic-power model for link-related power (Fig. 6/7).
-
-    ``transfer_factor`` maps BT reduction to link-related power reduction
-    (non-data switching floor of the transmission registers); calibrated to
-    the paper's ACC point (20.42 % BT -> 18.27 % power).
-    ``energy_per_transition_pj`` sets the absolute scale (representative
-    22 nm on-chip wire; absolute numbers are modeled, ratios are the claim).
-    """
-
-    transfer_factor: float = 18.27 / 20.42
-    energy_per_transition_pj: float = 0.18
-    static_flit_energy_pj: float = 2.0  # clock/control floor per flit
-
-    def link_energy_pj(self, total_bt: float, num_flits: int) -> float:
-        return (
-            self.energy_per_transition_pj * float(total_bt)
-            + self.static_flit_energy_pj * float(num_flits)
-        )
-
-    def power_reduction(self, bt_reduction: float) -> float:
-        """Link-related power reduction predicted from a BT reduction."""
-        return self.transfer_factor * bt_reduction
+__all__ = ["LinkConfig", "pack_to_flits", "paired_stream", "measure", "LinkPowerModel"]

@@ -1,117 +1,19 @@
-"""Transmit-ordering strategies (paper §IV, Table I).
+"""DEPRECATED shim — ordering strategies moved to :mod:`repro.link.stages`.
 
-Four strategies are evaluated in the paper:
-
-  * ``none``          — non-optimized baseline: stream order as produced.
-  * ``column_major``  — layout reordering: traverse the packet's
-                        (flits x lanes) matrix column-major.  Helps when the
-                        stream has lane-periodic structure (im2col patches).
-  * ``acc``           — ACC-PSU: stable sort by exact '1'-bit count.
-  * ``app``           — APP-PSU: stable sort by k-bucket approximate count.
-
-A strategy maps the *input-side* values of each packet to a permutation; the
-transmitting units apply the same permutation to every stream that shares the
-packet framing (paper: the paired weight bytes move with their inputs, which
-is what keeps the MAC accumulation legal — the (input, weight) products are
-summed order-insensitively).
+The four Table-I strategies ('none', 'column_major', 'acc', 'app') are now
+key stages of the unified TX pipeline (every strategy is "derive keys, then
+stable counting sort" — the data-independent ones degenerate to fixed
+permutations).  This module re-exports the legacy API so old imports keep
+working; new code should use ``repro.link`` (``KEY_STAGES`` /
+``TxPipeline``).
 """
 
 from __future__ import annotations
 
-from typing import Callable, Dict
-
-import jax
-import jax.numpy as jnp
-
-from .sorting import acc_sort_indices, app_sort_indices
+from repro.link.stages import (  # noqa: F401
+    ORDER_STRATEGIES,
+    make_order,
+    order_packets,
+)
 
 __all__ = ["make_order", "ORDER_STRATEGIES", "order_packets"]
-
-
-def _order_none(values: jax.Array, **_: object) -> jax.Array:
-    n = values.shape[-1]
-    order = jnp.arange(n, dtype=jnp.int32)
-    return jnp.broadcast_to(order, values.shape)
-
-
-def _order_column_major(
-    values: jax.Array, *, lanes: int = 8, **_: object
-) -> jax.Array:
-    """Permutation that re-traverses the (flits, lanes) packet matrix
-    column-major.  Element at (f, l) is visited in order l*flits + f."""
-    n = values.shape[-1]
-    if n % lanes != 0:
-        raise ValueError(f"packet size {n} not divisible by lanes {lanes}")
-    flits = n // lanes
-    order = jnp.arange(n, dtype=jnp.int32).reshape(flits, lanes).T.reshape(n)
-    return jnp.broadcast_to(order, values.shape)
-
-
-def _order_acc(
-    values: jax.Array, *, width: int = 8, descending: bool = False, **_: object
-) -> jax.Array:
-    return acc_sort_indices(values, width=width, descending=descending)
-
-
-def _order_app(
-    values: jax.Array,
-    *,
-    width: int = 8,
-    k: int = 4,
-    descending: bool = False,
-    **_: object,
-) -> jax.Array:
-    return app_sort_indices(values, width=width, k=k, descending=descending)
-
-
-ORDER_STRATEGIES: Dict[str, Callable[..., jax.Array]] = {
-    "none": _order_none,
-    "column_major": _order_column_major,
-    "acc": _order_acc,
-    "app": _order_app,
-}
-
-
-def make_order(strategy: str, values: jax.Array, **kwargs: object) -> jax.Array:
-    """Per-packet element order for ``strategy``.
-
-    Args:
-      strategy: one of ``ORDER_STRATEGIES``.
-      values: (..., N) uint8 input-side packet values the order is derived
-        from (ACC/APP sort keys come from these).
-      kwargs: strategy parameters (width, k, lanes, descending).
-
-    Returns:
-      int32 (..., N) permutation per packet; gather with it to reorder.
-    """
-    try:
-        fn = ORDER_STRATEGIES[strategy]
-    except KeyError:
-        raise ValueError(
-            f"unknown ordering strategy {strategy!r}; "
-            f"choose from {sorted(ORDER_STRATEGIES)}"
-        ) from None
-    return fn(values, **kwargs)
-
-
-def order_packets(
-    strategy: str,
-    inputs: jax.Array,
-    weights: jax.Array | None = None,
-    **kwargs: object,
-) -> tuple[jax.Array, jax.Array | None]:
-    """Reorder packets of (input, weight) pairs with one strategy.
-
-    Args:
-      inputs: (P, N) uint8 — P packets of N input bytes.
-      weights: optional (P, N) uint8 paired weights (move with the inputs).
-
-    Returns:
-      (ordered_inputs, ordered_weights_or_None).
-    """
-    order = make_order(strategy, inputs, **kwargs)
-    out_i = jnp.take_along_axis(inputs, order, axis=-1)
-    out_w = (
-        jnp.take_along_axis(weights, order, axis=-1) if weights is not None else None
-    )
-    return out_i, out_w

@@ -1,14 +1,26 @@
 # The paper's compute hot-spot IS a sorting circuit, so the kernels here are
 # the paper's contribution itself, TPU-native (DESIGN.md §3):
-#   psu.py      - popcount-sorting unit (ACC/APP), the Fig. 1 dataflow
-#   btcount.py  - bit-transition counting over flit streams (the metric)
-#   quantize.py - int8 egress quantizer for the compressed all-reduce path
+#   psu.py        - popcount-sorting unit (ACC/APP), the Fig. 1 dataflow
+#   psu_stream.py - fused TX pipeline: sort -> reorder -> pack -> BT count
+#                   in one launch (the repro.link hot path, DESIGN.md §3.2)
+#   btcount.py    - bit-transition counting over flit streams (the metric)
+#   quantize.py   - int8 egress quantizer for the compressed all-reduce path
 # ops.py holds the jit'd wrappers, ref.py the pure-jnp oracles.
-from .ops import bt_count, default_interpret, psu_reorder, psu_sort, quantize_egress
+from .ops import (
+    PsuStreamResult,
+    bt_count,
+    default_interpret,
+    psu_reorder,
+    psu_sort,
+    psu_stream,
+    quantize_egress,
+)
 
 __all__ = [
     "psu_sort",
     "psu_reorder",
+    "psu_stream",
+    "PsuStreamResult",
     "bt_count",
     "quantize_egress",
     "default_interpret",

@@ -9,15 +9,25 @@ kernels are used.
 from __future__ import annotations
 
 from functools import partial
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from .btcount import bt_count_pallas
-from .psu import psu_sort_pallas
+from .psu import _popcount_bits, psu_sort_pallas
+from .psu_stream import psu_stream_pallas
 from .quantize import quantize_egress_pallas
 
-__all__ = ["psu_sort", "psu_reorder", "bt_count", "quantize_egress", "default_interpret"]
+__all__ = [
+    "psu_sort",
+    "psu_reorder",
+    "psu_stream",
+    "PsuStreamResult",
+    "bt_count",
+    "quantize_egress",
+    "default_interpret",
+]
 
 
 def default_interpret() -> bool:
@@ -71,6 +81,106 @@ def psu_reorder(
         packets, width=width, k=k, descending=descending, interpret=interpret
     )
     return jnp.take_along_axis(packets, order, axis=-1)
+
+
+class PsuStreamResult(NamedTuple):
+    """Everything the fused TX pipeline produces in one kernel launch."""
+
+    order: jax.Array  # (P, N) int32: input index transmitted j-th
+    rank: jax.Array  # (P, N) int32: output slot of input element i
+    stream: jax.Array  # (P*F, lanes) uint8 packed flit rows
+    bt_input: jax.Array  # int32 scalar: input-side bit transitions
+    bt_weight: jax.Array  # int32 scalar: weight-side bit transitions
+
+
+@partial(
+    jax.jit,
+    static_argnames=(
+        "width",
+        "k",
+        "descending",
+        "input_lanes",
+        "weight_lanes",
+        "pack",
+        "block_packets",
+        "interpret",
+    ),
+)
+def psu_stream(
+    inputs: jax.Array,
+    weights: jax.Array | None = None,
+    width: int = 8,
+    k: int | None = None,
+    descending: bool = False,
+    input_lanes: int = 8,
+    weight_lanes: int | None = None,
+    pack: str = "lane",
+    block_packets: int = 64,
+    interpret: bool | None = None,
+) -> PsuStreamResult:
+    """Fused popcount-sort -> reorder -> flit-pack -> BT-count, one launch.
+
+    Accepts any (P, N) integer packets; P is padded to the kernel block size
+    internally.  The per-block BT partials miss (a) the G-1 inter-block flit
+    boundaries and (b) over-count one boundary into the zero-padded tail when
+    P is not a block multiple; both are patched here with O(G) jnp arithmetic
+    on the packed stream — no extra kernel launch.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    if weights is None:
+        weight_lanes = 0 if weight_lanes is None else weight_lanes
+        weights = jnp.zeros_like(inputs)
+    elif weight_lanes is None:
+        weight_lanes = input_lanes
+    if weights.shape != inputs.shape:
+        raise ValueError(f"paired shapes differ: {inputs.shape} vs {weights.shape}")
+    p, n = inputs.shape
+    flits = n // input_lanes
+    bp = min(block_packets, max(1, p))
+    pad = (-p) % bp
+    x = jnp.pad(inputs.astype(jnp.int32), ((0, pad), (0, 0)))
+    w = jnp.pad(weights.astype(jnp.int32), ((0, pad), (0, 0)))
+    order, rank, stream, partials = psu_stream_pallas(
+        x,
+        w,
+        width=width,
+        k=k,
+        descending=descending,
+        input_lanes=input_lanes,
+        weight_lanes=weight_lanes,
+        pack=pack,
+        block_packets=bp,
+        interpret=interpret,
+    )
+    bt = partials.sum(axis=0)  # (2,): block-internal boundaries
+
+    def _halves(flips_row):
+        return jnp.stack(
+            [flips_row[..., :input_lanes].sum(-1), flips_row[..., input_lanes:].sum(-1)],
+            axis=-1,
+        )
+
+    grid = (p + pad) // bp
+    if grid > 1:
+        # inter-block boundaries: last flit of block g-1 -> first of block g
+        starts = jnp.arange(1, grid) * (bp * flits)
+        flips = _popcount_bits(
+            jnp.bitwise_xor(stream[starts - 1], stream[starts]), 8
+        )
+        bt = bt + _halves(flips).sum(axis=0)
+    if pad:
+        # remove the spurious boundary from the last real flit into the
+        # zero-padded tail (zero flits contribute nothing else)
+        flips = _popcount_bits(stream[p * flits - 1], 8)
+        bt = bt - _halves(flips)
+    return PsuStreamResult(
+        order[:p],
+        rank[:p],
+        stream[: p * flits].astype(jnp.uint8),
+        bt[0],
+        bt[1],
+    )
 
 
 @partial(jax.jit, static_argnames=("width", "block_rows", "interpret"))

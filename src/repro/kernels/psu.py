@@ -50,11 +50,17 @@ def _popcount_bits(x: jax.Array, width: int) -> jax.Array:
     return v & jnp.int32(0x1F)
 
 
-def _psu_kernel(
-    x_ref, order_ref, rank_ref, *, width: int, k: int | None, descending: bool
-):
-    """Sort one (BP, N) block of packets by (approximate) popcount."""
-    x = x_ref[...].astype(jnp.int32)
+def _rank_block(
+    x: jax.Array, *, width: int, k: int | None, descending: bool
+) -> jax.Array:
+    """Stages 1-3 of the PSU on one (BP, N) int32 block: popcount (+ APP
+    bucket encoder), one-hot / histogram / prefix-sum, index mapping.
+
+    Shared between the standalone sort kernel below and the fused TX
+    pipeline (``psu_stream.py``), so the key derivation cannot drift between
+    them.  Returns the (BP, N) int32 ``rank`` (stable counting-sort output
+    addresses).
+    """
     bp, n = x.shape
 
     # --- popcount stage (+ APP bucket encoder) ---
@@ -74,7 +80,16 @@ def _psu_kernel(
     starts = jnp.cumsum(hist, axis=1) - hist  # exclusive prefix sum
 
     # --- index mapping stage ---
-    rank = ((within + starts[:, None, :]) * onehot).sum(axis=2)  # (BP, N)
+    return ((within + starts[:, None, :]) * onehot).sum(axis=2)  # (BP, N)
+
+
+def _psu_kernel(
+    x_ref, order_ref, rank_ref, *, width: int, k: int | None, descending: bool
+):
+    """Sort one (BP, N) block of packets by (approximate) popcount."""
+    x = x_ref[...].astype(jnp.int32)
+    bp, n = x.shape
+    rank = _rank_block(x, width=width, k=k, descending=descending)
 
     # scatter as one-hot compare + weighted sum: order[j] = i s.t. rank_i = j
     iota_j = lax.broadcasted_iota(jnp.int32, (bp, n, n), 2)

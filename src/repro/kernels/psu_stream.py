@@ -1,0 +1,198 @@
+"""Pallas TPU kernel: the fused PSU transmit pipeline.
+
+One grid step runs the paper's *entire* hardware dataflow for a block of
+packets in a single VMEM pass (DESIGN.md §3.2):
+
+    popcount -> bucket encode -> histogram/prefix-sum -> rank
+    -> reorder (inputs + paired weights) -> flit pack -> BT accumulate
+
+This replaces the seed's three-step path (``psu_sort`` launch -> host
+``take_along_axis`` gather -> ``bt_count`` launch) with one kernel launch per
+block: the reordered stream never leaves VMEM between the sort and the BT
+measurement.
+
+Reorder stage: the seed kernel materialised ``order`` with an O(N^2) VPU
+broadcast-compare against an iota plane and then gathered on the host.  Here
+``order`` is derived from ``rank`` directly: the one-hot of ``rank`` is a
+permutation *matrix*, so a single batched MXU contraction of the stacked
+payload ``[iota, inputs, weights]`` against it simultaneously yields
+``order`` (= permuted iota), the reordered inputs and the reordered weights
+— the hardware's scatter-SRAM write expressed as one matrix product instead
+of per-output compare/select reductions.  The one-hot *compare* formulation
+survives only as the test oracle (``repro.core.sorting.invert_permutation``,
+``repro.kernels.ref``).
+
+Float32 is used for the contraction (MXU-native); all operands are < 2^24 so
+the arithmetic is exact.
+
+VMEM: for BP=64 packets of N=64 bytes the permutation-matrix block is
+(64, 64, 64) f32 = 1 MiB and the bucket one-hot (64, 64, K<=9) is ~150 KiB —
+comfortably inside a v5e core's VMEM.  Cross-block flit boundaries and
+padded packets are patched up by the ``ops.py`` wrapper with O(grid) jnp
+arithmetic (no extra kernel launch).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from .psu import _popcount_bits, _rank_block
+
+__all__ = ["psu_stream_pallas"]
+
+
+def _psu_stream_kernel(
+    x_ref,
+    w_ref,
+    order_ref,
+    rank_ref,
+    stream_ref,
+    bt_ref,
+    *,
+    width: int,
+    k: int | None,
+    descending: bool,
+    input_lanes: int,
+    weight_lanes: int,
+    pack: str,
+):
+    """Sort, reorder, pack and measure one (BP, N) block of packets."""
+    x = x_ref[...].astype(jnp.int32)
+    w = w_ref[...].astype(jnp.int32)
+    bp, n = x.shape
+    flits = n // input_lanes
+
+    # --- popcount / bucket / histogram / prefix-sum / index mapping ---
+    # (shared with the standalone sort kernel: psu._rank_block)
+    rank = _rank_block(x, width=width, k=k, descending=descending)
+
+    # --- reorder stage: one permutation-matrix product for everything ---
+    # perm[b, i, j] = [rank_i == j]; contracting [iota; x; w] with it gives
+    # order, ordered inputs and ordered weights in a single MXU pass.
+    iota_j = lax.broadcasted_iota(jnp.int32, (bp, n, n), 2)
+    perm = (rank[:, :, None] == iota_j).astype(jnp.float32)  # (BP, N, N)
+    iota_i = lax.broadcasted_iota(jnp.int32, (bp, n), 1)
+    payload = jnp.stack([iota_i, x, w], axis=1).astype(jnp.float32)  # (BP,3,N)
+    moved = lax.dot_general(
+        payload,
+        perm,
+        dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    ).astype(jnp.int32)  # (BP, 3, N)
+    order = moved[:, 0, :]
+    xs = moved[:, 1, :]
+    ws = moved[:, 2, :]
+    order_ref[...] = order
+    rank_ref[...] = rank
+
+    # --- flit-pack stage ---
+    if pack == "lane":
+        fi = xs.reshape(bp, input_lanes, flits).transpose(0, 2, 1)
+    else:  # "row"
+        fi = xs.reshape(bp, flits, input_lanes)
+    if weight_lanes:
+        if pack == "lane":
+            fw = ws.reshape(bp, weight_lanes, flits).transpose(0, 2, 1)
+        else:
+            fw = ws.reshape(bp, flits, weight_lanes)
+        flit_block = jnp.concatenate([fi, fw], axis=-1)
+    else:
+        flit_block = fi
+    lanes = input_lanes + weight_lanes
+    flit_block = flit_block.reshape(bp * flits, lanes)
+    stream_ref[...] = flit_block
+
+    # --- BT-accumulate stage (block-internal boundaries, split by side) ---
+    flips = _popcount_bits(
+        jnp.bitwise_xor(flit_block[:-1], flit_block[1:]), 8
+    )  # byte lanes are 8-bit regardless of the element sort width
+    bt_ref[0, 0] = flips[:, :input_lanes].sum()
+    bt_ref[0, 1] = (
+        flips[:, input_lanes:].sum() if weight_lanes else jnp.int32(0)
+    )
+
+
+def psu_stream_pallas(
+    inputs: jax.Array,
+    weights: jax.Array,
+    *,
+    width: int = 8,
+    k: int | None = None,
+    descending: bool = False,
+    input_lanes: int = 8,
+    weight_lanes: int = 8,
+    pack: str = "lane",
+    block_packets: int = 64,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Fused PSU transmit pipeline over a batch of packets.
+
+    Args:
+      inputs: (P, N) integer packets; P must be a multiple of
+        ``block_packets`` (the ``ops.py`` wrapper pads).
+      weights: (P, N) paired weight bytes (ignored when ``weight_lanes=0``
+        — pass zeros).
+      width: element bit width W for the sort keys.
+      k: APP bucket count, or ``None`` for the exact ACC unit.
+      descending: sort high-popcount-first.
+      input_lanes / weight_lanes: bytes of each side per flit;
+        ``weight_lanes=0`` transmits an input-only stream.
+      pack: ``"lane"`` (PSU lane-major packing, paper Fig. 2) or ``"row"``.
+      block_packets: packets per grid step.
+      interpret: run the kernel body in Python (CPU validation mode).
+
+    Returns:
+      (order, rank, stream, bt): int32 (P, N), int32 (P, N), int32
+      (P*F, input_lanes+weight_lanes) packed flit rows, and int32 (G, 2)
+      per-block BT partials split (input side, weight side) over the
+      block-internal flit boundaries.
+    """
+    p, n = inputs.shape
+    if p % block_packets != 0:
+        raise ValueError(f"P={p} not a multiple of block_packets={block_packets}")
+    if n % input_lanes != 0:
+        raise ValueError(f"packet size {n} not divisible by input_lanes={input_lanes}")
+    if weight_lanes and n % weight_lanes != 0:
+        raise ValueError(
+            f"packet size {n} not divisible by weight_lanes={weight_lanes}"
+        )
+    if pack not in ("lane", "row"):
+        raise ValueError(f"fused kernel supports pack 'lane'|'row', got {pack!r}")
+    flits = n // input_lanes
+    lanes = input_lanes + weight_lanes
+    grid = (p // block_packets,)
+    kern = functools.partial(
+        _psu_stream_kernel,
+        width=width,
+        k=k,
+        descending=descending,
+        input_lanes=input_lanes,
+        weight_lanes=weight_lanes,
+        pack=pack,
+    )
+    pk_spec = pl.BlockSpec((block_packets, n), lambda i: (i, 0))
+    out_shape = [
+        jax.ShapeDtypeStruct((p, n), jnp.int32),
+        jax.ShapeDtypeStruct((p, n), jnp.int32),
+        jax.ShapeDtypeStruct((p * flits, lanes), jnp.int32),
+        jax.ShapeDtypeStruct((p // block_packets, 2), jnp.int32),
+    ]
+    out_specs = [
+        pk_spec,
+        pk_spec,
+        pl.BlockSpec((block_packets * flits, lanes), lambda i: (i, 0)),
+        pl.BlockSpec((1, 2), lambda i: (i, 0)),
+    ]
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[pk_spec, pk_spec],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(inputs.astype(jnp.int32), weights.astype(jnp.int32))

@@ -13,7 +13,7 @@ import jax.numpy as jnp
 from repro.core.popcount import bucket_map, popcount
 from repro.core.sorting import counting_sort_indices, counting_sort_ranks
 
-__all__ = ["psu_sort_ref", "bt_count_ref", "quantize_egress_ref"]
+__all__ = ["psu_sort_ref", "psu_stream_ref", "bt_count_ref", "quantize_egress_ref"]
 
 
 def psu_sort_ref(
@@ -39,6 +39,55 @@ def psu_sort_ref(
     rank = counting_sort_ranks(keys, nb)
     order = counting_sort_indices(keys, nb)
     return order.astype(jnp.int32), rank.astype(jnp.int32)
+
+
+def psu_stream_ref(
+    inputs: jax.Array,
+    weights: jax.Array | None = None,
+    width: int = 8,
+    k: int | None = None,
+    descending: bool = False,
+    input_lanes: int = 8,
+    weight_lanes: int | None = None,
+    pack: str = "lane",
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Oracle for the fused TX-pipeline kernel: the unfused composition
+    ``psu_sort_ref`` -> gather -> flit-pack -> ``bt_count_ref`` per side.
+
+    Keeps the one-hot scatter formulation (via ``counting_sort_indices``)
+    that the fused kernel replaced, exactly so tests can pin the fused path
+    against it bit-for-bit.
+
+    Returns (order, rank, stream, bt_input, bt_weight) matching
+    ``repro.kernels.psu_stream``.
+    """
+    if weights is None:
+        weight_lanes = 0 if weight_lanes is None else weight_lanes
+        weights = jnp.zeros_like(inputs)
+    elif weight_lanes is None:
+        weight_lanes = input_lanes
+    order, rank = psu_sort_ref(inputs, width=width, k=k, descending=descending)
+    p, n = inputs.shape
+    flits = n // input_lanes
+
+    def _flits(values, lanes):
+        if pack == "lane":
+            return values.reshape(p, lanes, flits).transpose(0, 2, 1)
+        return values.reshape(p, flits, lanes)
+
+    xs = jnp.take_along_axis(inputs.astype(jnp.int32), order, axis=-1)
+    halves = [_flits(xs, input_lanes)]
+    if weight_lanes:
+        ws = jnp.take_along_axis(weights.astype(jnp.int32), order, axis=-1)
+        halves.append(_flits(ws, weight_lanes))
+    stream = jnp.concatenate(halves, axis=-1).reshape(
+        p * flits, input_lanes + weight_lanes
+    )
+    bt_i = bt_count_ref(stream[:, :input_lanes])
+    bt_w = (
+        bt_count_ref(stream[:, input_lanes:]) if weight_lanes else jnp.int32(0)
+    )
+    return order, rank, stream.astype(jnp.uint8), bt_i, bt_w
 
 
 def bt_count_ref(stream: jax.Array, width: int = 8) -> jax.Array:

@@ -1,0 +1,52 @@
+# The TX-pipeline subsystem: the paper's transmit dataflow (popcount ->
+# bucket -> counting-sort -> reorder -> pack -> measure) as one composable,
+# registry-backed pipeline (DESIGN.md §3.2):
+#   spec.py     - LinkSpec: framing + stage selection in one dataclass
+#   stages.py   - registered key/encode/pack stages + legacy strategy API
+#   framing.py  - flit packing and paired-stream assembly (DESIGN.md §1)
+#   pipeline.py - TxPipeline: staged path + fused single-launch hot path
+#   power.py    - the Fig. 6/7 link power model
+# Old import paths (repro.core.link, repro.core.ordering) are shims onto
+# this package.
+from .framing import LinkConfig, measure, pack_to_flits, paired_stream
+from .pipeline import LinkReport, TxPipeline, TxResult
+from .power import LinkPowerModel
+from .spec import LinkSpec
+from .stages import (
+    ENCODE_STAGES,
+    KEY_STAGES,
+    ORDER_STRATEGIES,
+    PACK_STAGES,
+    KeyStage,
+    PackStage,
+    make_order,
+    order_packets,
+    row_bucket_keys,
+    row_bucket_order,
+    tensor_flit_stream,
+    to_sign_magnitude,
+)
+
+__all__ = [
+    "LinkSpec",
+    "LinkConfig",
+    "TxPipeline",
+    "TxResult",
+    "LinkReport",
+    "LinkPowerModel",
+    "pack_to_flits",
+    "paired_stream",
+    "measure",
+    "make_order",
+    "order_packets",
+    "ORDER_STRATEGIES",
+    "KEY_STAGES",
+    "ENCODE_STAGES",
+    "PACK_STAGES",
+    "KeyStage",
+    "PackStage",
+    "to_sign_magnitude",
+    "tensor_flit_stream",
+    "row_bucket_keys",
+    "row_bucket_order",
+]

@@ -1,0 +1,134 @@
+"""Link framing: packing packet payloads into flit streams (DESIGN.md §1).
+
+The paper's platform transmits packets over a 128-bit link: each packet is 4
+flits, each flit carries 8 input bytes and 8 paired weight bytes.  This
+module packs (reordered) packet payloads into flit streams; the staged /
+fused pipeline on top lives in ``repro.link.pipeline``.
+
+Asymmetric framings (``input_lanes != weight_lanes``) are supported: the
+weight side then carries ``flits_per_packet * weight_lanes`` bytes per
+packet and is framed natively *without* the input-derived permutation (the
+paper's pairing argument — weights move with their inputs — only applies
+when both sides carry the same element count; see DESIGN.md §1).
+"""
+
+from __future__ import annotations
+
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bt import BTReport, bt_report
+
+from .spec import LinkSpec
+from .stages import PACK_STAGES, make_order
+
+__all__ = ["LinkConfig", "pack_to_flits", "paired_stream", "measure"]
+
+# Legacy name: framing-only callers configured a ``LinkConfig``; the spec is
+# a drop-in superset (same leading fields, defaults and derived properties).
+LinkConfig = LinkSpec
+
+PackOrder = Literal["row", "lane"]
+
+
+def pack_to_flits(
+    values: jax.Array, lanes: int, pack: PackOrder = "lane"
+) -> jax.Array:
+    """Pack (P, N) packet payloads into (P, flits, lanes) flit halves.
+
+    ``pack="lane"`` places consecutive payload elements in the *same lane* of
+    consecutive flits (element e of a packet -> flit e % F, lane e // F), so a
+    popcount-sorted payload yields monotone lane streams — this is the
+    packing the transmitting unit uses after the PSU (paper Fig. 2 shows the
+    resulting per-flit popcount trend).  ``pack="row"`` is plain row-major.
+    """
+    stage = PACK_STAGES.get(pack)
+    if stage is None or stage.per_packet is None:
+        raise ValueError(
+            f"unknown per-packet pack order {pack!r} (choose 'row' or 'lane';"
+            " 'col' is a stream-only layout)"
+        )
+    return stage.per_packet(values, lanes)
+
+
+def _validate_paired(
+    inputs: jax.Array, weights: jax.Array, cfg: LinkSpec
+) -> None:
+    if inputs.shape[-1] != cfg.elems_per_packet:
+        raise ValueError(
+            f"packet payload {inputs.shape[-1]} != "
+            f"flits*input_lanes = {cfg.elems_per_packet}"
+        )
+    if inputs.shape[:-1] != weights.shape[:-1]:
+        raise ValueError(
+            f"paired batch shapes differ: {inputs.shape} vs {weights.shape}"
+        )
+    if weights.shape[-1] != cfg.weight_elems_per_packet:
+        raise ValueError(
+            f"weight payload {weights.shape[-1]} != "
+            f"flits*weight_lanes = {cfg.weight_elems_per_packet} "
+            f"(input_lanes={cfg.input_lanes}, weight_lanes={cfg.weight_lanes})"
+        )
+
+
+def assemble_stream(
+    inputs: jax.Array,
+    weights: jax.Array | None,
+    cfg: LinkSpec,
+    order: jax.Array | None,
+    pack: PackOrder = "lane",
+) -> jax.Array:
+    """Apply ``order``, pack both halves per flit and flatten to (T, bytes).
+
+    The input-derived ``order`` moves the weight bytes along only for the
+    symmetric framing (same element count per side); an asymmetric weight
+    half is framed in its native order.
+    """
+    inp = inputs if order is None else jnp.take_along_axis(inputs, order, axis=-1)
+    fi = pack_to_flits(inp, cfg.input_lanes, pack)
+    if weights is None or cfg.weight_lanes == 0:
+        return fi.reshape(-1, cfg.input_lanes).astype(jnp.uint8)
+    if order is not None and weights.shape == inputs.shape:
+        weights = jnp.take_along_axis(weights, order, axis=-1)
+    fw = pack_to_flits(weights, cfg.weight_lanes, pack)
+    flits = jnp.concatenate([fi, fw], axis=-1)  # (P, F, bytes_per_flit)
+    return flits.reshape(-1, cfg.bytes_per_flit).astype(jnp.uint8)
+
+
+def paired_stream(
+    inputs: jax.Array,
+    weights: jax.Array,
+    cfg: LinkSpec = LinkSpec(),
+    strategy: str = "none",
+    pack: PackOrder = "lane",
+    **order_kwargs: object,
+) -> jax.Array:
+    """Assemble the full link stream for P packets of (input, weight) data.
+
+    Applies ``strategy`` per packet (deriving the order from the input side,
+    moving the paired weights along when the framing is symmetric), packs
+    both halves into flits and concatenates packets into one
+    (P*F, bytes_per_flit) uint8 stream.
+    """
+    _validate_paired(inputs, weights, cfg)
+    order = make_order(strategy, inputs, lanes=cfg.input_lanes, **order_kwargs)
+    return assemble_stream(inputs, weights, cfg, order, pack)
+
+
+def measure(
+    inputs: jax.Array,
+    weights: jax.Array,
+    cfg: LinkSpec = LinkSpec(),
+    strategy: str = "none",
+    pack: PackOrder = "lane",
+    **order_kwargs: object,
+) -> BTReport:
+    """One-call Table-I measurement for a strategy (legacy API).
+
+    New code should use ``repro.link.TxPipeline.measure`` — same numbers,
+    one fused kernel launch instead of a sort launch + gather + BT launch.
+    """
+    stream = paired_stream(inputs, weights, cfg, strategy, pack, **order_kwargs)
+    return bt_report(stream, cfg.input_lanes)

@@ -1,0 +1,267 @@
+"""`TxPipeline` — the staged transmit path, fused on its hot path.
+
+One object owns the paper's whole dataflow (popcount -> bucket ->
+counting-sort -> reorder -> pack -> measure), configured by a single
+``LinkSpec``.  Two execution paths produce bit-identical results:
+
+  * **fused** (default when applicable): one Pallas launch per packet block
+    (``repro.kernels.psu_stream``) runs sort + reorder + flit-pack +
+    BT-accumulate without the stream ever leaving VMEM.  Applicable for
+    'acc'/'app' keys with 'row'/'lane' packing and a symmetric (or absent)
+    weight side.
+  * **staged** (fallback + reference): the registered stages composed with
+    the ``repro.core.sorting`` counting sort and the ``bt_count`` kernel —
+    a sort launch, a host gather, and one BT launch per lane half.  Used by
+    the data-independent strategies ('none', 'column_major'), the 'col'
+    stream layout, asymmetric framings, and row streams.
+
+Row streams (weight matrices traversed row-wise — the TPU traffic
+adaptation, DESIGN.md §3.3) go through ``measure_rows``/``transmit_rows``
+with the 'row_bucket' key stage.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bt import BTReport
+from repro.core.sorting import counting_sort_indices
+from repro.kernels import bt_count, psu_stream
+
+from .framing import _validate_paired, assemble_stream
+from .power import LinkPowerModel
+from .spec import LinkSpec
+from .stages import ENCODE_STAGES, KEY_STAGES, PACK_STAGES, make_order, row_bucket_keys
+
+__all__ = ["TxPipeline", "TxResult", "LinkReport"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TxResult:
+    """What one transmit produces: the permutation, the wire image, the BT."""
+
+    order: jax.Array  # (P, N) int32 (or (R,) for row streams)
+    rank: Optional[jax.Array]  # (P, N) int32; None on the staged path
+    stream: jax.Array  # (T, lanes) uint8 packed flit rows
+    bt_input: jax.Array  # int32: input-side bit transitions
+    bt_weight: jax.Array  # int32: weight-side bit transitions
+    fused: bool  # produced by the single-launch kernel?
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkReport:
+    """BT / energy accounting of one measured stream (Table-I columns +
+    the Fig. 6/7 energy model)."""
+
+    name: str
+    num_flits: int
+    input_bt: int
+    weight_bt: int
+    fused: bool = False
+    energy_pj: float = 0.0
+
+    @property
+    def total_bt(self) -> int:
+        return self.input_bt + self.weight_bt
+
+    @property
+    def input_bt_per_flit(self) -> float:
+        return self.input_bt / max(self.num_flits, 1)
+
+    @property
+    def weight_bt_per_flit(self) -> float:
+        return self.weight_bt / max(self.num_flits, 1)
+
+    @property
+    def overall_bt_per_flit(self) -> float:
+        return self.total_bt / max(self.num_flits, 1)
+
+    def reduction_vs(self, base: "LinkReport") -> float:
+        """Overall BT reduction relative to a baseline report (fraction)."""
+        return 1.0 - self.total_bt / max(base.total_bt, 1e-9)
+
+    def to_bt_report(self) -> BTReport:
+        """Legacy ``repro.core.bt.BTReport`` view (Table-I columns)."""
+        return BTReport(
+            jnp.float32(self.input_bt_per_flit),
+            jnp.float32(self.weight_bt_per_flit),
+            jnp.float32(self.overall_bt_per_flit),
+        )
+
+
+class TxPipeline:
+    """Staged TX pipeline over one link, configured by a ``LinkSpec``.
+
+    Args:
+      spec: framing + stage selection.
+      power: energy model for ``LinkReport.energy_pj`` (default paper model).
+      fused: force (True) or forbid (False) the fused kernel; None = use it
+        whenever the spec allows.
+      interpret: Pallas interpret-mode override (None = auto: interpret off
+        TPU).
+      block_packets: packets per fused-kernel grid step.
+    """
+
+    def __init__(
+        self,
+        spec: LinkSpec = LinkSpec(),
+        *,
+        power: LinkPowerModel | None = None,
+        fused: bool | None = None,
+        interpret: bool | None = None,
+        block_packets: int = 64,
+    ) -> None:
+        self.spec = spec
+        self.power = power if power is not None else LinkPowerModel()
+        self._fused = fused
+        self._interpret = interpret
+        self._block_packets = block_packets
+
+    # ---------------------------------------------------------------- stages
+    def encode(self, values: jax.Array) -> jax.Array:
+        """The wire byte image of ``values`` under the encode stage."""
+        return ENCODE_STAGES[self.spec.encode](values)
+
+    def order(self, inputs: jax.Array) -> jax.Array:
+        """Per-packet transmit permutation (derived from encoded inputs)."""
+        s = self.spec
+        return make_order(
+            s.key,
+            self.encode(inputs),
+            lanes=s.input_lanes,
+            width=s.width,
+            k=s.k,
+            descending=s.descending,
+        )
+
+    def _fusable(self, weights: jax.Array | None) -> bool:
+        s = self.spec
+        return (
+            s.key in ("acc", "app")
+            and s.pack in ("lane", "row")
+            and (weights is None or s.symmetric)
+        )
+
+    # ------------------------------------------------------------- packet TX
+    def run(
+        self, inputs: jax.Array, weights: jax.Array | None = None
+    ) -> TxResult:
+        """Transmit P packets: returns permutation, wire stream and BT.
+
+        ``inputs`` is (P, elems_per_packet); ``weights`` (optional) is
+        (P, elems_per_packet) for the symmetric paired framing or
+        (P, weight_elems_per_packet) for asymmetric links (framed unordered,
+        see DESIGN.md §1).
+        """
+        s = self.spec
+        if weights is not None:
+            _validate_paired(inputs, weights, s)
+        elif inputs.shape[-1] != s.elems_per_packet:
+            raise ValueError(
+                f"packet payload {inputs.shape[-1]} != "
+                f"flits*input_lanes = {s.elems_per_packet}"
+            )
+        xi = self.encode(inputs)
+        wi = self.encode(weights) if weights is not None else None
+        fused = self._fused if self._fused is not None else self._fusable(weights)
+        if fused and not self._fusable(weights):
+            raise ValueError(
+                f"spec (key={s.key!r}, pack={s.pack!r}, symmetric={s.symmetric})"
+                " cannot run fused"
+            )
+        if fused:
+            res = psu_stream(
+                xi,
+                wi,
+                width=s.width,
+                k=None if s.key == "acc" else s.k,
+                descending=s.descending,
+                input_lanes=s.input_lanes,
+                weight_lanes=s.weight_lanes if wi is not None else None,
+                pack=s.pack,
+                block_packets=self._block_packets,
+                interpret=self._interpret,
+            )
+            return TxResult(
+                res.order, res.rank, res.stream, res.bt_input, res.bt_weight, True
+            )
+        order = make_order(
+            s.key, xi, lanes=s.input_lanes, width=s.width, k=s.k,
+            descending=s.descending,
+        )
+        stream = assemble_stream(xi, wi, s, order, s.pack)
+        bt_i = bt_count(stream[:, : s.input_lanes], interpret=self._interpret)
+        if wi is not None and s.weight_lanes:
+            bt_w = bt_count(stream[:, s.input_lanes :], interpret=self._interpret)
+        else:
+            bt_w = jnp.int32(0)
+        return TxResult(order, None, stream, bt_i, bt_w, False)
+
+    def transmit(
+        self, inputs: jax.Array, weights: jax.Array | None = None
+    ) -> jax.Array:
+        """The (T, lanes) uint8 wire image of the packets."""
+        return self.run(inputs, weights).stream
+
+    def measure(
+        self,
+        inputs: jax.Array,
+        weights: jax.Array | None = None,
+        name: str = "stream",
+    ) -> LinkReport:
+        """BT / energy report for transmitting the packets under this spec."""
+        res = self.run(inputs, weights)
+        num_flits = int(res.stream.shape[0])
+        bt_i, bt_w = int(res.bt_input), int(res.bt_weight)
+        return LinkReport(
+            name,
+            num_flits,
+            bt_i,
+            bt_w,
+            fused=res.fused,
+            energy_pj=self.power.link_energy_pj(bt_i + bt_w, num_flits),
+        )
+
+    # --------------------------------------------------------------- row TX
+    def row_order(self, rows: jax.Array) -> jax.Array:
+        """Transmit order of whole rows of an (R, B) byte matrix under this
+        spec's key stage ('none' or 'row_bucket', DESIGN.md §3.3)."""
+        s = self.spec
+        if s.key == "none":
+            return jnp.arange(rows.shape[0], dtype=jnp.int32)
+        if s.key != "row_bucket":
+            raise ValueError(
+                f"row streams use key 'none' or 'row_bucket', got {s.key!r}"
+            )
+        keys = row_bucket_keys(rows, s.k, width=s.width)
+        if s.descending:
+            keys = (s.k - 1) - keys
+        return counting_sort_indices(keys, s.k)
+
+    def transmit_rows(self, rows: jax.Array) -> jax.Array:
+        """Wire image of an (R, B) byte-row stream (weight matrix traffic,
+        DESIGN.md §3.3): encode, order whole rows by popcount bucket, lay
+        out with the pack stage ('row' = HBM-natural, 'col' = interleaved)."""
+        enc = self.encode(rows)
+        ordered = jnp.take(enc, self.row_order(enc), axis=0)
+        return PACK_STAGES[self.spec.pack].stream(
+            ordered, self.spec.bytes_per_flit
+        ).astype(jnp.uint8)
+
+    def measure_rows(self, rows: jax.Array, name: str = "rows") -> LinkReport:
+        """BT / energy report for streaming ``rows`` under this spec."""
+        stream = self.transmit_rows(rows)
+        bt = int(bt_count(stream, interpret=self._interpret))
+        num_flits = int(stream.shape[0])
+        return LinkReport(
+            name,
+            num_flits,
+            bt,
+            0,
+            fused=False,
+            energy_pj=self.power.link_energy_pj(bt, num_flits),
+        )

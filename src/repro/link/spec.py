@@ -1,0 +1,90 @@
+"""`LinkSpec` — the one dataclass that configures the whole TX pipeline.
+
+A spec describes both the *framing* of the physical link (DESIGN.md §1: a
+128-bit link carrying 4-flit packets, each flit split between input and
+weight byte lanes) and the *stage selection* of the transmit pipeline built
+on it (DESIGN.md §3.2):
+
+    key     — how sort keys are derived ('none' | 'column_major' | 'acc' |
+              'app' | 'row_bucket'),
+    encode  — wire byte recoding ('identity' | 'sign_magnitude'),
+    pack    — flit layout ('row' | 'lane' | 'col'),
+
+plus the key-stage parameters (element width W, APP bucket count k, sort
+direction).  ``LinkSpec`` is a drop-in superset of the old
+``repro.core.link.LinkConfig`` (its first four fields, defaults and derived
+properties are identical), so legacy framing-only callers keep working
+through the ``LinkConfig`` alias.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = ["LinkSpec"]
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkSpec:
+    """Framing + stage configuration of one transmit pipeline.
+
+    Framing defaults reproduce the paper's Table-I setup.
+    """
+
+    # --- framing (physical link) ---
+    width_bits: int = 128  # physical link width
+    flits_per_packet: int = 4
+    input_lanes: int = 8  # bytes of input data per flit
+    weight_lanes: int = 8  # bytes of weight data per flit
+
+    # --- stage selection ---
+    key: str = "acc"  # repro.link.stages.KEY_STAGES
+    encode: str = "identity"  # repro.link.stages.ENCODE_STAGES
+    pack: str = "lane"  # repro.link.stages.PACK_STAGES
+
+    # --- key-stage parameters ---
+    width: int = 8  # element bit width W of the sort keys
+    k: int = 4  # APP / row-bucket count
+    descending: bool = False
+
+    @property
+    def bytes_per_flit(self) -> int:
+        return self.width_bits // 8
+
+    @property
+    def elems_per_packet(self) -> int:
+        """Input bytes carried per packet."""
+        return self.flits_per_packet * self.input_lanes
+
+    @property
+    def weight_elems_per_packet(self) -> int:
+        """Weight bytes carried per packet (== elems_per_packet only for the
+        symmetric paired framing)."""
+        return self.flits_per_packet * self.weight_lanes
+
+    @property
+    def symmetric(self) -> bool:
+        """Input/weight lanes match: (input, weight) pairs move together."""
+        return self.input_lanes == self.weight_lanes
+
+    def __post_init__(self) -> None:
+        if self.input_lanes + self.weight_lanes != self.bytes_per_flit:
+            raise ValueError(
+                "input_lanes + weight_lanes must fill the flit: "
+                f"{self.input_lanes}+{self.weight_lanes} != {self.bytes_per_flit}"
+            )
+        # stage names are validated against the registries lazily (the
+        # registries live in .stages, which must stay importable first)
+        from . import stages
+
+        for field, registry in (
+            ("key", stages.KEY_STAGES),
+            ("encode", stages.ENCODE_STAGES),
+            ("pack", stages.PACK_STAGES),
+        ):
+            value = getattr(self, field)
+            if value not in registry:
+                raise ValueError(
+                    f"unknown {field} stage {value!r}; "
+                    f"choose from {sorted(registry)}"
+                )

@@ -8,10 +8,11 @@ Distributed-optimization tricks for the ICI collective term (DESIGN.md §5):
     DP degree <= 258), and an error-feedback buffer carrying quantization
     residue to the next step (EF-SGD semantics).
   * **popcount-ordered egress** (the paper's technique on ICI): a *static*
-    permutation — derived from the corresponding weight bytes, identical on
-    all replicas, so the reduction stays aligned — reorders the int8 wire
-    image so flits with similar Hamming weight are adjacent.  BT reduction is
-    measured by ``repro.traffic``.
+    permutation — derived from the corresponding weight bytes via
+    ``repro.traffic.egress_permutation``, identical on all replicas, so the
+    reduction stays aligned — reorders the int8 wire image so flits with
+    similar Hamming weight are adjacent.  BT reduction is measured by the
+    ``repro.link`` TX pipeline (DESIGN.md §8).
 
 These run inside ``shard_map`` over the data axes, where the wire format is
 explicit; the GSPMD path (default dry-run) keeps implicit fp32 all-reduce.

@@ -1,9 +1,11 @@
 """Serving loop: batched prefill + greedy/sampled decode with KV caches.
 
 Also hosts the serving-side integration of the paper's technique: before
-serving, ``apply_weight_ordering`` permutes contraction axes so the decode
-weight stream (the dominant HBM traffic at batch decode) has popcount-
-monotone rows; ``traffic_report`` quantifies the modeled BT saving.
+serving, ``repro.traffic.apply_weight_ordering`` permutes contraction axes
+so the decode weight stream (the dominant HBM traffic at batch decode) has
+popcount-monotone rows; the modeled BT saving is quantified by the
+``repro.link`` row-stream TX pipeline (``TxPipeline.measure_rows``, see
+examples/serve_decode.py).
 """
 
 from __future__ import annotations

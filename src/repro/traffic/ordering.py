@@ -1,6 +1,11 @@
 """Popcount-ordering applied to real model traffic — the paper's technique
 as a first-class framework feature (DESIGN.md §3.3).
 
+This module owns the *model-side* integration points (which tensors may be
+permuted, and how, without changing results); the stream mechanics (encode /
+row-bucket keys / flit layout / BT measurement) live in the unified TX
+pipeline, :mod:`repro.link`, and are delegated to it.
+
 Three integration points, all exploiting order-insensitive accumulation:
 
   1. **Contraction-axis weight permutation** (`apply_mlp_ordering`,
@@ -20,9 +25,9 @@ Three integration points, all exploiting order-insensitive accumulation:
      from the paper's per-packet sorting, DESIGN.md §8).
 
   3. **BT accounting** (`stream_bt_report`): models any tensor as a 128-bit
-     flit stream and measures bit transitions before/after ordering with the
-     Pallas BT kernel — this is what feeds the link-energy column of the
-     roofline report.
+     flit stream and measures bit transitions before/after ordering via a
+     ``repro.link.TxPipeline`` row-stream measurement — this is what feeds
+     the link-energy column of the roofline report.
 """
 
 from __future__ import annotations
@@ -34,12 +39,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.popcount import popcount
-from repro.core.sorting import counting_sort_indices
-from repro.kernels import bt_count
+from repro.link import LinkSpec, TxPipeline, row_bucket_keys as _link_row_bucket_keys
+from repro.link import tensor_flit_stream, to_sign_magnitude  # noqa: F401  (re-export)
 from repro.models.config import ModelConfig
 
 Strategy = Literal["none", "acc", "app"]
+
+
+def _row_levels(strategy: Strategy, k: int) -> int:
+    """ACC keeps the element-granularity 9-level mapping; APP coarsens to k."""
+    return 9 if strategy == "acc" else k
 
 
 # --------------------------------------------------------------------------
@@ -55,45 +64,22 @@ def int8_view(w: jax.Array) -> jax.Array:
     return jnp.clip(jnp.round(w.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
 
 
-def to_sign_magnitude(q_int8: jax.Array) -> jax.Array:
-    """Recode two's-complement int8 as sign-magnitude bytes.
-
-    Beyond-paper optimization (EXPERIMENTS.md §Arch-BT): two's complement
-    decorrelates popcount from magnitude (-1 = 0xFF has popcount 8), which
-    both halves the ordering signal and inflates baseline BT.  Sign-magnitude
-    makes popcount monotone in |value| — near-zero weights become near-zero
-    bytes — cutting weight-stream BT by ~50 % *before* any ordering.  In
-    hardware this is one XOR per bit at the link interface.
-    """
-    q = q_int8.astype(jnp.int16)
-    sign = (q < 0).astype(jnp.uint8) << 7
-    return (sign | jnp.abs(q).astype(jnp.uint8)).astype(jnp.uint8)
-
-
 def row_bucket_keys(
     rows_int8: jax.Array, strategy: Strategy, k: int = 4
 ) -> jax.Array:
-    """Bucket key per row of an (R, B) int8 matrix.
-
-    Row key = total '1'-bit count of the row's bytes, mapped to buckets the
-    same way the paper maps element popcounts: ACC keeps the exact count
-    quantised to W+1=9 levels (matching the element-granularity datapath),
-    APP coarsens to k buckets.
-    """
-    bits = popcount(rows_int8.astype(jnp.uint8), 8).sum(axis=-1)  # (R,)
-    nbytes = rows_int8.shape[-1]
-    max_bits = 8 * nbytes
-    levels = 9 if strategy == "acc" else k
-    return (bits * levels) // (max_bits + 1)
+    """Bucket key per row of an (R, B) int8 matrix (see
+    :func:`repro.link.row_bucket_keys` for the mapping)."""
+    return _link_row_bucket_keys(
+        rows_int8.astype(jnp.uint8), _row_levels(strategy, k)
+    )
 
 
 def row_order(rows_int8: jax.Array, strategy: Strategy, k: int = 4) -> jax.Array:
     """Stable comparison-free sort order of rows by popcount bucket."""
     if strategy == "none":
         return jnp.arange(rows_int8.shape[0], dtype=jnp.int32)
-    levels = 9 if strategy == "acc" else k
-    keys = row_bucket_keys(rows_int8, strategy, k)
-    return counting_sort_indices(keys, levels)
+    pipe = TxPipeline(_row_spec(strategy, k, sign_magnitude=False, layout="row"))
+    return pipe.row_order(rows_int8.astype(jnp.uint8))
 
 
 # --------------------------------------------------------------------------
@@ -181,6 +167,17 @@ def apply_weight_ordering(
 # --------------------------------------------------------------------------
 
 
+def _host_bitwise_count(bytes_u8: np.ndarray) -> np.ndarray:
+    """Host-side per-byte popcount with a NumPy<2 fallback.
+
+    ``np.bitwise_count`` is NumPy 2.x only; older NumPy gets the
+    ``unpackbits`` formulation (identical results for uint8 views).
+    """
+    if hasattr(np, "bitwise_count"):
+        return np.bitwise_count(bytes_u8)
+    return np.unpackbits(bytes_u8[..., None], axis=-1).sum(axis=-1)
+
+
 def egress_permutation(
     weights_flat_int8: jax.Array, packet: int = 64, strategy: Strategy = "app", k: int = 4
 ) -> tuple[np.ndarray, np.ndarray]:
@@ -192,8 +189,8 @@ def egress_permutation(
     m = weights_flat_int8.shape[0]
     usable = (m // packet) * packet
     w = np.asarray(weights_flat_int8[:usable]).reshape(-1, packet)
-    bits = np.bitwise_count(w.view(np.uint8)).astype(np.int32)
-    levels = 9 if strategy == "acc" else k
+    bits = _host_bitwise_count(w.view(np.uint8)).astype(np.int32)
+    levels = _row_levels(strategy, k)
     keys = (bits * levels) // 9
     order = np.argsort(keys, axis=1, kind="stable")
     base = np.arange(0, usable, packet, dtype=np.int64)[:, None]
@@ -205,7 +202,7 @@ def egress_permutation(
 
 
 # --------------------------------------------------------------------------
-# BT accounting over modeled flit streams
+# BT accounting over modeled flit streams (delegates to repro.link)
 # --------------------------------------------------------------------------
 
 
@@ -221,15 +218,19 @@ class BTStreamReport:
         return 1.0 - self.bt_ordered / max(self.bt_none, 1e-9)
 
 
-def tensor_flit_stream(t_int8: jax.Array, lanes: int = 16) -> jax.Array:
-    """View a tensor's int8 image as a (T, lanes) flit stream (128-bit link).
-
-    Rows stream in the tensor's native last-axis-major order — for a weight
-    matrix that is exactly the HBM row stream the decode path reads.
-    """
-    flat = t_int8.reshape(-1)
-    usable = (flat.shape[0] // lanes) * lanes
-    return flat[:usable].reshape(-1, lanes)
+def _row_spec(
+    strategy: Strategy, k: int, sign_magnitude: bool, layout: str
+) -> LinkSpec:
+    return LinkSpec(
+        width_bits=128,
+        flits_per_packet=1,
+        input_lanes=16,
+        weight_lanes=0,
+        key="none" if strategy == "none" else "row_bucket",
+        encode="sign_magnitude" if sign_magnitude else "identity",
+        pack="col" if layout == "col" else "row",
+        k=_row_levels(strategy, k),
+    )
 
 
 def stream_bt_report(
@@ -249,18 +250,23 @@ def stream_bt_report(
     column-major so consecutive flits carry *adjacent rows in the sorted
     order* — the layout under which row ordering has leverage (see the
     measured trade-off in EXPERIMENTS.md §Arch-BT).
+
+    Implemented as two ``repro.link.TxPipeline`` row-stream measurements
+    (baseline spec with key='none', ordered spec as configured).
     """
     t8 = int8_view(tensor)
     mat = jnp.moveaxis(t8, row_axis, 0).reshape(t8.shape[row_axis], -1)
-    if sign_magnitude:
-        mat = to_sign_magnitude(mat)
-
-    def stream(m):
-        mm = m.T if layout == "col" else m
-        return tensor_flit_stream(mm, lanes)
-
-    base_stream = stream(mat)
-    bt0 = int(bt_count(base_stream))
-    order = row_order(mat, strategy, k)
-    bt1 = int(bt_count(stream(jnp.take(mat, order, axis=0))))
-    return BTStreamReport(name, base_stream.shape[0], bt0, bt1)
+    # encode is part of BOTH specs: the baseline wire image is the encoded
+    # one, so the report isolates the *ordering* gain (the encoding gain is
+    # measured by comparing reports with sign_magnitude on/off)
+    base_spec = dataclasses.replace(
+        _row_spec("none", k, sign_magnitude, layout),
+        width_bits=lanes * 8, input_lanes=lanes,
+    )
+    ord_spec = dataclasses.replace(
+        _row_spec(strategy, k, sign_magnitude, layout),
+        width_bits=lanes * 8, input_lanes=lanes,
+    )
+    base = TxPipeline(base_spec).measure_rows(mat, name=name)
+    ordered = TxPipeline(ord_spec).measure_rows(mat, name=name)
+    return BTStreamReport(name, base.num_flits, base.total_bt, ordered.total_bt)

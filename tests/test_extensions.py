@@ -16,7 +16,10 @@ from repro.serve import cache_bytes, dequantize_cache, quantize_cache
 def test_kv_quant_roundtrip_and_decode():
     cfg = smoke_config("internlm2-1.8b")
     params = init_params(cfg, jax.random.key(0))
-    tok = jax.random.randint(jax.random.key(1), (2, 13), 0, cfg.vocab)
+    # 8 prompts: with a random-init model the logit gaps are tiny, so the
+    # top-1 agreement check below needs more than a couple of samples to be
+    # statistically meaningful (2 near-tied prompts can both flip)
+    tok = jax.random.randint(jax.random.key(1), (8, 13), 0, cfg.vocab)
     _, cache = prefill(params, cfg, tok[:, :12], max_len=16)
 
     qcache = quantize_cache(cache)

@@ -97,6 +97,31 @@ def test_acc_reduces_bt_on_uniform_paired_traffic():
     assert red_app > 0.7 * red_acc
 
 
+def test_paired_stream_asymmetric_lanes():
+    """Regression: input_lanes != weight_lanes used to crash in the flit
+    concatenate (different flit counts per side).  The weight side now
+    carries flits*weight_lanes bytes per packet, framed per flit."""
+    cfg = LinkConfig(input_lanes=12, weight_lanes=4)
+    assert cfg.elems_per_packet == 48 and cfg.weight_elems_per_packet == 16
+    inp = rand_packets(10, 48, 7)
+    wgt = rand_packets(10, 16, 8)
+    s = paired_stream(inp, wgt, cfg, "acc", pack="row")
+    assert s.shape == (40, 16)  # 10 packets x 4 flits x 16 bytes
+    # per-flit split: first 12 lanes input bytes, last 4 weight bytes —
+    # weight side framed natively (no input-derived permutation applies)
+    w_half = np.asarray(s)[:, 12:].reshape(10, -1)
+    np.testing.assert_array_equal(w_half, np.asarray(wgt))
+    rep = bt_report(s, cfg.input_lanes)
+    assert float(rep.overall_bt_per_flit) > 0
+
+
+def test_paired_stream_asymmetric_wrong_payload_raises():
+    cfg = LinkConfig(input_lanes=12, weight_lanes=4)
+    inp, wgt = rand_packets(4, 48, 1), rand_packets(4, 48, 2)
+    with pytest.raises(ValueError, match="weight payload"):
+        paired_stream(inp, wgt, cfg, "none")
+
+
 def test_power_model_transfer():
     m = LinkPowerModel()
     # calibrated to the paper's ACC point: 20.42 % BT -> 18.27 % power

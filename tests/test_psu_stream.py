@@ -1,0 +1,204 @@
+"""Fused TX-pipeline kernel + repro.link subsystem.
+
+The load-bearing claim: the single-launch ``psu_stream`` kernel is bit-exact
+against the unfused ``repro.core.sorting`` reference composition (sort ->
+gather -> flit-pack -> BT count) across strategies, widths, directions and
+non-block-multiple packet counts — so the fused hot path can replace the
+three-launch path everywhere without changing any reported number.
+"""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    apply_order,
+    bit_transitions,
+    bucket_map,
+    counting_sort_indices,
+    counting_sort_ranks,
+    popcount,
+)
+from repro.kernels import psu_stream
+from repro.link import LinkReport, LinkSpec, TxPipeline
+
+
+def _sorting_reference(x, w, *, width, k, descending, input_lanes, weight_lanes,
+                       pack="lane"):
+    """Unfused reference built ONLY from repro.core.sorting + repro.core.bt:
+    the one-hot counting-sort formulation the fused kernel replaced."""
+    keys = popcount(x, width)
+    nb = width + 1
+    if k is not None:
+        keys = bucket_map(keys, width, k)
+        nb = k
+    if descending:
+        keys = (nb - 1) - keys
+    rank = counting_sort_ranks(keys, nb)
+    order = counting_sort_indices(keys, nb)
+    p, n = x.shape
+    flits = n // input_lanes
+
+    def fl(values, lanes):
+        if pack == "lane":
+            return values.reshape(p, lanes, flits).transpose(0, 2, 1)
+        return values.reshape(p, flits, lanes)
+
+    halves = [fl(apply_order(x.astype(jnp.int32), order), input_lanes)]
+    if weight_lanes:
+        halves.append(fl(apply_order(w.astype(jnp.int32), order), weight_lanes))
+    stream = jnp.concatenate(halves, axis=-1).reshape(
+        p * flits, input_lanes + weight_lanes
+    )
+    bt_i = int(bit_transitions(stream[:, :input_lanes]))
+    bt_w = int(bit_transitions(stream[:, input_lanes:])) if weight_lanes else 0
+    return order, rank, stream.astype(jnp.uint8), bt_i, bt_w
+
+
+@pytest.mark.parametrize("k", [None, 4])  # ACC / APP
+@pytest.mark.parametrize("width", [4, 8])
+@pytest.mark.parametrize("descending", [False, True])
+@pytest.mark.parametrize("p", [64, 65, 7, 130])  # incl. non-block-multiples
+def test_fused_matches_core_sorting_reference(k, width, descending, p):
+    rng = np.random.default_rng(hash((k, width, descending, p)) % 2**31)
+    x = jnp.asarray(rng.integers(0, 256, (p, 32), dtype=np.uint8))
+    w = jnp.asarray(rng.integers(0, 256, (p, 32), dtype=np.uint8))
+    res = psu_stream(x, w, width=width, k=k, descending=descending,
+                     block_packets=64)
+    oref, rref, sref, bi, bw = _sorting_reference(
+        x, w, width=width, k=k, descending=descending,
+        input_lanes=8, weight_lanes=8,
+    )
+    np.testing.assert_array_equal(np.asarray(res.order), np.asarray(oref))
+    np.testing.assert_array_equal(np.asarray(res.rank), np.asarray(rref))
+    np.testing.assert_array_equal(np.asarray(res.stream), np.asarray(sref))
+    assert int(res.bt_input) == bi
+    assert int(res.bt_weight) == bw
+
+
+@pytest.mark.parametrize("pack", ["lane", "row"])
+def test_fused_input_only_and_row_pack(pack):
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.integers(0, 256, (33, 48), dtype=np.uint8))
+    res = psu_stream(x, None, k=4, input_lanes=16, pack=pack, block_packets=8)
+    oref, rref, sref, bi, _ = _sorting_reference(
+        x, x, width=8, k=4, descending=False,
+        input_lanes=16, weight_lanes=0, pack=pack,
+    )
+    np.testing.assert_array_equal(np.asarray(res.order), np.asarray(oref))
+    np.testing.assert_array_equal(np.asarray(res.stream), np.asarray(sref))
+    assert int(res.bt_input) == bi
+    assert int(res.bt_weight) == 0
+
+
+# ---------------------------------------------------------------- TxPipeline
+
+
+def test_pipeline_fused_and_staged_paths_agree():
+    rng = np.random.default_rng(5)
+    spec = LinkSpec(key="app", k=4)
+    inp = jnp.asarray(rng.integers(0, 256, (50, spec.elems_per_packet), np.uint8))
+    wgt = jnp.asarray(rng.integers(0, 256, (50, spec.elems_per_packet), np.uint8))
+    fused = TxPipeline(spec, fused=True).measure(inp, wgt)
+    staged = TxPipeline(spec, fused=False).measure(inp, wgt)
+    assert fused.fused and not staged.fused
+    assert fused.input_bt == staged.input_bt
+    assert fused.weight_bt == staged.weight_bt
+    assert fused.num_flits == staged.num_flits
+    # streams agree byte-for-byte too
+    np.testing.assert_array_equal(
+        np.asarray(TxPipeline(spec, fused=True).transmit(inp, wgt)),
+        np.asarray(TxPipeline(spec, fused=False).transmit(inp, wgt)),
+    )
+
+
+def test_pipeline_matches_legacy_measure():
+    from repro.core import measure as legacy_measure
+
+    rng = np.random.default_rng(6)
+    inp = jnp.asarray(rng.integers(0, 256, (40, 32), np.uint8))
+    wgt = jnp.asarray(rng.integers(0, 256, (40, 32), np.uint8))
+    for key in ("none", "column_major", "acc", "app"):
+        rep = TxPipeline(LinkSpec(key=key)).measure(inp, wgt)
+        old = legacy_measure(inp, wgt, strategy=key)
+        assert rep.overall_bt_per_flit == pytest.approx(
+            float(old.overall_bt_per_flit), rel=1e-6
+        )
+
+
+def test_pipeline_encode_stage_changes_wire_image():
+    rng = np.random.default_rng(7)
+    q = jnp.asarray(rng.integers(-127, 128, (20, 32), np.int8))
+    raw = TxPipeline(LinkSpec(key="acc")).measure(q, q)
+    sm = TxPipeline(LinkSpec(key="acc", encode="sign_magnitude")).measure(q, q)
+    assert raw.total_bt != sm.total_bt  # recoding changed the stream
+
+
+def test_pipeline_asymmetric_falls_back_to_staged():
+    rng = np.random.default_rng(8)
+    spec = LinkSpec(input_lanes=12, weight_lanes=4, key="acc")
+    inp = jnp.asarray(rng.integers(0, 256, (10, spec.elems_per_packet), np.uint8))
+    wgt = jnp.asarray(
+        rng.integers(0, 256, (10, spec.weight_elems_per_packet), np.uint8)
+    )
+    rep = TxPipeline(spec).measure(inp, wgt)
+    assert not rep.fused
+    assert rep.num_flits == 10 * spec.flits_per_packet
+    with pytest.raises(ValueError):
+        TxPipeline(spec, fused=True).measure(inp, wgt)
+
+
+def test_pipeline_row_stream_col_layout():
+    rng = np.random.default_rng(9)
+    rows = jnp.asarray(
+        (rng.normal(size=(128, 64)) * rng.lognormal(0, 1.2, (128, 1)) * 20)
+        .clip(-127, 127).astype(np.int8)
+    )
+    spec = LinkSpec(
+        flits_per_packet=1, input_lanes=16, weight_lanes=0,
+        key="row_bucket", encode="sign_magnitude", pack="col", k=9,
+    )  # k=9 = ACC-granularity row buckets
+    base = TxPipeline(dataclasses.replace(spec, key="none")).measure_rows(rows)
+    ordered = TxPipeline(spec).measure_rows(rows)
+    assert base.num_flits == ordered.num_flits == 128 * 64 // 16
+    # ordering magnitude-structured rows under col layout reduces BT
+    assert ordered.total_bt < base.total_bt
+
+
+def test_link_report_accounting():
+    rep = LinkReport("x", num_flits=10, input_bt=30, weight_bt=10, fused=True)
+    base = LinkReport("x", num_flits=10, input_bt=50, weight_bt=30)
+    assert rep.total_bt == 40
+    assert rep.overall_bt_per_flit == pytest.approx(4.0)
+    assert rep.reduction_vs(base) == pytest.approx(0.5)
+    bt = rep.to_bt_report()
+    assert float(bt.overall_bt_per_flit) == pytest.approx(4.0)
+
+
+def test_spec_validates_stage_names_and_framing():
+    with pytest.raises(ValueError):
+        LinkSpec(key="bogus")
+    with pytest.raises(ValueError):
+        LinkSpec(encode="bogus")
+    with pytest.raises(ValueError):
+        LinkSpec(input_lanes=9)  # 9 + 8 != 16
+
+
+# ------------------------------------------------------------- import shims
+
+
+def test_legacy_import_paths_still_work():
+    from repro.core.link import LinkConfig, paired_stream  # noqa: F401
+    from repro.core.ordering import ORDER_STRATEGIES, make_order
+
+    import repro.core as core
+
+    assert core.LinkConfig is LinkSpec  # the shim aliases the new spec
+    assert set(ORDER_STRATEGIES) == {"none", "column_major", "acc", "app"}
+    rng = np.random.default_rng(10)
+    x = jnp.asarray(rng.integers(0, 256, (3, 32), np.uint8))
+    order = core.make_order("acc", x, lanes=8)
+    assert order is not None and order.shape == (3, 32)
+    assert make_order is core.make_order
