@@ -1,0 +1,176 @@
+"""NoC BT benchmark: the sorting unit inside a multi-router fabric.
+
+Three report groups (DESIGN.md §9):
+
+  * **topology x ordering** — fabric-total BT / energy for conv-platform
+    traffic on a mesh and a ring, under sort-at-source and sort-at-every-
+    hop, precise (ACC) vs approximate (APP) vs unsorted.
+  * **hop sweep** — one unicast flow at increasing XY distance: with
+    sort-at-source, every extra hop retransmits the *already ordered*
+    stream, so the absolute BT saving scales linearly with hop count and
+    the relative reduction is preserved end-to-end.
+  * **fused vs looped** — the batched ``bt_count_links`` kernel (link axis
+    on the Pallas grid, ONE launch for the whole fabric) against looping
+    the single-stream ``bt_count`` kernel per link (two launches per link,
+    one per lane side).  Launch counts are read from the traced jaxpr, not
+    asserted by hand; wall time is reported for reference only — on CPU
+    interpret mode it tracks the Python interpreter, not TPU dispatch, and
+    can favor either path depending on shape (same caveat as
+    ``kernel_bench``'s fused-vs-unfused row: launches are the claim).
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import bt_count, bt_count_links
+from repro.link import LinkSpec
+from repro.noc import (
+    TrafficFlow,
+    conv_platform_flows,
+    expand_link_streams,
+    hop_count,
+    mesh,
+    ring,
+    simulate_noc,
+)
+
+from .datagen import im2col, synth_images
+from .kernel_bench import count_pallas_launches
+
+TINY_KWARGS = {"n_images": 1, "max_hops": 2}
+
+# (key, sort_at) design points; 'none'/'source' is the baseline fabric
+DESIGNS = [
+    ("none", "source"),
+    ("acc", "source"),
+    ("app", "source"),
+    ("acc", "hop"),
+    ("none", "hop"),
+]
+
+
+def _conv_flows(topo, src, pes, spec, n_images):
+    rng = np.random.default_rng(0)
+    imgs = synth_images(n_images, seed=7)
+    kernel = rng.integers(0, 256, (25,), dtype=np.uint8)
+    flows = []
+    for img in imgs:
+        flows.extend(
+            conv_platform_flows(
+                jnp.asarray(im2col(img, 5)), jnp.asarray(kernel),
+                topo, src, pes, spec,
+            )
+        )
+    return flows
+
+
+def run(n_images: int = 3, max_hops: int = 6) -> list[tuple[str, float, str]]:
+    rows = []
+
+    # --- topology x ordering: conv-platform traffic ---
+    fabrics = [
+        (mesh(4, 4), 0, [r for r in range(16) if r % 4]),  # PEs off col 0
+        (ring(8), 0, list(range(1, 8))),
+    ]
+    conv_flows = {}  # flows depend only on the framing, not the key/sort_at
+    for topo, src, pes in fabrics:
+        tname = f"{topo.kind}{topo.rows}x{topo.cols}"
+        conv_flows[tname] = _conv_flows(topo, src, pes, LinkSpec(), n_images)
+        base = None
+        for key, sort_at in DESIGNS:
+            spec = LinkSpec(key=key)
+            flows = conv_flows[tname]
+            t0 = time.monotonic()
+            rep = simulate_noc(topo, flows, spec, sort_at=sort_at)
+            us = (time.monotonic() - t0) * 1e6
+            if base is None:
+                base = rep
+            rows.append((
+                f"noc/{tname}/{key}-{sort_at}",
+                us,
+                f"bt={rep.total_bt} red={100 * rep.reduction_vs(base):.2f}% "
+                f"links={rep.active_links}/{rep.total_links} "
+                f"flit_hops={rep.total_flit_hops} E={rep.energy_pj / 1e3:.1f}nJ",
+            ))
+
+    # --- hop sweep: source-sorted advantage is preserved across hops ---
+    topo = mesh(4, 4)
+    rng = np.random.default_rng(1)
+    img = synth_images(1, seed=11)[0]
+    pkts = jnp.asarray(im2col(img, 5).reshape(-1)[: 96 * 32].reshape(96, 32))
+    wgts = jnp.asarray(
+        rng.integers(0, 256, pkts.shape, dtype=np.uint8)
+    )
+    # XY distances 1..max_hops from router 0, capped at the 4x4 mesh
+    # diameter (say so rather than silently covering less than asked)
+    diameter = (topo.rows - 1) + (topo.cols - 1)
+    if max_hops > diameter:
+        print(
+            f"# noc_bt: hop sweep capped at the mesh diameter "
+            f"({max_hops} requested, {diameter} possible)",
+            file=sys.stderr,
+        )
+        max_hops = diameter
+    dests = [
+        topo.router(max(0, h - (topo.cols - 1)), min(h, topo.cols - 1))
+        for h in range(1, max_hops + 1)
+    ]
+    for dst in dests:
+        h = hop_count(topo, 0, dst)
+        flow = [TrafficFlow("sweep", 0, (dst,), pkts, wgts)]
+        per_key = {}
+        for key in ("none", "acc"):
+            rep = simulate_noc(topo, flow, LinkSpec(key=key), sort_at="source")
+            per_key[key] = rep
+        red = 100 * per_key["acc"].reduction_vs(per_key["none"])
+        rows.append((
+            f"noc/hops{h}",
+            0.0,
+            f"bt_none={per_key['none'].total_bt} "
+            f"bt_acc={per_key['acc'].total_bt} red={red:.2f}% "
+            "(per-hop reduction preserved)",
+        ))
+
+    # --- fused vs looped per-link measurement ---
+    spec = LinkSpec(key="acc")
+    topo = fabrics[0][0]
+    flows = conv_flows[f"{topo.kind}{topo.rows}x{topo.cols}"]
+    ls = expand_link_streams(topo, flows, spec, sort_at="source")
+    il = spec.input_lanes
+
+    def fused(streams):
+        return bt_count_links(streams, input_lanes=il)
+
+    def looped(streams):
+        return jnp.stack([
+            jnp.stack([
+                bt_count(streams[i, :, :il]), bt_count(streams[i, :, il:])
+            ])
+            for i in range(streams.shape[0])
+        ])
+
+    np.testing.assert_array_equal(
+        np.asarray(fused(ls.streams)), np.asarray(looped(ls.streams))
+    )
+    launches = {
+        "fused": count_pallas_launches(fused, ls.streams),
+        "looped": count_pallas_launches(looped, ls.streams),
+    }
+    for name, fn in (("fused", fused), ("looped", looped)):
+        jax.block_until_ready(fn(ls.streams))  # compile/warm
+        t0 = time.monotonic()
+        for _ in range(3):
+            jax.block_until_ready(fn(ls.streams))
+        us = (time.monotonic() - t0) / 3 * 1e6
+        rows.append((
+            f"noc/per_link_bt/{name}",
+            us,
+            f"links={ls.streams.shape[0]} launches={launches[name]}",
+        ))
+    return rows

@@ -7,12 +7,17 @@ derived`` CSV (the harness contract).
   fig7_power       -> paper Fig. 6/7  (link-related + PE power reductions)
   lenet_workload   -> paper §IV-B     (conv+pool platform, PSU in the loop)
   arch_bt          -> paper §V future work (transformer traffic BT)
+  noc_bt           -> §V NoC fabric   (per-link BT across topologies/hops)
   kernel_bench     -> Pallas kernel microbenchmarks
   roofline_report  -> deliverable (g) tables from the dry-run records
+
+Set REPRO_BENCH_TINY=1 to run each module at its smoke-test shape (a
+module's optional ``TINY_KWARGS`` dict) — the CI benchmark smoke step.
 """
 
 from __future__ import annotations
 
+import os
 import sys
 import time
 
@@ -24,6 +29,7 @@ def main() -> None:
         fig7_power,
         kernel_bench,
         lenet_workload,
+        noc_bt,
         roofline_report,
         table1_bt,
     )
@@ -34,10 +40,17 @@ def main() -> None:
         ("fig7_power", fig7_power),
         ("lenet_workload", lenet_workload),
         ("arch_bt", arch_bt),
+        ("noc_bt", noc_bt),
         ("kernel_bench", kernel_bench),
         ("roofline_report", roofline_report),
     ]
     only = sys.argv[1] if len(sys.argv) > 1 else None
+    if only is not None and only not in [name for name, _ in mods]:
+        valid = ", ".join(name for name, _ in mods)
+        raise SystemExit(
+            f"unknown benchmark module {only!r}; valid names: {valid}"
+        )
+    tiny = os.environ.get("REPRO_BENCH_TINY", "") not in ("", "0")
     print("name,us_per_call,derived")
     failures = 0
     for name, mod in mods:
@@ -45,7 +58,8 @@ def main() -> None:
             continue
         t0 = time.monotonic()
         try:
-            rows = mod.run()
+            kwargs = getattr(mod, "TINY_KWARGS", {}) if tiny else {}
+            rows = mod.run(**kwargs)
         except Exception as e:  # keep the harness running; report the failure
             print(f"{name},0,FAILED: {type(e).__name__}: {e}")
             failures += 1

@@ -36,6 +36,8 @@ PAPER_INPUT = {"none": 31.035, "column_major": 26.004, "acc": 22.333, "app": 22.
 
 STRATS = ("none", "column_major", "acc", "app")
 
+TINY_KWARGS = {"packets": 512, "conv_images": 2}  # CI smoke (REPRO_BENCH_TINY=1)
+
 
 def _input_only_spec(strat: str, elems: int, lanes: int = 16, k: int = 4) -> LinkSpec:
     """Spec for one PE's input-side link: all lanes carry input bytes."""
@@ -55,7 +57,7 @@ def _measure_separate(vals, strat, lanes=16, k=4):
     return pipe.measure(x).overall_bt_per_flit
 
 
-def run(packets: int = 20000) -> list[tuple[str, float, str]]:
+def run(packets: int = 20000, conv_images: int = 24) -> list[tuple[str, float, str]]:
     rows = []
 
     # --- paired uniform framing (paper's literal setup) ---
@@ -75,8 +77,8 @@ def run(packets: int = 20000) -> list[tuple[str, float, str]]:
         ))
 
     # --- conv-traffic model (reproduces the paper's magnitudes) ---
-    inp, wgt = conv_streams()
-    inp_cm, wgt_cm = conv_streams(column_major=True)
+    inp, wgt = conv_streams(n_images=conv_images)
+    inp_cm, wgt_cm = conv_streams(n_images=conv_images, column_major=True)
     t0 = time.monotonic()
     base_i = _measure_separate(inp, "none")
     base_w = _measure_separate(wgt, "none")

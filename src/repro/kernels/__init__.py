@@ -4,11 +4,14 @@
 #   psu_stream.py - fused TX pipeline: sort -> reorder -> pack -> BT count
 #                   in one launch (the repro.link hot path, DESIGN.md §3.2)
 #   btcount.py    - bit-transition counting over flit streams (the metric)
+#   bt_links.py   - batched per-link BT over a whole NoC's streams in one
+#                   launch (the repro.noc hot path, DESIGN.md §9)
 #   quantize.py   - int8 egress quantizer for the compressed all-reduce path
 # ops.py holds the jit'd wrappers, ref.py the pure-jnp oracles.
 from .ops import (
     PsuStreamResult,
     bt_count,
+    bt_count_links,
     default_interpret,
     psu_reorder,
     psu_sort,
@@ -22,6 +25,7 @@ __all__ = [
     "psu_stream",
     "PsuStreamResult",
     "bt_count",
+    "bt_count_links",
     "quantize_egress",
     "default_interpret",
 ]

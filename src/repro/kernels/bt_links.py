@@ -1,0 +1,96 @@
+"""Pallas TPU kernel: batched per-link bit-transition counting.
+
+The NoC simulator (``repro.noc``) accounts BT on every directed link of a
+multi-router fabric; looping the single-stream ``bt_count`` kernel over
+links costs one launch per link (a 4x4 mesh has 48 directed links, an 8x8
+mesh 224).  This kernel puts the link axis on the grid instead: one launch
+reduces a (links, flits, byte-lanes) stream tensor to per-link
+(input-side, weight-side) BT partials, reusing the ``psu_stream`` popcount
+machinery for the XOR popcounts.
+
+Like ``btcount.py``, each grid step reduces a shifted-view block (rows
+[0, T-1) vs rows [1, T) of every link) with no cross-block carry.  All row
+padding — the ``ops.py`` wrapper's block rounding and the jagged-stream
+stacking in ``repro.noc.simulate`` — REPEATS the last flit instead of
+appending zeros: the views are sliced from the padded stream, so a zero row
+would fabricate a last-flit -> 0 boundary, while a repeated flit XORs with
+its copy and flips nothing.  The per-link totals therefore stay exact.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .psu import _popcount_bits
+
+__all__ = ["bt_links_pallas"]
+
+
+def _bt_links_kernel(a_ref, b_ref, out_ref, *, width: int, input_lanes: int):
+    a = a_ref[...].astype(jnp.int32)  # (BL, BR, lanes)
+    b = b_ref[...].astype(jnp.int32)
+    flips = _popcount_bits(jnp.bitwise_xor(a, b), width)
+    lanes = a.shape[-1]
+    out_ref[:, 0, 0] = flips[..., :input_lanes].sum(axis=(1, 2))
+    if input_lanes < lanes:
+        out_ref[:, 0, 1] = flips[..., input_lanes:].sum(axis=(1, 2))
+    else:
+        out_ref[:, 0, 1] = jnp.zeros_like(out_ref[:, 0, 1])
+
+
+def bt_links_pallas(
+    streams: jax.Array,
+    *,
+    input_lanes: int,
+    width: int = 8,
+    block_links: int = 8,
+    block_rows: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Per-link (input-side, weight-side) BT of a (L, T, lanes) stream batch.
+
+    Args:
+      streams: (L, T, lanes) integer array; row t of link l is flit t on
+        that link.  L must be a multiple of ``block_links`` and T - 1 of
+        ``block_rows`` (the ``ops.py`` wrapper rounds up: rows by repeating
+        each link's last flit, links with all-zero streams — both
+        BT-neutral).
+      input_lanes: byte lanes [0, input_lanes) are the input side, the rest
+        the weight side (DESIGN.md §1).
+      width: bits per element (8 for byte lanes).
+      block_links / block_rows: grid block shape.
+      interpret: run the kernel body in Python (CPU validation mode).
+
+    Returns:
+      int32 (L, R_blocks, 2) per-block partials; sum over axis 1 for the
+      per-link (input, weight) totals.
+    """
+    links, t, lanes = streams.shape
+    if t < 2:
+        return jnp.zeros((links, 1, 2), jnp.int32)
+    a = streams[:, :-1].astype(jnp.int32)
+    b = streams[:, 1:].astype(jnp.int32)
+    rows = t - 1
+    if links % block_links != 0:
+        raise ValueError(f"L={links} not a multiple of block_links={block_links}")
+    if rows % block_rows != 0:
+        raise ValueError(f"T-1={rows} not a multiple of block_rows={block_rows}")
+    grid = (links // block_links, rows // block_rows)
+    kern = functools.partial(
+        _bt_links_kernel, width=width, input_lanes=input_lanes
+    )
+    spec = pl.BlockSpec((block_links, block_rows, lanes), lambda i, j: (i, j, 0))
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[spec, spec],
+        out_specs=pl.BlockSpec((block_links, 1, 2), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct(
+            (links, rows // block_rows, 2), jnp.int32
+        ),
+        interpret=interpret,
+    )(a, b)

@@ -14,6 +14,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from .bt_links import bt_links_pallas
 from .btcount import bt_count_pallas
 from .psu import _popcount_bits, psu_sort_pallas
 from .psu_stream import psu_stream_pallas
@@ -25,6 +26,7 @@ __all__ = [
     "psu_stream",
     "PsuStreamResult",
     "bt_count",
+    "bt_count_links",
     "quantize_egress",
     "default_interpret",
 ]
@@ -196,6 +198,69 @@ def bt_count(
     return bt_count_pallas(
         stream, width=width, block_rows=block_rows, interpret=interpret
     )
+
+
+@partial(
+    jax.jit,
+    static_argnames=("input_lanes", "width", "block_links", "block_rows", "interpret"),
+)
+def bt_count_links(
+    streams: jax.Array,
+    input_lanes: int | None = None,
+    width: int = 8,
+    block_links: int = 8,
+    block_rows: int = 512,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Per-link BT of a (L, T, lanes) stream batch in ONE kernel launch.
+
+    The batched replacement for looping ``bt_count`` over the links of a
+    NoC: the link axis goes on the Pallas grid (see ``bt_links.py``).
+    Accepts any L and T; both are rounded up to the block shape internally
+    — rows by repeating each link's last flit (the kernel slices its two
+    shifted views from the padded stream, so zero rows there would
+    fabricate a last-flit -> 0 boundary; a repeated flit flips nothing),
+    links by appending all-zero streams.  Links whose real streams are
+    shorter than T must be padded by the caller the same way, with copies
+    of their last flit (``repro.noc.simulate.stack_link_streams`` does).
+
+    Args:
+      streams: (L, T, lanes) integer flit streams, one per link.
+      input_lanes: lanes carrying input bytes (rest = weight side);
+        default all lanes.
+
+    Returns:
+      int32 (L, 2): per-link (input-side, weight-side) bit transitions.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    links, t, lanes = streams.shape
+    if input_lanes is None:
+        input_lanes = lanes
+    if not 0 <= input_lanes <= lanes:
+        raise ValueError(
+            f"input_lanes={input_lanes} outside the {lanes}-lane flit"
+        )
+    if links == 0 or t < 2:
+        return jnp.zeros((links, 2), jnp.int32)
+    bl = min(block_links, max(1, links))
+    br = min(block_rows, max(1, t - 1))
+    pad_l = (-links) % bl
+    pad_r = (-(t - 1)) % br
+    # row padding repeats each link's last flit (kernel shifts internally, so
+    # zero rows would fabricate a last-flit -> 0 boundary); link padding is
+    # all-zero streams, which flip nothing
+    x = jnp.pad(streams.astype(jnp.int32), ((0, 0), (0, pad_r), (0, 0)), mode="edge")
+    x = jnp.pad(x, ((0, pad_l), (0, 0), (0, 0)))
+    partials = bt_links_pallas(
+        x,
+        input_lanes=input_lanes,
+        width=width,
+        block_links=bl,
+        block_rows=br,
+        interpret=interpret,
+    )
+    return partials.sum(axis=1)[:links]
 
 
 @partial(jax.jit, static_argnames=("block", "interpret"))

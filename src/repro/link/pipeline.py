@@ -29,13 +29,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.bt import BTReport
-from repro.core.sorting import counting_sort_indices
 from repro.kernels import bt_count, psu_stream
 
 from .framing import _validate_paired, assemble_stream
 from .power import LinkPowerModel
 from .spec import LinkSpec
-from .stages import ENCODE_STAGES, KEY_STAGES, PACK_STAGES, make_order, row_bucket_keys
+from .stages import ENCODE_STAGES, PACK_STAGES, make_order, row_bucket_order
 
 __all__ = ["TxPipeline", "TxResult", "LinkReport"]
 
@@ -237,10 +236,7 @@ class TxPipeline:
             raise ValueError(
                 f"row streams use key 'none' or 'row_bucket', got {s.key!r}"
             )
-        keys = row_bucket_keys(rows, s.k, width=s.width)
-        if s.descending:
-            keys = (s.k - 1) - keys
-        return counting_sort_indices(keys, s.k)
+        return row_bucket_order(rows, s.k, width=s.width, descending=s.descending)
 
     def transmit_rows(self, rows: jax.Array) -> jax.Array:
         """Wire image of an (R, B) byte-row stream (weight matrix traffic,

@@ -158,9 +158,13 @@ KEY_STAGES: Dict[str, KeyStage] = {
 }
 
 
-def row_bucket_order(rows: jax.Array, levels: int) -> jax.Array:
+def row_bucket_order(
+    rows: jax.Array, levels: int, *, width: int = 8, descending: bool = False
+) -> jax.Array:
     """Stable comparison-free sort order of rows by popcount bucket."""
-    keys = row_bucket_keys(rows, levels)
+    keys = row_bucket_keys(rows, levels, width=width)
+    if descending:
+        keys = (levels - 1) - keys
     return counting_sort_indices(keys, levels)
 
 

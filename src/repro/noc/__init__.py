@@ -1,0 +1,51 @@
+# The NoC interconnect subsystem: the paper's sorting unit inside a
+# multi-router fabric (DESIGN.md §9).  Every hop of a route pays switching
+# power, so per-link BT is the fabric metric; all links are measured by ONE
+# batched Pallas launch (repro.kernels.bt_count_links).
+#   topology.py - mesh / torus / ring builders + directed link tables
+#   routing.py  - deterministic XY / shortest-wrap routing, multicast trees
+#   simulate.py - flows -> per-link streams -> batched BT / energy report
+#   power.py    - per-hop energy: link wire model + router flit overhead
+#   adapters.py - real workloads (conv platform, decode weights, gradient
+#                 all-reduce) as NoC flows
+from .adapters import (
+    conv_platform_flows,
+    decode_weight_flows,
+    packetize,
+    ring_allreduce_flows,
+)
+from .power import NocPowerModel
+from .routing import hop_count, multicast_links, route, unicast_links
+from .simulate import (
+    LinkStats,
+    LinkStreams,
+    NocReport,
+    TrafficFlow,
+    expand_link_streams,
+    simulate_noc,
+    stack_link_streams,
+)
+from .topology import Topology, mesh, ring, torus
+
+__all__ = [
+    "Topology",
+    "mesh",
+    "torus",
+    "ring",
+    "route",
+    "unicast_links",
+    "multicast_links",
+    "hop_count",
+    "TrafficFlow",
+    "LinkStats",
+    "LinkStreams",
+    "NocReport",
+    "expand_link_streams",
+    "stack_link_streams",
+    "simulate_noc",
+    "NocPowerModel",
+    "packetize",
+    "conv_platform_flows",
+    "decode_weight_flows",
+    "ring_allreduce_flows",
+]

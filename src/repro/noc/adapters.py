@@ -1,0 +1,173 @@
+"""Traffic adapters: real workload tensors -> NoC flows.
+
+Three workload families from the existing layers, mapped onto fabric
+traffic patterns (DESIGN.md §9):
+
+  * **Conv platform** (paper §IV-B, ``benchmarks/lenet_workload.py``): the
+    allocation unit scatters im2col patch packets from a memory router to
+    the PE routers (unicast each), with the convolution kernel bytes riding
+    the paired weight lanes — the paper's 16-PE platform laid out on a
+    mesh.
+  * **Decode weight streams** (``repro.serve`` / ``repro.traffic``): a
+    weight matrix's int8 HBM image is one long byte stream multicast from
+    the memory-controller router to a row of PEs — the weight-broadcast
+    traffic that dominates decode.
+  * **Gradient all-reduce** (``repro.optim``): the int8 gradient wire image
+    sharded over the routers of a ring schedule, each shard hopping to the
+    next router — one step of a ring reduce-scatter, the ICI collective
+    pattern of DESIGN.md §5 on the modeled fabric.
+
+Adapters only build ``TrafficFlow``s; ordering/packing/measuring stay in
+:mod:`repro.noc.simulate`.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.link import LinkSpec, tensor_flit_stream
+from repro.traffic.ordering import int8_view
+
+from .simulate import TrafficFlow
+from .topology import Topology
+
+__all__ = [
+    "packetize",
+    "conv_platform_flows",
+    "decode_weight_flows",
+    "ring_allreduce_flows",
+]
+
+
+def packetize(data: jax.Array, elems: int) -> jax.Array:
+    """Flatten a byte tensor and shape it into (P, elems) packets (trimmed
+    to whole packets; a NoC flow transmits complete packets only)."""
+    pkts = tensor_flit_stream(jnp.ravel(data).astype(jnp.uint8), elems)
+    if pkts.shape[0] == 0:
+        raise ValueError(
+            f"payload of {data.size} bytes is smaller than one "
+            f"{elems}-byte packet"
+        )
+    return pkts
+
+
+def conv_platform_flows(
+    patches: jax.Array,
+    kernel_bytes: jax.Array,
+    topo: Topology,
+    src: int,
+    pe_routers: Sequence[int],
+    spec: LinkSpec = LinkSpec(),
+) -> list[TrafficFlow]:
+    """Scatter conv input packets to PE routers, kernels on the weight lanes.
+
+    ``patches`` is the (num_patches, window) im2col byte matrix of one
+    image; ``kernel_bytes`` one output channel's flattened kernel.  Packets
+    are dealt round-robin over ``pe_routers``; when the spec has weight
+    lanes each packet pairs with the cyclically-tiled kernel bytes (the
+    repeated-kernel stream of ``benchmarks/lenet_workload.py``).
+    """
+    topo.coords(src)  # validates the router id
+    pkts = packetize(patches, spec.elems_per_packet)
+    p = pkts.shape[0]
+    if spec.weight_lanes:
+        wrep = jnp.tile(
+            jnp.ravel(kernel_bytes).astype(jnp.uint8),
+            (p * spec.weight_elems_per_packet) // kernel_bytes.size + 1,
+        )[: p * spec.weight_elems_per_packet].reshape(p, -1)
+    flows = []
+    for i, pe in enumerate(pe_routers):
+        sel = jnp.arange(i, p, len(pe_routers))
+        if sel.shape[0] == 0:
+            continue
+        flows.append(
+            TrafficFlow(
+                name=f"conv/pe{pe}",
+                src=src,
+                dsts=(pe,),
+                inputs=jnp.take(pkts, sel, axis=0),
+                weights=(
+                    jnp.take(wrep, sel, axis=0) if spec.weight_lanes else None
+                ),
+            )
+        )
+    return flows
+
+
+def decode_weight_flows(
+    weight: jax.Array,
+    topo: Topology,
+    src: int,
+    dsts: Sequence[int],
+    spec: LinkSpec = LinkSpec(),
+    max_packets: int | None = None,
+) -> list[TrafficFlow]:
+    """Multicast a weight matrix's int8 HBM stream to a set of PE routers.
+
+    The matrix is quantized to its int8 wire image (``repro.traffic``), the
+    row-major byte stream is packetized, and ONE multicast flow carries it
+    down the XY tree — each tree link transmits a single copy, which is the
+    bandwidth argument for weight broadcast.  Input-only specs model the
+    dedicated weight-distribution channel.
+    """
+    if spec.weight_lanes:
+        raise ValueError(
+            "decode weight streams are a one-sided broadcast; use an "
+            "input-only spec (weight_lanes=0)"
+        )
+    topo.coords(src)  # validates the router id
+    pkts = packetize(int8_view(weight).astype(jnp.uint8), spec.elems_per_packet)
+    if max_packets is not None:
+        pkts = pkts[:max_packets]
+    return [
+        TrafficFlow(
+            name="decode/weights",
+            src=src,
+            dsts=tuple(dsts),
+            inputs=pkts,
+        )
+    ]
+
+
+def ring_allreduce_flows(
+    grad: jax.Array,
+    topo: Topology,
+    routers: Sequence[int] | None = None,
+    spec: LinkSpec = LinkSpec(),
+) -> list[TrafficFlow]:
+    """One ring reduce-scatter step of a gradient's int8 wire image.
+
+    The flat gradient quantizes to int8 (the ``repro.optim`` compressed
+    wire format), shards evenly over ``routers`` (default: every router, in
+    id order — on a ring topology that is the physical cycle), and shard i
+    flows from router i to its cyclic successor.  Repeating with rotated
+    shards would model the remaining R-1 steps; one step already exercises
+    every inter-router hop with distinct payloads.
+    """
+    order = tuple(routers) if routers is not None else tuple(
+        range(topo.num_routers)
+    )
+    if len(order) < 2:
+        raise ValueError("ring all-reduce needs >= 2 routers")
+    if spec.weight_lanes:
+        raise ValueError("gradient traffic is one-sided; use weight_lanes=0")
+    pkts = packetize(int8_view(grad).astype(jnp.uint8), spec.elems_per_packet)
+    shard = max(pkts.shape[0] // len(order), 1)
+    flows = []
+    for i, r in enumerate(order):
+        lo = min(i * shard, pkts.shape[0])
+        hi = pkts.shape[0] if i == len(order) - 1 else min(lo + shard, pkts.shape[0])
+        if hi <= lo:
+            continue
+        flows.append(
+            TrafficFlow(
+                name=f"allreduce/shard{i}",
+                src=r,
+                dsts=(order[(i + 1) % len(order)],),
+                inputs=pkts[lo:hi],
+            )
+        )
+    return flows

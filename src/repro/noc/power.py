@@ -1,0 +1,45 @@
+"""NoC power roll-up: the Fig. 6/7 link model extended with per-hop cost.
+
+Every hop of a multi-router path drives one link's wires (BT-proportional,
+exactly the single-link ``repro.link.LinkPowerModel``) *and* one router
+traversal (buffer write/read, crossbar, arbitration — flit-proportional,
+data-independent to first order).  Interconnect energy scaling with the
+Hamming distance of consecutive transfers is the observation of Li et al.
+(arXiv:2002.05293); the router constant is the standard NoC flit-energy
+term.  Sorting therefore attacks the BT-proportional share only: the
+router term is the NoC analogue of the single-link model's clock/control
+floor, and it dilutes the fabric-level reduction the same way
+``transfer_factor`` dilutes the link-level one.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.link.power import LinkPowerModel
+
+__all__ = ["NocPowerModel"]
+
+
+@dataclasses.dataclass(frozen=True)
+class NocPowerModel(LinkPowerModel):
+    """Per-hop energy: inherited per-link wire model + router flit energy.
+
+    ``router_flit_energy_pj`` is a representative 22 nm 5-port
+    wormhole-router traversal (buffering + crossbar + arbitration) per
+    128-bit flit; like the base model's absolute constants, ratios are the
+    claim, the absolute scale is modeled.
+    """
+
+    router_flit_energy_pj: float = 0.98
+
+    def hop_energy_pj(self, total_bt: float, num_flits: int) -> float:
+        """Energy of one link traversal: wire switching + router overhead.
+
+        The fabric total is the sum of these over all links — the
+        simulator stores one per ``LinkStats`` and ``NocReport.energy_pj``
+        sums them, so the roll-up has a single code path.
+        """
+        return self.link_energy_pj(total_bt, num_flits) + (
+            self.router_flit_energy_pj * float(num_flits)
+        )

@@ -1,0 +1,79 @@
+"""Deterministic routing and path expansion (DESIGN.md §9).
+
+Dimension-order (XY) routing covers all three topology families: a packet
+first corrects its column offset, then its row offset.  On a mesh each
+dimension is walked monotonically; on a torus/ring each dimension picks the
+shorter wrap direction (ties break toward +), which on a ring degenerates
+to classic shortest-direction ring routing.  XY is deadlock-free on the
+mesh and — more importantly here — *deterministic*, so a multicast to many
+destinations is a tree: paths from one source share prefixes, and the
+union of their links visits each physical link at most once (one copy of
+the payload per link, the standard tree-multicast accounting).
+
+``unicast_links`` / ``multicast_links`` expand route endpoints into the
+ordered link-id lists the simulator schedules flit streams onto.
+"""
+
+from __future__ import annotations
+
+from .topology import Topology
+
+__all__ = [
+    "route",
+    "unicast_links",
+    "multicast_links",
+    "hop_count",
+]
+
+
+def _axis_step(pos: int, dst: int, size: int, wrap: bool) -> int:
+    """Next coordinate along one dimension (monotone, or shortest wrap)."""
+    if pos == dst:
+        return pos
+    if not wrap:
+        return pos + (1 if dst > pos else -1)
+    fwd = (dst - pos) % size
+    back = (pos - dst) % size
+    return (pos + (1 if fwd <= back else -1)) % size
+
+
+def route(topo: Topology, src: int, dst: int) -> list[int]:
+    """Router sequence from src to dst (inclusive) under XY routing."""
+    r, c = topo.coords(src)
+    dr, dc = topo.coords(dst)
+    path = [src]
+    while c != dc:
+        c = _axis_step(c, dc, topo.cols, topo.wrap)
+        path.append(topo.router(r, c))
+    while r != dr:
+        r = _axis_step(r, dr, topo.rows, topo.wrap)
+        path.append(topo.router(r, c))
+    return path
+
+
+def hop_count(topo: Topology, src: int, dst: int) -> int:
+    """Number of links the XY route crosses."""
+    return len(route(topo, src, dst)) - 1
+
+
+def unicast_links(topo: Topology, src: int, dst: int) -> list[int]:
+    """Ordered link ids of the XY route src -> dst."""
+    path = route(topo, src, dst)
+    return [topo.link_id(u, v) for u, v in zip(path[:-1], path[1:])]
+
+
+def multicast_links(topo: Topology, src: int, dsts: tuple[int, ...]) -> list[int]:
+    """Link ids of the XY multicast tree from src to every destination.
+
+    The union of the deterministic unicast routes, deduplicated in
+    first-visit order: shared path prefixes (and on wrapped topologies the
+    occasional shared interior segment) carry ONE copy of the payload — the
+    whole point of tree multicast for broadcast-heavy weight traffic.
+    """
+    seen: dict[int, None] = {}
+    for dst in dsts:
+        if dst == src:
+            continue
+        for lid in unicast_links(topo, src, dst):
+            seen.setdefault(lid, None)
+    return list(seen)

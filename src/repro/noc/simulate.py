@@ -1,0 +1,340 @@
+"""NoC-level simulation: flows in, per-link BT/energy accounting out.
+
+The single-link story (``repro.link``) models one wire; this module models
+the fabric.  Traffic is injected as ``TrafficFlow``s (packet payloads with
+a source router and one or more destinations), expanded along deterministic
+XY/ring routes into per-link flit streams, and measured with ONE batched
+Pallas launch (``repro.kernels.bt_count_links``: links x flits x byte-lanes
+on the grid) instead of one ``bt_count`` launch per link.
+
+Where the sorting unit sits is the modeled design choice (DESIGN.md §9):
+
+  * ``sort_at='source'`` — one PSU per injection port (the paper's §V
+    proposal lifted to a NoC): packets are element-sorted once, the wire
+    image is fixed at the source, and every hop of the route re-uses the
+    same ordered stream.  Intermediate routers need no sorting hardware;
+    the BT advantage rides along the whole path.
+  * ``sort_at='hop'``   — a PSU (plus a packet-granularity transmission
+    scheduler) at every router egress: each link element-sorts per packet
+    *and* reorders the transmission sequence of the packets queued on that
+    link by popcount bucket (the scheme of Chen et al., arXiv:2509.00500).
+    Per-packet element sorting is idempotent, so the extra leverage is
+    exactly at flow-merge points — packets from different flows interleave
+    in bucket order instead of arrival order.
+
+Element ordering reuses the registered ``repro.link`` stages (the KEY /
+ENCODE / PACK registries and ``assemble_stream``), so a ``LinkSpec`` means
+the same thing on a NoC link as on the paper's point-to-point link.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import bt_count_links
+from repro.link import ENCODE_STAGES, LinkSpec, make_order, row_bucket_order
+from repro.link.framing import assemble_stream
+
+from .power import NocPowerModel
+from .routing import hop_count, multicast_links
+from .topology import Topology
+
+__all__ = [
+    "TrafficFlow",
+    "LinkStats",
+    "LinkStreams",
+    "NocReport",
+    "expand_link_streams",
+    "stack_link_streams",
+    "simulate_noc",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class TrafficFlow:
+    """One traffic injection: packets from a source router to destination(s).
+
+    ``inputs`` is (P, elems_per_packet) bytes; ``weights`` (optional) is the
+    paired weight payload per the ``LinkSpec`` framing.  More than one
+    destination means tree multicast along the deterministic routes.
+    """
+
+    name: str
+    src: int
+    dsts: tuple[int, ...]
+    inputs: jax.Array
+    weights: jax.Array | None = None
+
+    def __post_init__(self) -> None:
+        if not self.dsts:
+            raise ValueError(f"flow {self.name!r} has no destinations")
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkStats:
+    """BT / energy accounting of one directed link's traffic."""
+
+    link: int  # topology link id
+    src: int
+    dst: int
+    num_flits: int
+    bt_input: int
+    bt_weight: int
+    energy_pj: float
+
+    @property
+    def total_bt(self) -> int:
+        return self.bt_input + self.bt_weight
+
+    @property
+    def bt_per_flit(self) -> float:
+        return self.total_bt / max(self.num_flits, 1)
+
+
+class LinkStreams(NamedTuple):
+    """Per-link wire streams, stacked for the batched BT kernel.
+
+    ``streams`` is (L, T_max, lanes) uint8; links shorter than T_max are
+    padded with copies of their last flit (BT-neutral), ``lengths`` keeps
+    the real flit counts.
+    """
+
+    link_ids: tuple[int, ...]
+    streams: jax.Array
+    lengths: tuple[int, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class NocReport:
+    """Fabric-level accounting: per-link stats plus flow path info."""
+
+    name: str
+    topology: str
+    sort_at: str
+    key: str
+    links: tuple[LinkStats, ...]
+    flow_hops: tuple[tuple[str, int], ...]  # (flow name, max hops to a dst)
+    total_links: int  # links in the topology (active or not)
+
+    @property
+    def active_links(self) -> int:
+        return len(self.links)
+
+    @property
+    def total_bt(self) -> int:
+        return sum(s.total_bt for s in self.links)
+
+    @property
+    def total_flit_hops(self) -> int:
+        """Flits summed over links — each hop retransmits the payload."""
+        return sum(s.num_flits for s in self.links)
+
+    @property
+    def energy_pj(self) -> float:
+        return sum(s.energy_pj for s in self.links)
+
+    @property
+    def max_hops(self) -> int:
+        return max((h for _, h in self.flow_hops), default=0)
+
+    def reduction_vs(self, base: "NocReport") -> float:
+        """Fabric-level BT reduction relative to a baseline run (fraction)."""
+        return 1.0 - self.total_bt / max(base.total_bt, 1e-9)
+
+
+def _validate_flow(flow: TrafficFlow, spec: LinkSpec) -> None:
+    if flow.inputs.ndim != 2 or flow.inputs.shape[-1] != spec.elems_per_packet:
+        raise ValueError(
+            f"flow {flow.name!r}: payload {tuple(flow.inputs.shape)} != "
+            f"(P, {spec.elems_per_packet}) for this spec"
+        )
+    if flow.inputs.shape[0] == 0:
+        raise ValueError(f"flow {flow.name!r}: zero packets")
+    if spec.weight_lanes and flow.weights is None:
+        raise ValueError(
+            f"flow {flow.name!r}: spec has weight lanes but no weight payload"
+        )
+    if flow.weights is not None:
+        if not spec.weight_lanes:
+            raise ValueError(
+                f"flow {flow.name!r}: weight payload on an input-only spec"
+            )
+        if flow.weights.shape != (
+            flow.inputs.shape[0],
+            spec.weight_elems_per_packet,
+        ):
+            raise ValueError(
+                f"flow {flow.name!r}: weight payload "
+                f"{tuple(flow.weights.shape)} != "
+                f"(P, {spec.weight_elems_per_packet})"
+            )
+
+
+def _packet_perm(
+    xi: jax.Array, wi: jax.Array | None, spec: LinkSpec
+) -> jax.Array:
+    """Per-hop transmission order of the packets queued on one link: stable
+    counting sort by the popcount bucket of each packet's full wire image
+    (ACC granularity = W+1 levels, APP = k)."""
+    rows = xi if wi is None else jnp.concatenate([xi, wi], axis=-1)
+    levels = spec.k if spec.key == "app" else spec.width + 1
+    return row_bucket_order(
+        rows, levels, width=spec.width, descending=spec.descending
+    )
+
+
+def expand_link_streams(
+    topo: Topology,
+    flows: Sequence[TrafficFlow],
+    spec: LinkSpec = LinkSpec(),
+    *,
+    sort_at: str = "source",
+) -> LinkStreams:
+    """Expand flows into the per-link wire streams of the whole fabric.
+
+    Element ordering (the spec's KEY stage) is applied per packet at the
+    source; ``sort_at='hop'`` additionally re-orders each link's packet
+    queue by popcount bucket.  All ordering/packing here is plain jnp (the
+    registered ``repro.link`` stages); the Pallas work of a NoC run is the
+    single batched BT launch in :func:`simulate_noc`.
+    """
+    if sort_at not in ("source", "hop"):
+        raise ValueError(f"sort_at must be 'source' or 'hop', got {sort_at!r}")
+    if spec.key == "row_bucket":
+        raise ValueError(
+            "NoC flows carry packets, which use the packet-granularity key "
+            "stages ('none', 'column_major', 'acc', 'app'); 'row_bucket' is "
+            "a row-stream stage (TxPipeline.measure_rows)"
+        )
+    encode = ENCODE_STAGES[spec.encode]
+    # per-flow: encoded payloads + element order, computed ONCE at the source
+    per_flow = []
+    for flow in flows:
+        _validate_flow(flow, spec)
+        xi = encode(flow.inputs).astype(jnp.uint8)
+        wi = (
+            encode(flow.weights).astype(jnp.uint8)
+            if flow.weights is not None
+            else None
+        )
+        order = make_order(
+            spec.key,
+            xi,
+            lanes=spec.input_lanes,
+            width=spec.width,
+            k=spec.k,
+            descending=spec.descending,
+        )
+        links = multicast_links(topo, flow.src, flow.dsts)
+        per_flow.append((xi, wi, order, links))
+
+    # per-link: concatenate the queued segments in injection order
+    segments: dict[int, list[int]] = {}
+    for fi, (_, _, _, links) in enumerate(per_flow):
+        for lid in links:
+            segments.setdefault(lid, []).append(fi)
+
+    link_ids = sorted(segments)
+    # links with the same queued-flow composition carry byte-identical
+    # streams (every link of a unicast route, every tree link of a
+    # multicast) — assemble each distinct queue once
+    assembled: dict[tuple[int, ...], jax.Array] = {}
+    streams: list[jax.Array] = []
+    for lid in link_ids:
+        idxs = tuple(segments[lid])
+        stream = assembled.get(idxs)
+        if stream is None:
+            xi = jnp.concatenate([per_flow[i][0] for i in idxs], axis=0)
+            wis = [per_flow[i][1] for i in idxs]
+            wi = None if wis[0] is None else jnp.concatenate(wis, axis=0)
+            order = jnp.concatenate([per_flow[i][2] for i in idxs], axis=0)
+            if sort_at == "hop" and len(xi) > 1:
+                perm = _packet_perm(xi, wi, spec)
+                xi = jnp.take(xi, perm, axis=0)
+                wi = None if wi is None else jnp.take(wi, perm, axis=0)
+                order = jnp.take(order, perm, axis=0)
+            stream = assemble_stream(xi, wi, spec, order, spec.pack)
+            assembled[idxs] = stream
+        streams.append(stream)
+    stacked, lengths = stack_link_streams(streams, spec.bytes_per_flit)
+    return LinkStreams(tuple(link_ids), stacked, lengths)
+
+
+def stack_link_streams(
+    streams: Sequence[jax.Array], lanes: int
+) -> tuple[jax.Array, tuple[int, ...]]:
+    """Stack jagged (T_l, lanes) streams to (L, T_max, lanes) uint8.
+
+    Shorter streams are padded with copies of their last flit: a repeated
+    flit flips no bits, so the batched kernel's per-link totals are exact.
+    """
+    if not streams:
+        return jnp.zeros((0, 1, lanes), jnp.uint8), ()
+    lengths = tuple(int(s.shape[0]) for s in streams)
+    t_max = max(lengths)
+    padded = [
+        s if s.shape[0] == t_max else jnp.pad(
+            s, ((0, t_max - s.shape[0]), (0, 0)), mode="edge"
+        )
+        for s in streams
+    ]
+    return jnp.stack(padded).astype(jnp.uint8), lengths
+
+
+def simulate_noc(
+    topo: Topology,
+    flows: Sequence[TrafficFlow],
+    spec: LinkSpec = LinkSpec(),
+    *,
+    sort_at: str = "source",
+    power: NocPowerModel | None = None,
+    interpret: bool | None = None,
+    name: str = "noc",
+) -> NocReport:
+    """Run the fabric: expand flows to link streams, measure every link.
+
+    All links are measured by one ``bt_count_links`` launch; per-link
+    energies roll up through ``NocPowerModel`` (wire switching + router
+    flit overhead per hop).
+    """
+    power = power if power is not None else NocPowerModel()
+    ls = expand_link_streams(topo, flows, spec, sort_at=sort_at)
+    stats: list[LinkStats] = []
+    if ls.link_ids:
+        bt = np.asarray(
+            bt_count_links(
+                ls.streams, input_lanes=spec.input_lanes, interpret=interpret
+            )
+        )
+        for (lid, length, (bi, bw)) in zip(
+            ls.link_ids, ls.lengths, bt.astype(int).tolist()
+        ):
+            u, v = topo.links[lid]
+            stats.append(
+                LinkStats(
+                    link=lid,
+                    src=u,
+                    dst=v,
+                    num_flits=length,
+                    bt_input=bi,
+                    bt_weight=bw,
+                    energy_pj=power.hop_energy_pj(bi + bw, length),
+                )
+            )
+    flow_hops = tuple(
+        (f.name, max(hop_count(topo, f.src, d) for d in f.dsts)) for f in flows
+    )
+    return NocReport(
+        name=name,
+        topology=f"{topo.kind}{topo.rows}x{topo.cols}",
+        sort_at=sort_at,
+        key=spec.key,
+        links=tuple(stats),
+        flow_hops=flow_hops,
+        total_links=topo.num_links,
+    )

@@ -1,0 +1,69 @@
+"""Direct unit tests for the link power model (paper Fig. 6/7) and its NoC
+extension — previously only exercised indirectly through benchmark paths.
+
+The load-bearing number: the paper's ACC calibration point, 20.42 % BT
+reduction -> 18.27 % link-related power reduction, which pins the default
+``transfer_factor``."""
+
+import dataclasses
+
+import pytest
+
+from repro.link import LinkPowerModel
+from repro.noc import NocPowerModel
+
+
+def test_default_transfer_factor_is_paper_calibrated():
+    m = LinkPowerModel()
+    assert m.transfer_factor == pytest.approx(18.27 / 20.42)
+    # the calibration point itself: ACC's BT reduction maps to its measured
+    # link-related power reduction
+    assert m.power_reduction(0.2042) == pytest.approx(0.1827, abs=1e-6)
+
+
+def test_power_reduction_is_linear_in_bt_reduction():
+    m = LinkPowerModel()
+    assert m.power_reduction(0.0) == 0.0
+    assert m.power_reduction(1.0) == pytest.approx(m.transfer_factor)
+    # APP's paper point rides the same line: 19.50 % BT -> ~17.45 % power
+    assert m.power_reduction(0.1950) == pytest.approx(0.1745, abs=5e-4)
+    custom = LinkPowerModel(transfer_factor=0.5)
+    assert custom.power_reduction(0.4) == pytest.approx(0.2)
+
+
+def test_link_energy_decomposes_into_switching_and_floor():
+    m = LinkPowerModel()
+    # zero transitions: only the clock/control floor remains
+    assert m.link_energy_pj(0, 10) == pytest.approx(
+        10 * m.static_flit_energy_pj
+    )
+    # zero flits (and zero BT): no energy
+    assert m.link_energy_pj(0, 0) == 0.0
+    got = m.link_energy_pj(1000, 64)
+    assert got == pytest.approx(
+        1000 * m.energy_per_transition_pj + 64 * m.static_flit_energy_pj
+    )
+    # energy is monotone in BT at fixed flit count
+    assert m.link_energy_pj(2000, 64) > got
+
+
+def test_link_energy_custom_constants():
+    m = LinkPowerModel(energy_per_transition_pj=1.0, static_flit_energy_pj=0.0)
+    assert m.link_energy_pj(123, 456) == pytest.approx(123.0)
+
+
+def test_noc_model_extends_link_model():
+    noc = NocPowerModel()
+    link = LinkPowerModel()
+    # inherited per-link constants and behavior are unchanged
+    for f in dataclasses.fields(LinkPowerModel):
+        assert getattr(noc, f.name) == getattr(link, f.name)
+    assert noc.link_energy_pj(500, 32) == pytest.approx(
+        link.link_energy_pj(500, 32)
+    )
+    # a hop adds exactly the router flit overhead on top of the wire energy
+    assert noc.hop_energy_pj(500, 32) == pytest.approx(
+        link.link_energy_pj(500, 32) + 32 * noc.router_flit_energy_pj
+    )
+    # zero traffic on a hop costs nothing
+    assert noc.hop_energy_pj(0, 0) == 0.0

@@ -1,0 +1,328 @@
+"""repro.noc: topology/routing correctness, the batched per-link BT kernel
+against the per-link ``core.bt.bit_transitions`` reference, and the
+fabric-level claims (source-sorted streams keep their BT advantage on every
+hop; multicast trees carry one copy per link)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bit_transitions
+from repro.kernels import bt_count_links
+from repro.link import LinkSpec
+from repro.noc import (
+    NocPowerModel,
+    TrafficFlow,
+    conv_platform_flows,
+    decode_weight_flows,
+    expand_link_streams,
+    hop_count,
+    mesh,
+    multicast_links,
+    packetize,
+    ring,
+    ring_allreduce_flows,
+    route,
+    simulate_noc,
+    torus,
+    unicast_links,
+)
+
+
+def _conv_packets(p, n, seed=0):
+    """Conv-like byte packets: sparse, spatially-correlated (the data model
+    under which popcount ordering has leverage)."""
+    rng = np.random.default_rng(seed)
+    v = rng.normal(size=(p, n))
+    v = (v + np.roll(v, 1, 1) + np.roll(v, -1, 1)) / 3
+    v = np.clip(v - np.quantile(v, 0.55), 0, None)
+    return jnp.asarray(
+        (v / (v.max() + 1e-9) * 255).astype(np.uint8)
+    )
+
+
+# ---------------------------------------------------------------- topology
+
+
+def test_topology_link_counts():
+    assert mesh(3, 3).num_links == 2 * (3 * 2 + 3 * 2)  # 24
+    assert mesh(1, 4).num_links == 2 * 3
+    assert torus(3, 3).num_links == 4 * 9
+    assert torus(4, 4).num_links == 4 * 16
+    assert ring(6).num_links == 12
+    # wraparound duplicates on 2-long dims are deduplicated, not doubled
+    assert torus(2, 2).num_links == 8
+
+
+def test_topology_maps_and_errors():
+    t = mesh(3, 4)
+    assert t.coords(7) == (1, 3)
+    assert t.router(1, 3) == 7
+    assert t.row_routers(2) == (8, 9, 10, 11)
+    for i, (u, v) in enumerate(t.links):
+        assert t.link_id(u, v) == i
+    with pytest.raises(ValueError):
+        t.link_id(0, 11)  # not neighbors
+    with pytest.raises(ValueError):
+        t.coords(12)
+    with pytest.raises(ValueError):
+        ring(2)
+    with pytest.raises(ValueError):
+        mesh(1, 1)
+
+
+# ----------------------------------------------------------------- routing
+
+
+@pytest.mark.parametrize("topo", [mesh(4, 4), torus(4, 4), ring(7)])
+def test_routes_are_link_connected(topo):
+    for src in range(topo.num_routers):
+        for dst in range(topo.num_routers):
+            path = route(topo, src, dst)
+            assert path[0] == src and path[-1] == dst
+            for u, v in zip(path[:-1], path[1:]):
+                topo.link_id(u, v)  # raises if not a physical link
+
+
+def test_mesh_xy_is_manhattan():
+    t = mesh(4, 4)
+    for src in range(16):
+        for dst in range(16):
+            (r0, c0), (r1, c1) = t.coords(src), t.coords(dst)
+            assert hop_count(t, src, dst) == abs(r0 - r1) + abs(c0 - c1)
+
+
+def test_wrap_routing_takes_shortest_direction():
+    r = ring(8)
+    assert hop_count(r, 0, 3) == 3
+    assert hop_count(r, 0, 5) == 3  # wraps backward
+    assert route(r, 0, 7) == [0, 7]
+    t = torus(4, 4)
+    assert hop_count(t, 0, 15) == 2  # (0,0)->(3,3) wraps both dims
+    assert hop_count(t, 0, 2) == 2  # tie (2 fwd, 2 back) stays monotone
+
+
+def test_multicast_tree_shares_prefixes():
+    t = mesh(4, 4)
+    dsts = (1, 2, 3)  # one row: a 3-hop chain, not 1+2+3 links
+    assert multicast_links(t, 0, dsts) == [
+        t.link_id(0, 1), t.link_id(1, 2), t.link_id(2, 3)
+    ]
+    dsts = tuple(range(1, 16))
+    tree = multicast_links(t, 0, dsts)
+    total = sum(len(unicast_links(t, 0, d)) for d in dsts)
+    assert len(tree) == 15  # spanning tree of 16 routers
+    assert len(set(tree)) == len(tree) < total
+
+
+# ------------------------------------------------- batched per-link kernel
+
+
+def test_bt_count_links_matches_per_link_reference():
+    rng = np.random.default_rng(3)
+    s = jnp.asarray(rng.integers(0, 256, (5, 37, 16), dtype=np.uint8))
+    out = np.asarray(bt_count_links(s, input_lanes=8, block_links=2, block_rows=8))
+    for l in range(5):
+        assert out[l, 0] == int(bit_transitions(s[l, :, :8]))
+        assert out[l, 1] == int(bit_transitions(s[l, :, 8:]))
+    # input-only: all lanes on the input side
+    out = np.asarray(bt_count_links(s))
+    for l in range(5):
+        assert out[l, 0] == int(bit_transitions(s[l])) and out[l, 1] == 0
+
+
+def test_bt_count_links_padding_is_neutral():
+    rng = np.random.default_rng(4)
+    s = jnp.asarray(rng.integers(0, 256, (3, 19, 8), dtype=np.uint8))
+    # repeating the last flit (the simulator's jagged-stream padding) and
+    # the wrapper's internal block padding both add zero transitions
+    s_pad = jnp.concatenate([s, jnp.repeat(s[:, -1:], 13, axis=1)], axis=1)
+    np.testing.assert_array_equal(
+        np.asarray(bt_count_links(s)), np.asarray(bt_count_links(s_pad))
+    )
+
+
+def test_bt_count_links_degenerate_shapes():
+    assert bt_count_links(jnp.zeros((0, 5, 4), jnp.uint8)).shape == (0, 2)
+    assert int(np.asarray(bt_count_links(jnp.zeros((3, 1, 4), jnp.uint8))).sum()) == 0
+    with pytest.raises(ValueError, match="input_lanes"):
+        bt_count_links(jnp.zeros((2, 4, 8), jnp.uint8), input_lanes=16)
+
+
+@pytest.mark.parametrize("topo", [mesh(3, 3), ring(5)])
+@pytest.mark.parametrize("key", ["none", "acc", "app"])
+def test_noc_streams_bit_exact_vs_reference(topo, key):
+    """Acceptance criterion: the one-launch fabric measurement equals the
+    per-link ``core.bt.bit_transitions`` loop across topology x ordering."""
+    spec = LinkSpec(key=key)
+    n = spec.elems_per_packet
+    flows = [
+        TrafficFlow("f0", 0, (topo.num_routers - 1,),
+                    _conv_packets(40, n, 0), _conv_packets(40, n, 1)),
+        TrafficFlow("f1", 1, (topo.num_routers - 1,),
+                    _conv_packets(24, n, 2), _conv_packets(24, n, 3)),
+    ]
+    for sort_at in ("source", "hop"):
+        ls = expand_link_streams(topo, flows, spec, sort_at=sort_at)
+        bt = np.asarray(bt_count_links(ls.streams, input_lanes=spec.input_lanes))
+        for i, length in enumerate(ls.lengths):
+            trimmed = ls.streams[i, :length]
+            assert bt[i, 0] == int(bit_transitions(trimmed[:, : spec.input_lanes]))
+            assert bt[i, 1] == int(bit_transitions(trimmed[:, spec.input_lanes:]))
+
+
+# --------------------------------------------------------------- simulator
+
+
+def test_source_sorted_advantage_survives_every_hop():
+    """The fabric claim: sorting once at the source reduces BT on EVERY
+    link of a multi-hop route, not just the first."""
+    topo = mesh(4, 4)
+    flow = [TrafficFlow("f", 0, (15,), _conv_packets(64, 32, 5),
+                        _conv_packets(64, 32, 6))]
+    base = simulate_noc(topo, flow, LinkSpec(key="none"))
+    srt = simulate_noc(topo, flow, LinkSpec(key="acc"))
+    assert base.active_links == srt.active_links == 6  # (0,0) -> (3,3)
+    by_link_base = {s.link: s for s in base.links}
+    for s in srt.links:
+        assert s.total_bt < by_link_base[s.link].total_bt
+    # every hop retransmits the same ordered stream: per-link BT identical
+    assert len({s.total_bt for s in srt.links}) == 1
+    assert srt.reduction_vs(base) > 0.05
+
+
+def test_report_invariants_and_energy_rollup():
+    topo = ring(5)
+    power = NocPowerModel()
+    flows = [TrafficFlow("f", 0, (2,), _conv_packets(16, 32, 7),
+                         _conv_packets(16, 32, 8))]
+    rep = simulate_noc(topo, flows, LinkSpec(key="app"), power=power)
+    assert rep.total_links == topo.num_links
+    assert rep.flow_hops == (("f", 2),)
+    assert rep.max_hops == 2
+    # 16 packets x 4 flits on each of 2 hops
+    assert all(s.num_flits == 64 for s in rep.links)
+    assert rep.total_flit_hops == 128
+    assert rep.energy_pj == pytest.approx(
+        sum(power.hop_energy_pj(s.total_bt, s.num_flits) for s in rep.links)
+    )
+    assert rep.reduction_vs(rep) == pytest.approx(0.0)
+
+
+def test_hop_sort_reorders_only_transmission_order():
+    """Per-hop packet scheduling permutes the packet sequence on a link but
+    transmits the same packet payloads (flit multiset preserved)."""
+    topo = mesh(3, 3)
+    spec = LinkSpec(key="acc")
+    flows = [
+        TrafficFlow("a", 0, (8,), _conv_packets(20, 32, 9),
+                    _conv_packets(20, 32, 10)),
+        TrafficFlow("b", 2, (8,), _conv_packets(12, 32, 11),
+                    _conv_packets(12, 32, 12)),
+    ]
+    src = expand_link_streams(topo, flows, spec, sort_at="source")
+    hop = expand_link_streams(topo, flows, spec, sort_at="hop")
+    assert src.link_ids == hop.link_ids
+    assert src.lengths == hop.lengths
+    f = spec.flits_per_packet
+    for i, length in enumerate(src.lengths):
+        a = np.asarray(src.streams[i, :length]).reshape(-1, f, 16)
+        b = np.asarray(hop.streams[i, :length]).reshape(-1, f, 16)
+        key = lambda pkts: sorted(p.tobytes() for p in pkts)
+        assert key(a) == key(b)
+
+
+def test_expand_validation_errors():
+    topo = mesh(2, 2)
+    x = _conv_packets(4, 32, 13)
+    with pytest.raises(ValueError, match="sort_at"):
+        expand_link_streams(topo, [TrafficFlow("f", 0, (3,), x, x)],
+                            LinkSpec(), sort_at="midway")
+    with pytest.raises(ValueError, match="payload"):
+        simulate_noc(topo, [TrafficFlow("f", 0, (3,), x[:, :16], x)], LinkSpec())
+    with pytest.raises(ValueError, match="weight"):
+        simulate_noc(topo, [TrafficFlow("f", 0, (3,), x)], LinkSpec())
+    with pytest.raises(ValueError, match="no destinations"):
+        TrafficFlow("f", 0, (), x, x)
+    with pytest.raises(ValueError, match="zero packets"):
+        simulate_noc(topo, [TrafficFlow("f", 0, (3,), x[:0], x[:0])],
+                     LinkSpec())
+    # a legal LinkSpec key that has no packet-flow meaning fails up front
+    with pytest.raises(ValueError, match="row-stream stage"):
+        simulate_noc(topo, [TrafficFlow("f", 0, (3,), x, x)],
+                     LinkSpec(key="row_bucket"))
+
+
+def test_simulate_handles_empty_and_self_traffic():
+    topo = mesh(2, 2)
+    rep = simulate_noc(topo, [], LinkSpec())
+    assert rep.total_bt == 0 and rep.active_links == 0 and rep.energy_pj == 0
+    # src == dst: no links crossed
+    x = _conv_packets(4, 32, 14)
+    rep = simulate_noc(
+        topo, [TrafficFlow("self", 1, (1,), x, x)], LinkSpec()
+    )
+    assert rep.active_links == 0 and rep.flow_hops == (("self", 0),)
+
+
+# ---------------------------------------------------------------- adapters
+
+
+def test_packetize_trims_to_whole_packets():
+    out = packetize(jnp.arange(70, dtype=jnp.uint8), 32)
+    assert out.shape == (2, 32)
+    with pytest.raises(ValueError):
+        packetize(jnp.arange(10, dtype=jnp.uint8), 32)
+
+
+def test_conv_platform_flows_cover_all_packets():
+    topo = mesh(3, 3)
+    patches = _conv_packets(28, 25, 15)
+    kernel = jnp.arange(25, dtype=jnp.uint8)
+    spec = LinkSpec()  # paired 8+8 framing
+    flows = conv_platform_flows(patches, kernel, topo, 0, [4, 5, 7], spec)
+    total = sum(f.inputs.shape[0] for f in flows)
+    assert total == (28 * 25) // spec.elems_per_packet
+    for f in flows:
+        assert f.weights.shape == (f.inputs.shape[0],
+                                   spec.weight_elems_per_packet)
+        assert len(f.dsts) == 1
+
+
+def test_decode_weight_flows_multicast():
+    topo = mesh(3, 3)
+    spec = LinkSpec(input_lanes=16, weight_lanes=0)
+    w = jnp.asarray(np.random.default_rng(16).normal(size=(64, 32)),
+                    jnp.float32)
+    (flow,) = decode_weight_flows(w, topo, 0, topo.row_routers(1), spec,
+                                  max_packets=8)
+    assert flow.dsts == (3, 4, 5)
+    assert flow.inputs.shape == (8, 64)
+    with pytest.raises(ValueError, match="input-only"):
+        decode_weight_flows(w, topo, 0, (1,), LinkSpec())
+
+
+def test_ring_allreduce_flows_shard_the_gradient():
+    topo = ring(4)
+    spec = LinkSpec(input_lanes=16, weight_lanes=0)
+    g = jnp.asarray(np.random.default_rng(17).normal(size=(4 * 3 * 64,)),
+                    jnp.float32)
+    flows = ring_allreduce_flows(g, topo, spec=spec)
+    assert len(flows) == 4
+    assert sum(f.inputs.shape[0] for f in flows) == (4 * 3 * 64) // 64
+    for i, f in enumerate(flows):
+        assert f.src == i and f.dsts == ((i + 1) % 4,)
+    rep = simulate_noc(topo, flows, spec)
+    assert rep.active_links == 4  # each cyclic hop is one physical link
+    assert rep.max_hops == 1
+
+
+def test_spec_stage_composition_on_noc():
+    """A LinkSpec means the same thing on a NoC link: sign-magnitude encode
+    + descending APP sort compose with the fabric expansion."""
+    topo = mesh(2, 2)
+    spec = LinkSpec(key="app", encode="sign_magnitude", descending=True)
+    x = _conv_packets(16, 32, 18)
+    rep = simulate_noc(topo, [TrafficFlow("f", 0, (3,), x, x)], spec,
+                       sort_at="hop")
+    assert rep.total_bt > 0 and rep.active_links == 2
