@@ -1,0 +1,213 @@
+"""DSE sweep: the paper's two-point comparison as full Pareto fronts.
+
+The paper evaluates ACC vs APP k=4 only; this bench maps the design space
+with `repro.dse` on the measured conv streams:
+
+  * **grid** — unsorted / column-major baselines, APP per bucket count,
+    precise ACC, plus the Fig. 5 comparator families (bitonic, CSN) at both
+    paper sort widths, each joined across area / timing / BT / link power;
+  * **fronts** — the 3-objective (area x BT-reduction x latency) front and
+    the paper's area x BT plane, whose measured knee is the paper's own
+    k=4 choice;
+  * **fused vs per-config** — the whole grid's stream measurements come
+    from ONE `bt_count_variants` launch (the variant axis lives inside the
+    launch) where the per-config baseline pays one `psu_stream`/`bt_count`
+    launch per configuration.  Launch counts are read from the traced
+    jaxpr, not asserted by hand; wall time is reported for reference only
+    (same caveat as `kernel_bench` / `noc_bt`: launches are the claim);
+  * **NoC point** — one APP k=4 design evaluated per link on a 4x4 mesh
+    through `repro.noc` (its own batched per-link launch);
+  * **artifact** — `repro.dse.report` writes the machine-readable JSON
+    front (`REPRO_DSE_ARTIFACT` overrides the path) for the bench
+    trajectory; CI uploads it with the smoke CSV.
+
+Paper reference points ride along in the derived strings (Table I / Fig. 5
+/ abstract): APP k=4 = 35.4 % area reduction at 19.50 % overall BT
+reduction (20.42 % precise).  The conv-traffic model reproduces the paper's
+input-side reductions (the stream the PSU actually orders, table1_bt's
+calibration target); its weight-stream model under-reduces, so overall
+reductions land below the paper's — reported side by side, as in fig7.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dse import (
+    AREA_BT_OBJECTIVES,
+    DesignPoint,
+    Workload,
+    evaluate_grid,
+    k_sweep,
+    knee_point,
+    pareto_front,
+    write_json,
+)
+from repro.kernels import bt_count, bt_count_variants, psu_stream
+from repro.link import make_order
+
+from .datagen import conv_streams
+from .kernel_bench import count_pallas_launches
+
+PAPER = {"app_area_red": 35.4, "app_bt_red": 19.50, "acc_bt_red": 20.42}
+
+TINY_KWARGS = {"conv_images": 1, "ks": (2, 4), "ns": (25,)}
+
+_LANES = 16
+
+
+def _grid(ks: tuple[int, ...], ns: tuple[int, ...]) -> tuple[DesignPoint, ...]:
+    points: list[DesignPoint] = []
+    for n in ns:
+        points.extend(k_sweep(n=n, width=8, ks=ks))
+        points.append(DesignPoint(n=n, width=8, k=None, ordering="column_major"))
+        points.append(DesignPoint(family="bitonic", n=n, width=8, k=None,
+                                  ordering="acc"))
+        points.append(DesignPoint(family="csn", n=n, width=8, k=None,
+                                  ordering="acc"))
+    return tuple(points)
+
+
+def _staged_bt(stream: jax.Array, variant) -> jax.Array:
+    """Per-config baseline for unsorted/layout keys: order on the host,
+    lane-pack, one bt_count launch (the pre-DSE measurement path)."""
+    p, n = stream.shape
+    flits = n // _LANES
+    order = make_order(
+        variant.key, stream, lanes=_LANES, width=8, k=variant.k or 4,
+        descending=variant.descending,
+    )
+    xs = jnp.take_along_axis(stream.astype(jnp.int32), order, axis=-1)
+    packed = xs.reshape(p, _LANES, flits).transpose(0, 2, 1)
+    return bt_count(packed.reshape(p * flits, _LANES))
+
+
+def run(
+    conv_images: int = 8,
+    ks: tuple[int, ...] = (2, 4, 8),
+    ns: tuple[int, ...] = (25, 49),
+) -> list[tuple[str, float, str]]:
+    rows: list[tuple[str, float, str]] = []
+    inp, wgt = conv_streams(n_images=conv_images)
+    workload = Workload(
+        "conv", (jnp.asarray(inp), jnp.asarray(wgt)), lanes=_LANES
+    )
+    points = _grid(tuple(ks), tuple(ns))
+
+    # --- evaluate the whole grid (one variant launch per stream) ---
+    t0 = time.monotonic()
+    evals = evaluate_grid(points, workload)
+    us = (time.monotonic() - t0) * 1e6
+    front = pareto_front(evals)
+    for e in evals:
+        rows.append((
+            f"dse/{e.label}",
+            us / len(evals),
+            f"area={e.area_um2:.0f}um2 area_red={e.area_reduction * 100:.1f}% "
+            f"bt_red={e.bt_reduction * 100:.2f}% lat={e.latency_ns:.0f}ns "
+            f"front={int(e in front)}",
+        ))
+
+    # --- the paper's area x BT plane: front + knee ---
+    n0 = ns[0]
+    plane = [e for e in evals if e.point.n == n0]
+    plane_front = pareto_front(plane, AREA_BT_OBJECTIVES)
+    knee = knee_point(plane_front, AREA_BT_OBJECTIVES)
+    app4 = next(
+        (e for e in plane
+         if e.point.ordering == "app" and e.point.k == 4), None,
+    )
+    rows.append((
+        f"dse/front/N{n0}", 0.0,
+        f"area_x_bt front: {'|'.join(e.label for e in plane_front)} "
+        f"knee={knee.label} (paper picks k=4: "
+        f"{PAPER['app_area_red']}% area red at {PAPER['app_bt_red']}% BT red)",
+    ))
+    if app4 is not None:
+        rows.append((
+            f"dse/paper_point/N{n0}", 0.0,
+            f"app-k4 area_red={app4.area_reduction * 100:.1f}% "
+            f"(paper {PAPER['app_area_red']}%) "
+            f"bt_red={app4.bt_reduction * 100:.2f}% "
+            f"(paper overall {PAPER['app_bt_red']}%; weight-stream model "
+            f"under-reduces, see table1_bt) on_front={int(app4 in front)}",
+        ))
+
+    # --- fused vs per-config: 1 launch vs |grid| (traced jaxpr) ---
+    variants = tuple(dict.fromkeys(e.point.variant for e in plane))
+    x = workload.streams[0]
+
+    def fused(stream):
+        return bt_count_variants(stream, variants=variants, input_lanes=_LANES)
+
+    def per_config(stream):
+        outs = []
+        for v in variants:
+            if v.key in ("acc", "app"):
+                res = psu_stream(
+                    stream, None, width=8, k=v.k, descending=v.descending,
+                    input_lanes=_LANES, weight_lanes=0,
+                )
+                outs.append(res.bt_input)
+            else:
+                outs.append(_staged_bt(stream, v))
+        return jnp.stack(outs)
+
+    np.testing.assert_array_equal(
+        np.asarray(fused(x))[:, 0], np.asarray(per_config(x))
+    )  # bit-exact paths
+    launches = {
+        "fused": count_pallas_launches(fused, x),
+        "per_config": count_pallas_launches(per_config, x),
+    }
+    for name, fn in (("fused", fused), ("per_config", per_config)):
+        jax.block_until_ready(fn(x))  # compile/warm
+        t0 = time.monotonic()
+        for _ in range(3):
+            jax.block_until_ready(fn(x))
+        us = (time.monotonic() - t0) / 3 * 1e6
+        rows.append((
+            f"dse/variant_bt/{name}",
+            us,
+            f"configs={len(variants)} pallas_launches={launches[name]}",
+        ))
+
+    # --- one NoC design point: per-link evaluation on a 4x4 mesh ---
+    noc_pt = DesignPoint(ordering="app", k=4, topology="mesh4x4")
+    noc_eval = evaluate_grid(
+        (noc_pt,), Workload("conv", (workload.streams[0],), lanes=_LANES)
+    )[0]
+    rows.append((
+        f"dse/{noc_eval.label}", 0.0,
+        f"fabric bt_red={noc_eval.noc_bt_reduction * 100:.2f}% over "
+        f"{noc_eval.noc_active_links} links (source-sorted, repro.noc)",
+    ))
+
+    # --- machine-readable artifact for the bench trajectory ---
+    # top-level front/knee/objectives all describe the SAME 3-objective
+    # full-grid analysis (a consumer can recompute them from `points`);
+    # the paper's area x BT plane at N=ns[0] rides in `meta`
+    path = os.environ.get("REPRO_DSE_ARTIFACT", "dse_front.json")
+    write_json(
+        path, evals, front=front, knee=knee_point(front),
+        workload=workload.name,
+        meta={
+            "conv_images": conv_images,
+            "paper": PAPER,
+            "launches": launches,
+            "area_bt_plane_n": n0,
+            "area_bt_front": [e.label for e in plane_front],
+            "area_bt_knee": knee.label,
+        },
+    )
+    rows.append((
+        "dse/artifact", 0.0,
+        f"front JSON -> {path} ({len(front)} of {len(evals)} points on the "
+        f"3-objective front)",
+    ))
+    return rows

@@ -35,10 +35,14 @@ def run() -> list[tuple[str, float, str]]:
             f"sort={100 * (1 - app.sort / acc.sort):.1f}% "
             f"(paper@N25: 35.4/24.9/36.7)",
         ))
-    # k-sweep beyond the paper (k=4 fixed there): area/BT trade-off curve
-    for k in (2, 4, 8):
-        a = psu_area(25, k=k)
-        rows.append((f"fig5/k_sweep/k{k}", 0.0, f"total={a.total:.0f}um2"))
+    # k-sweep beyond the paper (k=4 fixed there): the area leg of the
+    # repro.dse trade-off curve (dse_sweep joins it with measured BT)
+    from repro.dse import k_sweep
+
+    for pt in k_sweep(n=25, width=8, ks=(2, 4, 8),
+                      include_baseline=False, include_precise=False):
+        a = pt.area()
+        rows.append((f"fig5/k_sweep/k{pt.k}", 0.0, f"total={a.total:.0f}um2"))
 
     # timing model at the paper's 500 MHz target (latency scaling argument)
     from repro.core import bitonic_timing, psu_timing

@@ -39,14 +39,15 @@ def run() -> list[tuple[str, float, str]]:
             f"pe_power_red={pe_red:.2f}% (paper {p['pe_power']}%)",
         ))
     # sorting-unit power overhead ratio (paper: APP 1.43 mW vs ACC 2.28 mW,
-    # -37.3 %): modeled as proportional to the area model
-    from repro.core import psu_area
+    # -37.3 %): modeled as proportional to the area model, via the
+    # repro.dse design-point API (the one home of the sweep logic)
+    from repro.dse import DesignPoint, area_reduction
 
-    acc_a, app_a = psu_area(25), psu_area(25, k=4)
+    app_red = area_reduction(DesignPoint(n=25, width=8, k=4, ordering="app"))
     rows.append((
         "fig7/psu_power_overhead", 0.0,
-        f"app/acc area ratio={app_a.total / acc_a.total:.3f} -> overhead "
-        f"reduction={100 * (1 - app_a.total / acc_a.total):.1f}% (paper 37.3% "
+        f"app/acc area ratio={1 - app_red:.3f} -> overhead "
+        f"reduction={100 * app_red:.1f}% (paper 37.3% "
         "power, 35.4% area)",
     ))
     return rows

@@ -8,11 +8,14 @@ derived`` CSV (the harness contract).
   lenet_workload   -> paper §IV-B     (conv+pool platform, PSU in the loop)
   arch_bt          -> paper §V future work (transformer traffic BT)
   noc_bt           -> §V NoC fabric   (per-link BT across topologies/hops)
+  dse_sweep        -> design-space Pareto fronts (area x BT x latency)
   kernel_bench     -> Pallas kernel microbenchmarks
   roofline_report  -> deliverable (g) tables from the dry-run records
 
-Set REPRO_BENCH_TINY=1 to run each module at its smoke-test shape (a
-module's optional ``TINY_KWARGS`` dict) — the CI benchmark smoke step.
+Usage: ``python -m benchmarks.run [module ...]`` runs the named modules in
+registry order (no names = all); ``--list`` prints the valid names.  Set
+REPRO_BENCH_TINY=1 to run each module at its smoke-test shape (a module's
+optional ``TINY_KWARGS`` dict) — the CI benchmark smoke step.
 """
 
 from __future__ import annotations
@@ -25,6 +28,7 @@ import time
 def main() -> None:
     from . import (
         arch_bt,
+        dse_sweep,
         fig5_area,
         fig7_power,
         kernel_bench,
@@ -41,20 +45,29 @@ def main() -> None:
         ("lenet_workload", lenet_workload),
         ("arch_bt", arch_bt),
         ("noc_bt", noc_bt),
+        ("dse_sweep", dse_sweep),
         ("kernel_bench", kernel_bench),
         ("roofline_report", roofline_report),
     ]
-    only = sys.argv[1] if len(sys.argv) > 1 else None
-    if only is not None and only not in [name for name, _ in mods]:
-        valid = ", ".join(name for name, _ in mods)
+    args = sys.argv[1:]
+    if "--list" in args:
+        for name, _ in mods:
+            print(name)
+        return
+    valid = ", ".join(name for name, _ in mods)
+    names = dict.fromkeys(args)  # dedup, keep request order for the error
+    unknown = [a for a in names if a not in dict(mods)]
+    if unknown:
+        listed = ", ".join(repr(a) for a in unknown)
         raise SystemExit(
-            f"unknown benchmark module {only!r}; valid names: {valid}"
+            f"unknown benchmark module{'s' if len(unknown) > 1 else ''} "
+            f"{listed}; valid names: {valid}"
         )
     tiny = os.environ.get("REPRO_BENCH_TINY", "") not in ("", "0")
     print("name,us_per_call,derived")
     failures = 0
     for name, mod in mods:
-        if only and only != name:
+        if names and name not in names:
             continue
         t0 = time.monotonic()
         try:

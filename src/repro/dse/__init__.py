@@ -1,0 +1,52 @@
+# The design-space exploration subsystem (DESIGN.md §10): the paper
+# evaluates two points (ACC, APP k=4); this layer maps the whole space.
+#   space.py    - DesignPoint (family/N/W/k/ordering/topology) + grids
+#   evaluate.py - grid x workload -> joined BT/area/timing/power records,
+#                 all stream variants measured by ONE batched Pallas launch
+#                 (repro.kernels.bt_count_variants); optional per-link NoC
+#                 evaluation via repro.noc
+#   pareto.py   - dominance filtering + knee selection over
+#                 area x BT-reduction x latency
+#   report.py   - JSON / CSV artifacts for the bench trajectory
+from .evaluate import Evaluation, Workload, evaluate_grid
+from .pareto import (
+    AREA_BT_OBJECTIVES,
+    DEFAULT_OBJECTIVES,
+    Objective,
+    dominates,
+    knee_point,
+    pareto_front,
+)
+from .report import point_record, to_records, write_csv, write_json
+from .space import (
+    FAMILIES,
+    ORDERINGS,
+    DesignPoint,
+    area_reduction,
+    expand_grid,
+    k_sweep,
+    parse_topology,
+)
+
+__all__ = [
+    "DesignPoint",
+    "FAMILIES",
+    "ORDERINGS",
+    "expand_grid",
+    "k_sweep",
+    "area_reduction",
+    "Workload",
+    "Evaluation",
+    "evaluate_grid",
+    "parse_topology",
+    "Objective",
+    "DEFAULT_OBJECTIVES",
+    "AREA_BT_OBJECTIVES",
+    "dominates",
+    "pareto_front",
+    "knee_point",
+    "point_record",
+    "to_records",
+    "write_json",
+    "write_csv",
+]

@@ -1,0 +1,250 @@
+"""Evaluate a design grid against a workload — the DSE measurement core.
+
+For every :class:`~repro.dse.space.DesignPoint` of a grid, one
+:class:`Evaluation` joins the repo's models end to end:
+
+  * **BT** — measured on the workload's actual flit streams.  All points'
+    stream variants are measured by ONE batched Pallas launch per
+    (stream, key width) via ``repro.kernels.bt_count_variants`` — the
+    variant axis lives inside the launch, so a grid of G configurations
+    costs 1 launch where the per-config path costs G (the same claim
+    structure as ``bt_count_links`` for the NoC; demonstrated from the
+    traced jaxpr in ``benchmarks/dse_sweep.py``).
+  * **Area / timing** — the calibrated closed-form models of
+    ``repro.core.area`` (DESIGN.md §6), per family/N/W/k.
+  * **Link power / energy** — ``repro.link.LinkPowerModel`` maps the BT
+    reduction to link-related power reduction and absolute energy.
+  * **NoC (optional)** — points with a ``topology`` are additionally run
+    through ``repro.noc.simulate_noc`` (per-link batched BT kernel) as a
+    source-sorted fabric carrying the workload across the topology
+    diameter, reported as fabric-level BT reduction vs the unsorted fabric.
+
+The unsorted 'none' variant is always measured as the reduction baseline;
+area reductions are vs the precise ACC-PSU at the same (N, W), matching the
+paper's Fig. 5 comparison.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.area import PSUArea, PSUTiming, psu_area
+from repro.kernels import Variant, bt_count_variants
+from repro.link import LinkPowerModel, LinkSpec
+
+from .space import DesignPoint, parse_topology
+
+__all__ = ["Workload", "Evaluation", "evaluate_grid"]
+
+_BASELINE = Variant("none", None, False)
+
+
+class Workload(NamedTuple):
+    """The traffic a design grid is evaluated on.
+
+    ``streams`` are (P, elems) byte-packet arrays measured independently
+    (the Table-I conv setup streams inputs and weights on separate links);
+    ``lanes`` is the byte width of each measured flit.
+    """
+
+    name: str
+    streams: tuple[jax.Array, ...]
+    lanes: int = 16
+
+    @property
+    def elems_per_packet(self) -> int:
+        return int(self.streams[0].shape[-1])
+
+    @property
+    def num_flits(self) -> int:
+        return sum(
+            int(s.shape[0]) * (int(s.shape[-1]) // self.lanes)
+            for s in self.streams
+        )
+
+
+def _validate_workload(workload: Workload) -> None:
+    if not workload.streams:
+        raise ValueError(f"workload {workload.name!r} has no streams")
+    elems = None
+    for s in workload.streams:
+        if getattr(s, "ndim", None) != 2 or s.shape[0] == 0:
+            raise ValueError(
+                f"workload {workload.name!r}: streams must be non-empty "
+                f"(P, elems) arrays, got {getattr(s, 'shape', None)}"
+            )
+        elems = s.shape[-1] if elems is None else elems
+        if s.shape[-1] != elems:
+            raise ValueError(
+                f"workload {workload.name!r}: streams disagree on packet "
+                f"size ({elems} vs {s.shape[-1]})"
+            )
+    if elems % workload.lanes != 0:
+        raise ValueError(
+            f"workload {workload.name!r}: packet size {elems} not divisible "
+            f"by lanes={workload.lanes}"
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class Evaluation:
+    """One design point joined across the BT / area / timing / power models."""
+
+    point: DesignPoint
+    area: PSUArea
+    timing: PSUTiming
+    total_bt: int
+    num_flits: int
+    bt_reduction: float  # vs the unsorted stream, fraction
+    area_reduction: float  # vs the precise ACC-PSU at the same (N, W)
+    link_power_reduction: float  # Fig. 6/7 model applied to bt_reduction
+    energy_pj: float
+    noc_bt_reduction: float | None = None  # fabric-level, when topology set
+    noc_active_links: int | None = None
+
+    @property
+    def label(self) -> str:
+        return self.point.label
+
+    @property
+    def area_um2(self) -> float:
+        return self.area.total
+
+    @property
+    def bt_per_flit(self) -> float:
+        return self.total_bt / max(self.num_flits, 1)
+
+    @property
+    def latency_ns(self) -> float:
+        """Time to sort one N-element window at the paper's 500 MHz."""
+        return self.timing.sort_time_ns(self.point.n)
+
+
+def _noc_spec(point: DesignPoint, workload: Workload) -> LinkSpec:
+    """Input-only LinkSpec carrying the workload packets under the point's
+    ordering (a LinkSpec means the same thing on a NoC link, DESIGN.md §9)."""
+    lanes = workload.lanes
+    return LinkSpec(
+        width_bits=8 * lanes,
+        flits_per_packet=workload.elems_per_packet // lanes,
+        input_lanes=lanes,
+        weight_lanes=0,
+        key=point.ordering,
+        width=point.width,
+        k=point.k if point.k is not None else 4,
+        descending=point.descending,
+    )
+
+
+def _noc_total_bt(
+    point: DesignPoint, workload: Workload, interpret: bool | None
+) -> tuple[int, int]:
+    """(fabric total BT, active links) of the workload crossing the fabric
+    from router 0 to the farthest router, sorted at the source."""
+    from repro.noc import TrafficFlow, hop_count, simulate_noc
+
+    topo = parse_topology(point.topology)
+    far = max(
+        range(topo.num_routers), key=lambda r: hop_count(topo, 0, r)
+    )
+    flows = [
+        TrafficFlow(f"{workload.name}/{i}", 0, (far,), jnp.asarray(s))
+        for i, s in enumerate(workload.streams)
+    ]
+    rep = simulate_noc(
+        topo, flows, _noc_spec(point, workload), sort_at="source",
+        interpret=interpret, name=point.label,
+    )
+    return rep.total_bt, rep.active_links
+
+
+def evaluate_grid(
+    points: Sequence[DesignPoint],
+    workload: Workload,
+    *,
+    power: LinkPowerModel | None = None,
+    interpret: bool | None = None,
+    block_packets: int = 64,
+) -> tuple[Evaluation, ...]:
+    """Evaluate every design point of a grid against one workload.
+
+    Points sharing a stream variant (e.g. the comparator families, which
+    sort exactly like ACC) share one measurement; distinct key widths get
+    separate launches (the popcount mask is per width).
+    """
+    points = tuple(points)
+    if not points:
+        return ()
+    _validate_workload(workload)
+    power = power if power is not None else LinkPowerModel()
+
+    # --- unique stream variants per key width (+ the reduction baseline) ---
+    variants_by_width: dict[int, list[Variant]] = {}
+    for pt in points:
+        vs = variants_by_width.setdefault(pt.width, [_BASELINE])
+        if pt.variant not in vs:
+            vs.append(pt.variant)
+
+    # --- measure: ONE batched launch per (stream, width) ---
+    bt_tab: dict[tuple[int, Variant], int] = {}
+    for width in sorted(variants_by_width):
+        vs = tuple(variants_by_width[width])
+        totals = np.zeros((len(vs), 2), dtype=np.int64)
+        for s in workload.streams:
+            totals += np.asarray(
+                bt_count_variants(
+                    jnp.asarray(s),
+                    None,
+                    variants=vs,
+                    width=width,
+                    input_lanes=workload.lanes,
+                    block_packets=block_packets,
+                    interpret=interpret,
+                ),
+                dtype=np.int64,
+            )
+        for v, (bi, bw) in zip(vs, totals.tolist()):
+            bt_tab[(width, v)] = int(bi) + int(bw)
+
+    # --- NoC runs (points with a topology), baseline cached per fabric ---
+    noc_base: dict[tuple[str, int], int] = {}
+    num_flits = workload.num_flits
+
+    evals: list[Evaluation] = []
+    for pt in points:
+        total_bt = bt_tab[(pt.width, pt.variant)]
+        base_bt = bt_tab[(pt.width, _BASELINE)]
+        bt_red = 1.0 - total_bt / max(base_bt, 1)
+        area = pt.area()
+        acc_total = psu_area(pt.n, pt.width).total
+        noc_red = noc_links = None
+        if pt.topology is not None:
+            key = (pt.topology, pt.width)
+            if key not in noc_base:
+                base_pt = dataclasses.replace(
+                    pt, family="psu", ordering="none", k=None, descending=False
+                )
+                noc_base[key], _ = _noc_total_bt(base_pt, workload, interpret)
+            bt_fabric, noc_links = _noc_total_bt(pt, workload, interpret)
+            noc_red = 1.0 - bt_fabric / max(noc_base[key], 1)
+        evals.append(
+            Evaluation(
+                point=pt,
+                area=area,
+                timing=pt.timing(),
+                total_bt=total_bt,
+                num_flits=num_flits,
+                bt_reduction=bt_red,
+                area_reduction=1.0 - area.total / acc_total,
+                link_power_reduction=power.power_reduction(bt_red),
+                energy_pj=power.link_energy_pj(total_bt, num_flits),
+                noc_bt_reduction=noc_red,
+                noc_active_links=noc_links,
+            )
+        )
+    return tuple(evals)

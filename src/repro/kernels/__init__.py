@@ -6,12 +6,17 @@
 #   btcount.py    - bit-transition counting over flit streams (the metric)
 #   bt_links.py   - batched per-link BT over a whole NoC's streams in one
 #                   launch (the repro.noc hot path, DESIGN.md §9)
+#   bt_variants.py- multi-variant ordered BT: a whole design grid's stream
+#                   measurements in one launch (the repro.dse hot path,
+#                   DESIGN.md §10)
 #   quantize.py   - int8 egress quantizer for the compressed all-reduce path
 # ops.py holds the jit'd wrappers, ref.py the pure-jnp oracles.
 from .ops import (
     PsuStreamResult,
+    Variant,
     bt_count,
     bt_count_links,
+    bt_count_variants,
     default_interpret,
     psu_reorder,
     psu_sort,
@@ -26,6 +31,8 @@ __all__ = [
     "PsuStreamResult",
     "bt_count",
     "bt_count_links",
+    "bt_count_variants",
+    "Variant",
     "quantize_egress",
     "default_interpret",
 ]

@@ -1,0 +1,244 @@
+"""Pallas TPU kernel: batched multi-variant ordered-BT measurement.
+
+The design-space engine (``repro.dse``) compares MANY sorting-unit
+configurations — precise (ACC) vs every bucket count k, ascending vs
+descending, against the unsorted and column-major baselines — on the same
+packet stream.  Measuring each configuration with ``psu_stream``/``bt_count``
+costs one kernel launch per configuration; this kernel puts the *variant*
+axis inside a single launch instead.
+
+One grid step loads a (BP, N) packet block into VMEM, runs the popcount
+stage ONCE, and then — for every variant in the static tuple — runs the
+variant's bucket encoder, the shared counting-sort rank machinery
+(``psu._rank_from_keys``), the permutation-matrix reorder of
+``psu_stream.py``, the flit pack and the BT accumulate.  The variant loop is
+a Python loop over a static tuple, so it unrolls at trace time: all variants
+live in the ONE traced kernel and the popcount tensor is shared by every
+bucketing derived from it.
+
+A variant is a ``Variant(key, k, descending)`` triple:
+
+  * ``key='acc'``            — exact popcount keys (W+1 buckets),
+  * ``key='app'``            — the k-bucket approximate encoder,
+  * ``key='none'``           — the unsorted baseline (identity order),
+  * ``key='column_major'``   — the fixed column-major re-traversal of the
+    (flits, lanes) packet matrix (a layout, not a data-dependent sort — it
+    lowers to a reshape/transpose, no rank computation).
+
+Per block the kernel emits (a) per-variant (input-side, weight-side) BT
+partials over the block-internal flit boundaries, and (b) each variant's
+first and last packed flit row, from which the ``ops.py`` wrapper patches
+the G-1 inter-block boundaries with O(grid) jnp arithmetic — the same
+partial/patch split as ``psu_stream.py``, extended per variant.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from .psu import _popcount_bits, _rank_from_keys
+
+__all__ = ["Variant", "VARIANT_KEYS", "bt_variants_pallas"]
+
+VARIANT_KEYS = ("none", "column_major", "acc", "app")
+
+
+class Variant(NamedTuple):
+    """One measured ordering configuration of the variant-BT kernel.
+
+    ``key`` is a packet-granularity ordering ('none' | 'column_major' |
+    'acc' | 'app'); ``k`` is the APP bucket count (None for every other
+    key); ``descending`` flips the sort direction (ACC/APP only).
+    """
+
+    key: str = "acc"
+    k: int | None = None
+    descending: bool = False
+
+
+def validate_variants(
+    variants: tuple[Variant, ...], width: int
+) -> tuple[Variant, ...]:
+    """Check a static variant tuple against the kernel's contract."""
+    if not variants:
+        raise ValueError("need at least one variant")
+    out = []
+    for v in variants:
+        v = Variant(*v)
+        if v.key not in VARIANT_KEYS:
+            raise ValueError(
+                f"unknown variant key {v.key!r}; choose from {VARIANT_KEYS}"
+            )
+        if v.key == "app":
+            if v.k is None or not 1 <= v.k <= width + 1:
+                raise ValueError(
+                    f"variant {v}: 'app' needs k in [1, {width + 1}]"
+                )
+        elif v.k is not None:
+            raise ValueError(f"variant {v}: k is only meaningful for 'app'")
+        if v.descending and v.key not in ("acc", "app"):
+            raise ValueError(
+                f"variant {v}: descending applies to sorted keys only"
+            )
+        out.append(v)
+    return tuple(out)
+
+
+def _bt_variants_kernel(
+    x_ref,
+    w_ref,
+    bt_ref,
+    edge_ref,
+    *,
+    variants: tuple[Variant, ...],
+    width: int,
+    input_lanes: int,
+    weight_lanes: int,
+    pack: str,
+):
+    """Measure ordered BT of one (BP, N) block under every variant."""
+    x = x_ref[...].astype(jnp.int32)
+    w = w_ref[...].astype(jnp.int32)
+    bp, n = x.shape
+    flits = n // input_lanes
+
+    # --- popcount stage: ONCE per block, shared by every bucketing ---
+    pc = _popcount_bits(x, width)
+
+    def _flit(values, lanes):
+        if pack == "lane":
+            return values.reshape(bp, lanes, flits).transpose(0, 2, 1)
+        return values.reshape(bp, flits, lanes)
+
+    for v, (key_name, k, descending) in enumerate(variants):
+        if key_name in ("acc", "app"):
+            # --- bucket encoder + shared rank machinery (psu.py) ---
+            if key_name == "acc":
+                key, nb = pc, width + 1
+            else:
+                key, nb = (pc * k) // (width + 1), k
+            if descending:
+                key = (nb - 1) - key
+            rank = _rank_from_keys(key, nb)
+            # --- reorder: permutation-matrix MXU product (psu_stream.py);
+            # no iota row — the DSE path needs streams, not `order` ---
+            iota_j = lax.broadcasted_iota(jnp.int32, (bp, n, n), 2)
+            perm = (rank[:, :, None] == iota_j).astype(jnp.float32)
+            payload = jnp.stack([x, w], axis=1).astype(jnp.float32)
+            moved = lax.dot_general(
+                payload,
+                perm,
+                dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+                preferred_element_type=jnp.float32,
+            ).astype(jnp.int32)  # (BP, 2, N)
+            xs, ws = moved[:, 0, :], moved[:, 1, :]
+        elif key_name == "column_major":
+            # fixed layout permutation — output position (l*F + f) carries
+            # input element (f*L + l): a transpose of the (F, L) packet view
+            xs = x.reshape(bp, flits, input_lanes).transpose(0, 2, 1)
+            xs = xs.reshape(bp, n)
+            ws = w.reshape(bp, flits, input_lanes).transpose(0, 2, 1)
+            ws = ws.reshape(bp, n)
+        else:  # 'none'
+            xs, ws = x, w
+
+        # --- flit-pack + BT-accumulate stages (as in psu_stream.py) ---
+        if weight_lanes:
+            flit_block = jnp.concatenate(
+                [_flit(xs, input_lanes), _flit(ws, weight_lanes)], axis=-1
+            )
+        else:
+            flit_block = _flit(xs, input_lanes)
+        lanes = input_lanes + weight_lanes
+        stream = flit_block.reshape(bp * flits, lanes)
+        flips = _popcount_bits(
+            jnp.bitwise_xor(stream[:-1], stream[1:]), 8
+        )  # byte lanes are 8-bit regardless of the element sort width
+        bt_ref[0, v, 0] = flips[:, :input_lanes].sum()
+        bt_ref[0, v, 1] = (
+            flips[:, input_lanes:].sum() if weight_lanes else jnp.int32(0)
+        )
+        edge_ref[0, v, 0, :] = stream[0]
+        edge_ref[0, v, 1, :] = stream[-1]
+
+
+def bt_variants_pallas(
+    inputs: jax.Array,
+    weights: jax.Array,
+    *,
+    variants: tuple[Variant, ...],
+    width: int = 8,
+    input_lanes: int = 8,
+    weight_lanes: int = 0,
+    pack: str = "lane",
+    block_packets: int = 64,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Per-variant ordered BT of a (P, N) packet batch in ONE launch.
+
+    Args:
+      inputs: (P, N) int packets; P must be a multiple of ``block_packets``
+        (the ``ops.py`` wrapper pads with zero packets — zeros sort to zeros
+        under every variant, and the wrapper subtracts the one spurious
+        boundary into the padded tail).
+      weights: (P, N) paired weight bytes (zeros when ``weight_lanes=0``).
+      variants: static tuple of :class:`Variant` configurations.
+      width: element bit width W of the sort keys.
+      input_lanes / weight_lanes: bytes of each side per flit.
+      pack: 'lane' (PSU lane-major, paper Fig. 2) or 'row'.
+      block_packets: packets per grid step.
+      interpret: run the kernel body in Python (CPU validation mode).
+
+    Returns:
+      (partials, edges): int32 (G, V, 2) per-block (input, weight) BT
+      partials over block-internal boundaries, and int32 (G, V, 2, lanes)
+      per-block first/last packed flit rows per variant (for the wrapper's
+      inter-block boundary patch).
+    """
+    variants = validate_variants(variants, width)
+    p, n = inputs.shape
+    if p % block_packets != 0:
+        raise ValueError(f"P={p} not a multiple of block_packets={block_packets}")
+    if n % input_lanes != 0:
+        raise ValueError(f"packet size {n} not divisible by input_lanes={input_lanes}")
+    if weight_lanes not in (0, input_lanes):
+        raise ValueError(
+            "variant kernel needs a symmetric (or absent) weight side: "
+            f"weight_lanes={weight_lanes} vs input_lanes={input_lanes}"
+        )
+    if pack not in ("lane", "row"):
+        raise ValueError(f"variant kernel supports pack 'lane'|'row', got {pack!r}")
+    nv = len(variants)
+    lanes = input_lanes + weight_lanes
+    grid = (p // block_packets,)
+    kern = functools.partial(
+        _bt_variants_kernel,
+        variants=variants,
+        width=width,
+        input_lanes=input_lanes,
+        weight_lanes=weight_lanes,
+        pack=pack,
+    )
+    pk_spec = pl.BlockSpec((block_packets, n), lambda i: (i, 0))
+    out_shape = [
+        jax.ShapeDtypeStruct((p // block_packets, nv, 2), jnp.int32),
+        jax.ShapeDtypeStruct((p // block_packets, nv, 2, lanes), jnp.int32),
+    ]
+    out_specs = [
+        pl.BlockSpec((1, nv, 2), lambda i: (i, 0, 0)),
+        pl.BlockSpec((1, nv, 2, lanes), lambda i: (i, 0, 0, 0)),
+    ]
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[pk_spec, pk_spec],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(inputs.astype(jnp.int32), weights.astype(jnp.int32))

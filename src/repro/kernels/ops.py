@@ -15,10 +15,12 @@ import jax
 import jax.numpy as jnp
 
 from .bt_links import bt_links_pallas
+from .bt_variants import Variant, bt_variants_pallas, validate_variants
 from .btcount import bt_count_pallas
 from .psu import _popcount_bits, psu_sort_pallas
 from .psu_stream import psu_stream_pallas
 from .quantize import quantize_egress_pallas
+from .ref import variant_order_ref
 
 __all__ = [
     "psu_sort",
@@ -27,6 +29,8 @@ __all__ = [
     "PsuStreamResult",
     "bt_count",
     "bt_count_links",
+    "bt_count_variants",
+    "Variant",
     "quantize_egress",
     "default_interpret",
 ]
@@ -261,6 +265,123 @@ def bt_count_links(
         interpret=interpret,
     )
     return partials.sum(axis=1)[:links]
+
+
+@partial(
+    jax.jit,
+    static_argnames=(
+        "variants",
+        "width",
+        "input_lanes",
+        "weight_lanes",
+        "pack",
+        "block_packets",
+        "interpret",
+    ),
+)
+def bt_count_variants(
+    inputs: jax.Array,
+    weights: jax.Array | None = None,
+    variants: tuple[Variant, ...] = (Variant("acc"),),
+    width: int = 8,
+    input_lanes: int = 8,
+    weight_lanes: int | None = None,
+    pack: str = "lane",
+    block_packets: int = 64,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Ordered BT of (P, N) packets under MANY variants in ONE kernel launch.
+
+    The batched replacement for looping one ``psu_stream``/``bt_count``
+    launch per design configuration: the variant axis lives inside the
+    single launch (``bt_variants.py`` unrolls the static variant tuple per
+    block, sharing one popcount pass), which is what makes a whole
+    ``repro.dse`` grid one launch per measured stream.
+
+    Accepts any (P, N) integer packets; P is padded to the kernel block
+    size with zero packets (zeros sort to zeros under every variant).  The
+    per-block partials miss (a) the G-1 inter-block flit boundaries —
+    patched from the per-block edge flits the kernel emits — and (b)
+    over-count one boundary from the last real flit into the zero-padded
+    tail, subtracted per variant from the reference reorder of the last
+    real packet (O(V*N) jnp arithmetic; no extra launch).
+
+    Args:
+      inputs: (P, N) integer packets.
+      weights: optional (P, N) paired weight bytes.
+      variants: static tuple of ``Variant(key, k, descending)`` configs.
+      width: element bit width W of the sort keys.
+      input_lanes / weight_lanes: bytes of each side per flit (weight side
+        defaults to ``input_lanes`` when weights are given, else 0).
+      pack: 'lane' or 'row' flit layout.
+
+    Returns:
+      int32 (V, 2): per-variant (input-side, weight-side) bit transitions.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    variants = validate_variants(tuple(variants), width)
+    if weights is None:
+        weight_lanes = 0 if weight_lanes is None else weight_lanes
+        weights = jnp.zeros_like(inputs)
+    elif weight_lanes is None:
+        weight_lanes = input_lanes
+    if weights.shape != inputs.shape:
+        raise ValueError(f"paired shapes differ: {inputs.shape} vs {weights.shape}")
+    p, n = inputs.shape
+    flits = n // input_lanes
+    bp = min(block_packets, max(1, p))
+    pad = (-p) % bp
+    x = jnp.pad(inputs.astype(jnp.int32), ((0, pad), (0, 0)))
+    w = jnp.pad(weights.astype(jnp.int32), ((0, pad), (0, 0)))
+    partials, edges = bt_variants_pallas(
+        x,
+        w,
+        variants=variants,
+        width=width,
+        input_lanes=input_lanes,
+        weight_lanes=weight_lanes,
+        pack=pack,
+        block_packets=bp,
+        interpret=interpret,
+    )
+    bt = partials.sum(axis=0)  # (V, 2): block-internal boundaries
+
+    def _halves(flips):  # (..., lanes) -> (..., 2) per-side sums
+        return jnp.stack(
+            [flips[..., :input_lanes].sum(-1), flips[..., input_lanes:].sum(-1)],
+            axis=-1,
+        )
+
+    grid = (p + pad) // bp
+    if grid > 1:
+        # inter-block boundaries: last flit of block g-1 -> first of block g
+        flips = _popcount_bits(
+            jnp.bitwise_xor(edges[:-1, :, 1, :], edges[1:, :, 0, :]), 8
+        )  # (G-1, V, lanes)
+        bt = bt + _halves(flips).sum(axis=0)
+    if pad:
+        # remove the spurious boundary from the last real flit into the
+        # zero-padded tail: reorder the ONE last real packet per variant
+        # with the pure-jnp reference and take its final flit
+        last_flits = []
+        for variant in variants:
+            order = variant_order_ref(
+                x[p - 1 : p], variant, width=width, input_lanes=input_lanes
+            )
+            xs = jnp.take_along_axis(x[p - 1 : p], order, axis=-1)
+            ws = jnp.take_along_axis(w[p - 1 : p], order, axis=-1)
+            if pack == "lane":
+                fi = xs.reshape(input_lanes, flits).T
+                fw = ws.reshape(weight_lanes, flits).T if weight_lanes else None
+            else:
+                fi = xs.reshape(flits, input_lanes)
+                fw = ws.reshape(flits, weight_lanes) if weight_lanes else None
+            row = fi[-1] if fw is None else jnp.concatenate([fi[-1], fw[-1]])
+            last_flits.append(row)
+        flips = _popcount_bits(jnp.stack(last_flits), 8)  # (V, lanes)
+        bt = bt - _halves(flips)
+    return bt
 
 
 @partial(jax.jit, static_argnames=("block", "interpret"))

@@ -50,6 +50,28 @@ def _popcount_bits(x: jax.Array, width: int) -> jax.Array:
     return v & jnp.int32(0x1F)
 
 
+def _rank_from_keys(key: jax.Array, nb: int) -> jax.Array:
+    """Stages 2-3 of the PSU on one (BP, N) int32 key block: one-hot /
+    histogram / prefix-sum, then index mapping.
+
+    Factored out of :func:`_rank_block` so the multi-variant BT kernel
+    (``bt_variants.py``) can derive several bucketings from ONE popcount
+    pass without duplicating the counting-sort machinery.  Returns the
+    (BP, N) int32 ``rank`` (stable counting-sort output addresses).
+    """
+    bp, n = key.shape
+
+    # --- one-hot / histogram / prefix-sum stages ---
+    iota_k = lax.broadcasted_iota(jnp.int32, (bp, n, nb), 2)
+    onehot = (key[:, :, None] == iota_k).astype(jnp.int32)  # (BP, N, K)
+    within = jnp.cumsum(onehot, axis=1) - onehot  # earlier-equal count
+    hist = onehot.sum(axis=1)  # (BP, K)
+    starts = jnp.cumsum(hist, axis=1) - hist  # exclusive prefix sum
+
+    # --- index mapping stage ---
+    return ((within + starts[:, None, :]) * onehot).sum(axis=2)  # (BP, N)
+
+
 def _rank_block(
     x: jax.Array, *, width: int, k: int | None, descending: bool
 ) -> jax.Array:
@@ -61,8 +83,6 @@ def _rank_block(
     them.  Returns the (BP, N) int32 ``rank`` (stable counting-sort output
     addresses).
     """
-    bp, n = x.shape
-
     # --- popcount stage (+ APP bucket encoder) ---
     p = _popcount_bits(x, width)
     if k is None:
@@ -71,16 +91,7 @@ def _rank_block(
         key, nb = (p * k) // (width + 1), k
     if descending:
         key = (nb - 1) - key
-
-    # --- one-hot / histogram / prefix-sum stages ---
-    iota_k = lax.broadcasted_iota(jnp.int32, (bp, n, nb), 2)
-    onehot = (key[:, :, None] == iota_k).astype(jnp.int32)  # (BP, N, K)
-    within = jnp.cumsum(onehot, axis=1) - onehot  # earlier-equal count
-    hist = onehot.sum(axis=1)  # (BP, K)
-    starts = jnp.cumsum(hist, axis=1) - hist  # exclusive prefix sum
-
-    # --- index mapping stage ---
-    return ((within + starts[:, None, :]) * onehot).sum(axis=2)  # (BP, N)
+    return _rank_from_keys(key, nb)
 
 
 def _psu_kernel(

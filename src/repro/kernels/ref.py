@@ -13,7 +13,14 @@ import jax.numpy as jnp
 from repro.core.popcount import bucket_map, popcount
 from repro.core.sorting import counting_sort_indices, counting_sort_ranks
 
-__all__ = ["psu_sort_ref", "psu_stream_ref", "bt_count_ref", "quantize_egress_ref"]
+__all__ = [
+    "psu_sort_ref",
+    "psu_stream_ref",
+    "bt_count_ref",
+    "bt_variants_ref",
+    "variant_order_ref",
+    "quantize_egress_ref",
+]
 
 
 def psu_sort_ref(
@@ -88,6 +95,88 @@ def psu_stream_ref(
         bt_count_ref(stream[:, input_lanes:]) if weight_lanes else jnp.int32(0)
     )
     return order, rank, stream.astype(jnp.uint8), bt_i, bt_w
+
+
+def variant_order_ref(
+    values: jax.Array,
+    variant,
+    *,
+    width: int = 8,
+    input_lanes: int = 8,
+) -> jax.Array:
+    """Transmit order of one BT-variant — the per-variant reorder applied by
+    the ``bt_variants`` kernel, as a pure-jnp (P, N) permutation.
+
+    ``variant`` is a ``(key, k, descending)`` triple
+    (``repro.kernels.bt_variants.Variant``).  Built only from
+    ``repro.core`` primitives so the kernel tests pin against the paper's
+    reference dataflow.
+    """
+    key_name, k, descending = variant
+    p, n = values.shape
+    if key_name == "none":
+        order = jnp.arange(n, dtype=jnp.int32)
+        return jnp.broadcast_to(order, (p, n))
+    if key_name == "column_major":
+        flits = n // input_lanes
+        j = jnp.arange(n, dtype=jnp.int32)
+        order = (j % flits) * input_lanes + j // flits
+        return jnp.broadcast_to(order, (p, n))
+    keys = popcount(values, width)
+    nb = width + 1
+    if key_name == "app":
+        keys = bucket_map(keys, width, k)
+        nb = k
+    if descending:
+        keys = (nb - 1) - keys
+    return counting_sort_indices(keys, nb).astype(jnp.int32)
+
+
+def bt_variants_ref(
+    inputs: jax.Array,
+    weights: jax.Array | None,
+    variants,
+    *,
+    width: int = 8,
+    input_lanes: int = 8,
+    weight_lanes: int = 0,
+    pack: str = "lane",
+) -> jax.Array:
+    """Oracle for the multi-variant BT kernel: for each variant, the unfused
+    order -> gather -> flit-pack -> BT composition on the whole stream.
+
+    Returns int32 (V, 2) per-variant (input-side, weight-side) totals,
+    matching ``repro.kernels.bt_count_variants``.
+    """
+    p, n = inputs.shape
+    flits = n // input_lanes
+
+    def _flits(values, lanes):
+        if pack == "lane":
+            return values.reshape(p, lanes, flits).transpose(0, 2, 1)
+        return values.reshape(p, flits, lanes)
+
+    rows = []
+    for variant in variants:
+        order = variant_order_ref(
+            inputs, variant, width=width, input_lanes=input_lanes
+        )
+        xs = jnp.take_along_axis(inputs.astype(jnp.int32), order, axis=-1)
+        halves = [_flits(xs, input_lanes)]
+        if weight_lanes:
+            ws = jnp.take_along_axis(weights.astype(jnp.int32), order, axis=-1)
+            halves.append(_flits(ws, weight_lanes))
+        stream = jnp.concatenate(halves, axis=-1).reshape(
+            p * flits, input_lanes + weight_lanes
+        )
+        bt_i = bt_count_ref(stream[:, :input_lanes])
+        bt_w = (
+            bt_count_ref(stream[:, input_lanes:])
+            if weight_lanes
+            else jnp.int32(0)
+        )
+        rows.append(jnp.stack([bt_i, bt_w]))
+    return jnp.stack(rows).astype(jnp.int32)
 
 
 def bt_count_ref(stream: jax.Array, width: int = 8) -> jax.Array:

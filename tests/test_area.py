@@ -1,14 +1,34 @@
-"""Analytical area model: the paper's Fig. 5 anchors must hold exactly."""
+"""Analytical area + timing models: the paper's Fig. 5 anchors must hold
+exactly, and the 500 MHz pipelined timing model must match its documented
+stage structure."""
+
+import math
 
 import pytest
 
-from repro.core import AREA_ANCHORS, bitonic_area, csn_area, psu_area
+from repro.core import (
+    AREA_ANCHORS,
+    PSUTiming,
+    bitonic_area,
+    bitonic_timing,
+    csn_area,
+    psu_area,
+    psu_timing,
+)
 
 
 def test_paper_anchors_exact():
     assert psu_area(25, k=4).total == pytest.approx(AREA_ANCHORS[("app", 25)], rel=5e-3)
     assert psu_area(49, k=4).total == pytest.approx(AREA_ANCHORS[("app", 49)], rel=5e-3)
     assert psu_area(25).total == pytest.approx(AREA_ANCHORS[("acc", 25)], rel=5e-3)
+
+
+def test_all_area_anchors_within_tolerance():
+    """psu_area must reproduce every AREA_ANCHORS entry (the calibration
+    contract of DESIGN.md §6), not just the headline points."""
+    for (kind, n), um2 in AREA_ANCHORS.items():
+        k = 4 if kind == "app" else None
+        assert psu_area(n, k=k).total == pytest.approx(um2, rel=5e-3), (kind, n)
 
 
 def test_headline_claims():
@@ -36,3 +56,44 @@ def test_monotone_in_k_and_n():
 
 def test_csn_is_80pct_more_logic():
     assert csn_area(25).sort == pytest.approx(bitonic_area(25).sort * 1.8)
+
+
+# ------------------------------------------------------------- timing model
+
+
+def test_psu_timing_stage_structure():
+    """PSU latency = popcount(1) + encode(1) + prefix(ceil(log2 K)) +
+    scatter(1) cycles, O(1) in N, streaming 1 element/cycle."""
+    for n in (25, 49):
+        acc = psu_timing(n)
+        assert acc.latency_cycles == 3 + math.ceil(math.log2(9))  # K = W+1 = 9
+        assert acc.throughput_elems_per_cycle == 1.0
+    # O(1) in N: the window size never enters the latency
+    assert psu_timing(25).latency_cycles == psu_timing(49).latency_cycles
+    # APP's narrower bucket index shortens the prefix stage
+    assert psu_timing(25, k=4).latency_cycles == 3 + 2
+    assert psu_timing(25, k=2).latency_cycles == 3 + 1
+    assert psu_timing(25, k=4).latency_cycles < psu_timing(25).latency_cycles
+    # width drives the exact unit's bucket count
+    assert psu_timing(25, width=4).latency_cycles == 3 + math.ceil(math.log2(5))
+
+
+def test_bitonic_timing_stage_count():
+    """Batcher network: log2(n_pad)*(log2(n_pad)+1)/2 pipelined stages."""
+    assert bitonic_timing(25).latency_cycles == 5 * 6 // 2  # pad 25 -> 32
+    assert bitonic_timing(49).latency_cycles == 6 * 7 // 2  # pad 49 -> 64
+    assert bitonic_timing(25).throughput_elems_per_cycle == 25.0
+    # the paper's scaling argument: bitonic latency grows with N, PSU's not
+    assert bitonic_timing(49).latency_cycles > bitonic_timing(25).latency_cycles
+
+
+def test_sort_time_ns_at_500mhz():
+    """sort_time = (latency + n/throughput) cycles at 2 ns/cycle."""
+    t = PSUTiming(latency_cycles=5, throughput_elems_per_cycle=1.0)
+    assert t.clock_mhz == 500.0
+    assert t.latency_ns == pytest.approx(10.0)  # 5 cycles @ 500 MHz
+    assert t.sort_time_ns(25) == pytest.approx((5 + 25) * 2.0)
+    # streamed PSU vs fully-parallel bitonic at the paper's sizes
+    acc, bit = psu_timing(25), bitonic_timing(25)
+    assert acc.sort_time_ns(25) == pytest.approx((7 + 25) * 2.0)
+    assert bit.sort_time_ns(25) == pytest.approx((15 + 1) * 2.0)
