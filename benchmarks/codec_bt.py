@@ -1,0 +1,187 @@
+"""Ordering vs coding vs ordering∘coding — the codec comparison bench.
+
+The paper reduces link BT purely by popcount ordering; classic link
+*coding* (bus-invert, gray, transition signaling; cf. Li et al.,
+arXiv:2002.05293) is the standard alternative, and the NoC follow-up
+(arXiv:2509.00500) frames the two as composable.  This bench scores the
+three-way on the repo's traffic families:
+
+  * **conv**      — the calibrated §IV-B conv streams (input + paired
+    weight links, ``datagen.conv_streams``);
+  * **decode**    — a weight matrix's int8 HBM broadcast image;
+  * **allreduce** — an int8 gradient wire image;
+
+every (ordering, codec) pair measured net of invert-line overhead by ONE
+``bt_count_codecs`` launch per stream (``repro.codec.compare``).  The
+fused-vs-per-config comparison reads launch counts from the traced jaxpr
+(1 vs one ``psu_stream``/``bt_count`` chain per configuration — launches
+are the claim, wall time is reference only, as in ``kernel_bench`` /
+``dse_sweep``), after asserting the two paths bit-exact.
+
+Artifact: the full comparison table as CSV (``REPRO_CODEC_ARTIFACT``
+overrides the path; CI uploads it with the bench-smoke trajectory).
+"""
+
+from __future__ import annotations
+
+import csv
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.codec import codec_by_name, compare_streams, demo_workloads
+from repro.kernels import (
+    CodecVariant,
+    Variant,
+    bt_count,
+    bt_count_codecs,
+    psu_stream,
+)
+
+from .datagen import conv_streams
+from .kernel_bench import count_pallas_launches
+
+TINY_KWARGS = {
+    "conv_images": 1,
+    "codecs": ("none", "bus_invert4"),
+    "demo_images": 1,
+}
+
+_LANES = 16
+
+_CSV_FIELDS = (
+    "workload",
+    "ordering",
+    "codec",
+    "data_bt",
+    "aux_bt",
+    "num_flits",
+    "extra_wires",
+    "bt_reduction",
+    "power_reduction",
+    "energy_pj",
+)
+
+_ORDERINGS = ("none", Variant("acc"), Variant("app", 4))
+
+
+def _write_csv(path: str, rows) -> None:
+    parent = os.path.dirname(path)
+    if parent:
+        os.makedirs(parent, exist_ok=True)
+    with open(path, "w", newline="") as f:
+        writer = csv.DictWriter(f, fieldnames=_CSV_FIELDS)
+        writer.writeheader()
+        writer.writerows(
+            {k: getattr(r, k) for k in _CSV_FIELDS} for r in rows
+        )
+
+
+def _per_config_bt(stream: jax.Array, cfg: CodecVariant) -> jax.Array:
+    """The pre-codec-kernel measurement chain for ONE config: a
+    ``psu_stream`` sort launch (or the staged layout path), a jnp codec,
+    and a ``bt_count`` launch on the coded wire."""
+    from repro.kernels.ref import codec_stream_ref, variant_order_ref
+
+    p, n = stream.shape
+    flits = n // _LANES
+    if cfg.key in ("acc", "app"):
+        res = psu_stream(
+            stream, None, k=cfg.k, descending=cfg.descending,
+            input_lanes=_LANES, weight_lanes=0,
+        )
+        raw = res.stream
+    else:
+        order = variant_order_ref(
+            jnp.asarray(stream, jnp.int32), cfg.ordering, input_lanes=_LANES
+        )
+        xs = jnp.take_along_axis(stream.astype(jnp.int32), order, axis=-1)
+        raw = xs.reshape(p, _LANES, flits).transpose(0, 2, 1).reshape(
+            p * flits, _LANES
+        )
+    coded = codec_stream_ref(raw.astype(jnp.uint8), cfg.codec, cfg.partition)
+    return bt_count(coded.wire)
+
+
+def run(
+    conv_images: int = 6,
+    codecs: tuple[str, ...] = ("none", "bus_invert", "bus_invert4", "transition"),
+    demo_images: int = 4,
+) -> list[tuple[str, float, str]]:
+    rows: list[tuple[str, float, str]] = []
+    inp, wgt = conv_streams(n_images=conv_images)
+    demo = demo_workloads(images=demo_images)
+    workloads = {
+        "conv": (jnp.asarray(inp), jnp.asarray(wgt)),
+        "decode": demo["decode"],
+        "allreduce": demo["allreduce"],
+    }
+
+    all_rows = []
+    for name, streams in workloads.items():
+        t0 = time.monotonic()
+        table = compare_streams(
+            streams, _LANES, orderings=_ORDERINGS, codecs=codecs, workload=name
+        )
+        us = (time.monotonic() - t0) * 1e6 / len(table)
+        all_rows.extend(table)
+        for r in table:
+            rows.append((
+                f"codec/{name}/{r.label}",
+                us,
+                f"data_bt={r.data_bt} aux_bt={r.aux_bt} "
+                f"wires=+{r.extra_wires} net_red={100 * r.bt_reduction:.2f}% "
+                f"power_red={100 * r.power_reduction:.2f}%",
+            ))
+
+    # --- fused vs per-config: 1 launch vs one chain per config ---
+    configs = tuple(
+        CodecVariant(
+            key=o.key if isinstance(o, Variant) else o,
+            k=o.k if isinstance(o, Variant) else None,
+            descending=o.descending if isinstance(o, Variant) else False,
+            codec=codec_by_name(c).scheme,
+            partition=codec_by_name(c).partition,
+        )
+        for o in _ORDERINGS
+        for c in codecs
+    )
+    x = workloads["conv"][0]
+
+    def fused(stream):
+        return bt_count_codecs(stream, None, configs=configs, input_lanes=_LANES)
+
+    def per_config(stream):
+        return jnp.stack([_per_config_bt(stream, cfg) for cfg in configs])
+
+    np.testing.assert_array_equal(
+        np.asarray(fused(x))[:, 0], np.asarray(per_config(x))
+    )  # bit-exact paths (data lanes; invert lines are the fused aux column)
+    launches = {
+        "fused": count_pallas_launches(fused, x),
+        "per_config": count_pallas_launches(per_config, x),
+    }
+    for name, fn in (("fused", fused), ("per_config", per_config)):
+        jax.block_until_ready(fn(x))  # compile/warm
+        t0 = time.monotonic()
+        for _ in range(3):
+            jax.block_until_ready(fn(x))
+        us = (time.monotonic() - t0) / 3 * 1e6
+        rows.append((
+            f"codec/launches/{name}",
+            us,
+            f"configs={len(configs)} pallas_launches={launches[name]}",
+        ))
+
+    # --- machine-readable artifact for the bench trajectory ---
+    path = os.environ.get("REPRO_CODEC_ARTIFACT", "codec_compare.csv")
+    _write_csv(path, all_rows)
+    rows.append((
+        "codec/artifact", 0.0,
+        f"comparison CSV -> {path} ({len(all_rows)} rows over "
+        f"{len(workloads)} workloads)",
+    ))
+    return rows

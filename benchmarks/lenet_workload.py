@@ -7,6 +7,11 @@ packs and measures each packet block), the transmitting units permute
 (input, weight) pairs, and we verify the CONVOLUTION OUTPUT is unchanged by
 the reordering (order-insensitive accumulation) while link BT drops — the
 end-to-end statement of the paper.
+
+The same LeNet streams then route through ``repro.codec.compare``, so the
+conv scenario reports ordering-alone, coding-alone and ordering∘coding
+side by side (net of invert-line overhead, one ``bt_count_codecs`` launch
+per stream — DESIGN.md §11).
 """
 
 from __future__ import annotations
@@ -17,6 +22,8 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
+from repro.codec import compare_streams
+from repro.kernels import Variant
 from repro.link import LinkSpec, TxPipeline
 
 from .datagen import im2col, synth_images
@@ -58,6 +65,7 @@ def run(n_images: int = 6) -> list[tuple[str, float, str]]:
     total_bt = {"none": 0, "acc": 0, "app": 0}
     t_psu = 0.0
     n_packets = 0
+    in_streams, w_streams = [], []
     for img in imgs:
         patches = im2col(img, KERNEL)  # (P, 25) uint8
         w_stream = np.broadcast_to(kernels[0], patches.shape)  # channel-0 link
@@ -66,6 +74,8 @@ def run(n_images: int = 6) -> list[tuple[str, float, str]]:
         p = flat_i.size // ELEMS
         x = jnp.asarray(flat_i[: p * ELEMS].reshape(p, ELEMS))
         w = jnp.asarray(flat_w[: p * ELEMS].reshape(p, ELEMS))
+        in_streams.append(x)
+        w_streams.append(w)
         t0 = time.monotonic()
         res = {name: pipes[name].run(x) for name in ("acc", "app")}
         t_psu += time.monotonic() - t0
@@ -90,5 +100,24 @@ def run(n_images: int = 6) -> list[tuple[str, float, str]]:
             f"lenet/{name}", t_psu * 1e6 / max(n_packets, 1),
             f"bt={total_bt[name]} base={total_bt['none']} red={red:.2f}% "
             f"(paper link-BT red: acc 20.42% app 19.50%)",
+        ))
+
+    # --- ordering vs coding vs composed on the same LeNet streams ---
+    # (repro.codec.compare: one bt_count_codecs launch per stream; both
+    # links of the conv scenario — patch packets and kernel bytes — summed)
+    t0 = time.monotonic()
+    table = compare_streams(
+        in_streams + w_streams,
+        LANES,
+        orderings=("none", Variant("acc"), Variant("app", 4)),
+        codecs=("none", "bus_invert4"),
+        workload="lenet",
+    )
+    us = (time.monotonic() - t0) * 1e6 / len(table)
+    for r in table:
+        rows.append((
+            f"lenet/compare/{r.label}", us,
+            f"data_bt={r.data_bt} aux_bt={r.aux_bt} wires=+{r.extra_wires} "
+            f"net_red={100 * r.bt_reduction:.2f}%",
         ))
     return rows

@@ -9,6 +9,7 @@ derived`` CSV (the harness contract).
   arch_bt          -> paper §V future work (transformer traffic BT)
   noc_bt           -> §V NoC fabric   (per-link BT across topologies/hops)
   dse_sweep        -> design-space Pareto fronts (area x BT x latency)
+  codec_bt         -> ordering vs coding vs composed (repro.codec tables)
   kernel_bench     -> Pallas kernel microbenchmarks
   roofline_report  -> deliverable (g) tables from the dry-run records
 
@@ -28,6 +29,7 @@ import time
 def main() -> None:
     from . import (
         arch_bt,
+        codec_bt,
         dse_sweep,
         fig5_area,
         fig7_power,
@@ -46,6 +48,7 @@ def main() -> None:
         ("arch_bt", arch_bt),
         ("noc_bt", noc_bt),
         ("dse_sweep", dse_sweep),
+        ("codec_bt", codec_bt),
         ("kernel_bench", kernel_bench),
         ("roofline_report", roofline_report),
     ]

@@ -1,0 +1,60 @@
+"""Ordering vs coding vs composed: the net-of-overhead BT/power table.
+
+The paper's PSU *orders* transmitted data; the classic alternative *codes*
+it (bus-invert et al.).  This example scores precise ACC, APP k=4,
+bus-invert alone, and the ordering∘coding compositions on a conv-like
+stream — every (ordering, codec) pair measured by ONE
+`repro.kernels.bt_count_codecs` launch per stream, every reduction net of
+the codec's invert-line transitions, and every codec's extra wires and
+encoder area reported next to its win (DESIGN.md §11).
+
+    PYTHONPATH=src python examples/codec_compare.py
+"""
+
+from repro.codec import codec_overhead, compare_streams, demo_workloads, format_table
+from repro.kernels import Variant
+from repro.link import LinkPowerModel
+
+LANES = 16
+
+
+def main() -> None:
+    streams = demo_workloads(images=4)["conv"]
+    print(
+        f"workload: conv-like, {int(streams[0].shape[0])} packets of "
+        f"{int(streams[0].shape[1])} bytes on a {8 * LANES}-bit link"
+    )
+
+    rows = compare_streams(
+        streams,
+        LANES,
+        orderings=("none", Variant("acc"), Variant("app", 4)),
+        codecs=("none", "bus_invert", "bus_invert4"),
+        workload="conv",
+    )
+    print()
+    print(format_table(rows))
+
+    print("\ncodec hardware overhead on this link:")
+    for name in ("bus_invert", "bus_invert4", "transition", "gray"):
+        ov = codec_overhead(name, LANES)
+        print(
+            f"  {name:12s} +{ov.extra_wires} wires "
+            f"({100 * ov.wire_overhead:.1f}% wider link), "
+            f"encoder {ov.encoder_area_um2:.0f} um2"
+        )
+
+    power = LinkPowerModel()
+    base = next(r for r in rows if r.label == "none")
+    best = max(rows, key=lambda r: r.bt_reduction)
+    print(
+        f"\nbest config: {best.label} — {100 * best.bt_reduction:.2f}% BT"
+        f" reduction net of overhead -> "
+        f"{100 * power.power_reduction(best.bt_reduction):.2f}% link-related"
+        f" power reduction ({base.energy_pj - best.energy_pj:.0f} pJ saved"
+        f" on this stream)"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,266 @@
+"""Low-power link codecs: encode/decode pairs over flit streams.
+
+The paper attacks link switching with *ordering*; this module holds the
+classic *coding* family it must answer against (DESIGN.md §11): every codec
+is a bijective transform of a ``(T, lanes)`` uint8 flit stream into the
+wire image the link actually drives, with a decoder that recovers the data
+exactly — ``decode(encode(x)) == x`` is the subsystem contract, asserted in
+``tests/test_codec.py`` for every registered scheme.
+
+  * ``none``            — identity (the uncoded wire).
+  * ``gray`` / ``sign_magnitude`` — stateless per-byte recodes
+    (``repro.core.coding``); no extra wires, no state.
+  * ``transition``      — XOR transition signaling: wire_t = wire_{t-1} ^
+    data_t, so the wire *transitions* carry the data and the stream BT
+    equals the total '1'-bit count of the data flits.
+  * ``bus_invert``      — Stan & Burleson bus-invert, partitioned: each
+    ``partition``-lane group carries one extra invert line; a flit group is
+    transmitted complemented whenever that halves its Hamming distance to
+    the previous *wire* flit (invert iff HD > half the group width, ties
+    uninverted).  The invert lines are real wires whose own transitions are
+    the codec's overhead (``repro.codec.overhead``).
+
+Encoders here are whole-stream jnp (the staged/reference path: ``lax.scan``
+for the sequential bus-invert decision).  The hot path — every
+codec x ordering measured in ONE Pallas launch — is
+``repro.kernels.bt_count_codecs``, which re-expresses the scan as a
+prefix-XOR with tie resets and is pinned bit-exact against compositions of
+the encoders in this module.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.coding import (
+    bus_invert_partitions,
+    gray_decode_bytes,
+    gray_encode_bytes,
+    sign_magnitude_decode_bytes,
+    sign_magnitude_encode_bytes,
+)
+from repro.core.popcount import popcount
+
+__all__ = [
+    "CodedStream",
+    "Codec",
+    "CODECS",
+    "SCHEMES",
+    "codec_by_name",
+    "make_bus_invert",
+    "register_codec",
+    "bus_invert_partitions",
+    "invert_line_transitions",
+]
+
+# static scheme ids understood by the Pallas codec kernel
+SCHEMES = ("none", "gray", "sign_magnitude", "transition", "bus_invert")
+
+
+class CodedStream(NamedTuple):
+    """A codec's wire image: the driven byte lanes plus any invert lines.
+
+    ``wire`` is (T, lanes) uint8; ``invert`` is (T, P) uint8 bus-invert
+    line states (one column per partition), or ``None`` for codecs with no
+    extra wires.
+    """
+
+    wire: jax.Array
+    invert: Optional[jax.Array] = None
+
+
+def invert_line_transitions(invert: Optional[jax.Array]) -> jax.Array:
+    """Total transitions of the invert lines themselves (the coding
+    overhead the link still pays switching energy for)."""
+    if invert is None or invert.shape[0] < 2:
+        return jnp.int32(0)
+    inv = invert.astype(jnp.int32)
+    return jnp.sum(inv[1:] != inv[:-1]).astype(jnp.int32)
+
+
+@dataclasses.dataclass(frozen=True)
+class Codec:
+    """One registered link codec: a named encode/decode pair.
+
+    ``scheme`` is the static id the Pallas kernel switches on; ``partition``
+    is the bus-invert group width in lanes (None = whole flit).
+    ``stateful`` marks codecs whose wire image depends on flit order (they
+    must be applied to the *assembled* stream, after ordering and packing —
+    the composition semantics of DESIGN.md §11).
+    """
+
+    name: str
+    scheme: str
+    encode: Callable[[jax.Array], CodedStream]
+    decode: Callable[[CodedStream], jax.Array]
+    partition: int | None = None
+    stateful: bool = False
+
+    def extra_wires(self, lanes: int) -> int:
+        """Invert lines added next to a ``lanes``-byte flit."""
+        if self.scheme != "bus_invert":
+            return 0
+        return bus_invert_partitions(lanes, self.partition)[0]
+
+
+# --------------------------------------------------------------------------
+# stateless schemes
+# --------------------------------------------------------------------------
+
+
+def _stateless(fn: Callable[[jax.Array], jax.Array]):
+    def encode(stream: jax.Array) -> CodedStream:
+        return CodedStream(fn(stream.astype(jnp.uint8)), None)
+
+    return encode
+
+
+def _stateless_decode(fn: Callable[[jax.Array], jax.Array]):
+    def decode(coded: CodedStream) -> jax.Array:
+        return fn(coded.wire.astype(jnp.uint8))
+
+    return decode
+
+
+# --------------------------------------------------------------------------
+# transition signaling
+# --------------------------------------------------------------------------
+
+
+def transition_encode(stream: jax.Array) -> CodedStream:
+    """wire_t = wire_{t-1} ^ data_t (wire_0 = data_0): data rides in the
+    wire *transitions*, so the stream's BT is exactly the total popcount of
+    the data flits after the first."""
+    d = stream.astype(jnp.uint8)
+    wire = lax.associative_scan(jnp.bitwise_xor, d, axis=0)
+    return CodedStream(wire, None)
+
+
+def transition_decode(coded: CodedStream) -> jax.Array:
+    w = coded.wire.astype(jnp.uint8)
+    return jnp.concatenate([w[:1], w[1:] ^ w[:-1]], axis=0)
+
+
+# --------------------------------------------------------------------------
+# bus invert
+# --------------------------------------------------------------------------
+
+
+def bus_invert_encode(
+    stream: jax.Array, partition: int | None = None
+) -> CodedStream:
+    """Sequential bus-invert over a flit stream (the hardware recurrence).
+
+    Flit 0 is transmitted uninverted; each later flit group is complemented
+    iff that strictly lowers its Hamming distance to the previous wire flit
+    (HD > half the group width; ties uninverted).  This ``lax.scan`` is the
+    reference formulation the single-launch kernel's prefix-scan is pinned
+    against.
+    """
+    t, lanes = stream.shape
+    npart, pw = bus_invert_partitions(lanes, partition)
+    d = stream.astype(jnp.int32).reshape(t, npart, pw)
+    lbits = 8 * pw
+
+    def step(prev_wire, dt):
+        hd = popcount(dt ^ prev_wire, 8).sum(axis=-1)  # (P,)
+        inv = (2 * hd > lbits).astype(jnp.int32)
+        wt = dt ^ (inv[:, None] * 0xFF)
+        return wt, (wt, inv)
+
+    _, (wires, invs) = lax.scan(step, d[0], d[1:])
+    wire = jnp.concatenate([d[:1], wires], axis=0).reshape(t, lanes)
+    inv = jnp.concatenate(
+        [jnp.zeros((1, npart), jnp.int32), invs], axis=0
+    )
+    return CodedStream(wire.astype(jnp.uint8), inv.astype(jnp.uint8))
+
+
+def bus_invert_decode(coded: CodedStream) -> jax.Array:
+    t, lanes = coded.wire.shape
+    npart = coded.invert.shape[-1]
+    _, pw = bus_invert_partitions(lanes, lanes // npart)
+    w = coded.wire.astype(jnp.int32).reshape(t, npart, pw)
+    inv = coded.invert.astype(jnp.int32)
+    return (w ^ (inv[:, :, None] * 0xFF)).reshape(t, lanes).astype(jnp.uint8)
+
+
+# --------------------------------------------------------------------------
+# registry
+# --------------------------------------------------------------------------
+
+CODECS: Dict[str, Codec] = {}
+
+
+def register_codec(codec: Codec) -> Codec:
+    if codec.scheme not in SCHEMES:
+        raise ValueError(
+            f"unknown codec scheme {codec.scheme!r}; choose from {SCHEMES}"
+        )
+    CODECS[codec.name] = codec
+    return codec
+
+
+def make_bus_invert(
+    partition: int | None = None, name: str | None = None
+) -> Codec:
+    """A bus-invert codec with one invert line per ``partition`` lanes
+    (None = a single line over the whole flit)."""
+    if name is None:
+        name = "bus_invert" if partition is None else f"bus_invert{partition}"
+    return Codec(
+        name=name,
+        scheme="bus_invert",
+        encode=lambda s, _p=partition: bus_invert_encode(s, _p),
+        decode=bus_invert_decode,
+        partition=partition,
+        stateful=True,
+    )
+
+
+def codec_by_name(name: str) -> Codec:
+    """Registry lookup; unknown names list every registered codec."""
+    codec = CODECS.get(name)
+    if codec is None:
+        raise ValueError(
+            f"unknown codec {name!r}; registered codecs: "
+            f"{', '.join(sorted(CODECS))}"
+        )
+    return codec
+
+
+register_codec(
+    Codec("none", "none", _stateless(lambda s: s), _stateless_decode(lambda s: s))
+)
+register_codec(
+    Codec(
+        "gray",
+        "gray",
+        _stateless(gray_encode_bytes),
+        _stateless_decode(gray_decode_bytes),
+    )
+)
+register_codec(
+    Codec(
+        "sign_magnitude",
+        "sign_magnitude",
+        _stateless(sign_magnitude_encode_bytes),
+        _stateless_decode(sign_magnitude_decode_bytes),
+    )
+)
+register_codec(
+    Codec(
+        "transition",
+        "transition",
+        transition_encode,
+        transition_decode,
+        stateful=True,
+    )
+)
+register_codec(make_bus_invert(None))
+register_codec(make_bus_invert(4))

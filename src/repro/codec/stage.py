@@ -1,0 +1,71 @@
+"""Codec registration into the ``repro.link`` stage machinery.
+
+The TX pipeline's stage registries (DESIGN.md §3.2) gain a fourth axis
+here: ``CODEC_STAGES`` is the wire-coding registry a ``LinkSpec.codec``
+name resolves against, so any ``TxPipeline``, any ``repro.noc`` per-link
+stream and any ``repro.dse.DesignPoint`` can name a codec the same way
+they name key/encode/pack stages.  Composition semantics (DESIGN.md §11):
+
+  * the ENCODE stage is *element-level* (applied before the KEY stage, so
+    sort keys see the recoded bytes) — the stateless codecs double as
+    encode stages ('gray', 'sign_magnitude', registered in
+    ``repro.link.stages`` itself so they exist without this import);
+  * the CODEC stage is *wire-level* (applied to the assembled flit stream,
+    after ordering and packing, keys derived from the un-coded bytes) —
+    this is where the stateful codecs (bus-invert, transition signaling)
+    must sit, because their wire image depends on flit order.
+
+``kernel_config`` maps a spec's (ordering, codec) selection onto the
+static :class:`~repro.kernels.bt_codecs.CodecVariant` the single-launch
+measurement kernel consumes.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+
+from repro.kernels import CodecVariant
+from repro.link.spec import LinkSpec
+from repro.link.stages import lookup_stage
+
+from .schemes import CODECS, Codec, CodedStream, codec_by_name
+
+__all__ = [
+    "CODEC_STAGES",
+    "wire_codec",
+    "encode_stream",
+    "kernel_config",
+]
+
+# the wire-coding stage registry: the same mapping LinkSpec validates its
+# `codec` field against (one home — repro.codec.schemes.CODECS).  The
+# stateless codecs' element-level twins ('gray', 'sign_magnitude') are
+# registered directly in repro.link.stages.ENCODE_STAGES, which the link
+# layer provides without importing this package.
+CODEC_STAGES: Dict[str, Codec] = CODECS
+
+
+def wire_codec(name: str) -> Codec:
+    """The registered codec for a ``LinkSpec.codec`` name (stage-UX errors:
+    unknown names list the registered codecs)."""
+    return lookup_stage("codec", name, CODEC_STAGES)
+
+
+def encode_stream(stream: jax.Array, name: str) -> CodedStream:
+    """Apply the named wire codec to an assembled (T, lanes) stream."""
+    return wire_codec(name).encode(stream)
+
+
+def kernel_config(spec: LinkSpec) -> CodecVariant:
+    """The static single-launch kernel config measuring this spec's
+    (ordering, codec) pair (``repro.kernels.bt_count_codecs``)."""
+    codec = codec_by_name(spec.codec)
+    return CodecVariant(
+        key=spec.key,
+        k=spec.k if spec.key == "app" else None,
+        descending=spec.descending,
+        codec=codec.scheme,
+        partition=codec.partition,
+    )

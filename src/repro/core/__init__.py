@@ -29,6 +29,7 @@ from .area import (
     PSUTiming,
     bitonic_area,
     bitonic_timing,
+    codec_area,
     csn_area,
     psu_area,
     psu_timing,
@@ -84,6 +85,7 @@ __all__ = [
     "psu_area",
     "bitonic_area",
     "csn_area",
+    "codec_area",
     "PSUArea",
     "AREA_ANCHORS",
     "PSUTiming",

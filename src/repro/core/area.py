@@ -32,6 +32,7 @@ __all__ = [
     "psu_area",
     "bitonic_area",
     "csn_area",
+    "codec_area",
     "AREA_ANCHORS",
     "PSUTiming",
     "psu_timing",
@@ -45,10 +46,12 @@ C_NK = 5.155  # one-hot/histogram/prefix datapath, per element-bucket
 C_N2 = 1.642  # scatter crossbar wiring, per element^2
 BETA = 0.0904  # crossbar control-width growth per bucket
 
-# gate-level constants for comparator baselines (22 nm equivalents, um^2)
+# gate-level constants for comparator baselines and the link-codec
+# encoders (22 nm equivalents, um^2)
 _FA_AREA = 1.0  # full adder / 1-bit comparator slice
 _MUX_BIT = 0.55  # 2:1 mux per bit
 _DFF_BIT = 1.1  # pipeline register per bit
+_XOR_BIT = 0.75  # 2-input XOR per bit
 
 AREA_ANCHORS = {
     ("app", 25): 2193.0,
@@ -59,14 +62,19 @@ AREA_ANCHORS = {
 
 @dataclasses.dataclass(frozen=True)
 class PSUArea:
-    """Area breakdown of one popcount-sorting unit (um^2, modeled)."""
+    """Area breakdown of one transmit-side unit (um^2, modeled).
+
+    ``codec`` is the link-codec encoder sitting after the sorting unit
+    (zero when the link is uncoded) — folded in here so any area-vs-BT
+    comparison that adds a codec is automatically net of its hardware."""
 
     popcount: float
     sort: float
+    codec: float = 0.0
 
     @property
     def total(self) -> float:
-        return self.popcount + self.sort
+        return self.popcount + self.sort + self.codec
 
 
 def psu_area(n: int, width: int = 8, k: int | None = None) -> PSUArea:
@@ -120,6 +128,45 @@ def csn_area(n: int, width: int = 8) -> PSUArea:
     elements than bitonic (paper §II)."""
     b = bitonic_area(n, width)
     return PSUArea(popcount=b.popcount, sort=b.sort * 1.8)
+
+
+def codec_area(scheme: str, lanes: int, partition: int | None = None) -> float:
+    """Encoder area of one link codec over a ``lanes``-byte flit (um^2).
+
+    Gate-count closed forms from the same 22 nm equivalents as the
+    comparator baselines (DESIGN.md §11):
+
+      * ``gray``           — 7 XOR per byte (top bit passes through).
+      * ``sign_magnitude`` — conditional two's-complement negate per byte:
+        an 8-bit ripple increment plus sign-controlled inversion muxes.
+      * ``transition``     — XOR per wire bit plus the previous-flit
+        register the feedback needs.
+      * ``bus_invert``     — per partition of ``partition`` lanes (None =
+        whole flit): popcount tree over the group bits (~1 FA/bit),
+        majority comparator (log2 of the group width), inversion XORs and
+        the previous-wire register, plus the invert-line driver flop.
+    """
+    bits = 8 * lanes
+    if scheme == "none":
+        return 0.0
+    if scheme == "gray":
+        return 7.0 * lanes * _XOR_BIT
+    if scheme == "sign_magnitude":
+        return lanes * (8 * _FA_AREA + 8 * _MUX_BIT)
+    if scheme == "transition":
+        return bits * (_XOR_BIT + _DFF_BIT)
+    if scheme == "bus_invert":
+        from .coding import bus_invert_partitions  # the one partition home
+
+        npart, pw = bus_invert_partitions(lanes, partition)
+        group_bits = 8 * pw
+        per_group = (
+            group_bits * (_FA_AREA + _XOR_BIT + _DFF_BIT)  # tree+inv+reg
+            + math.ceil(math.log2(group_bits)) * _FA_AREA  # majority cmp
+            + _DFF_BIT  # invert-line flop
+        )
+        return npart * per_group
+    raise ValueError(f"unknown codec scheme {scheme!r} for the area model")
 
 
 # --------------------------------------------------------------------------

@@ -1,0 +1,85 @@
+"""Stateless wire byte recodes — the bijective per-byte maps of the link
+codecs (DESIGN.md §11).
+
+These are the shared primitives of the codec subsystem: ``repro.codec``
+builds its stateless encode/decode pairs from them, and the Pallas codec
+kernel (``repro.kernels.bt_codecs``) applies the same maps inside one
+launch, so the two paths cannot drift.  Every function operates on the low
+8 bits of any integer array and returns the input dtype (uint8 streams
+outside kernels, int32 lanes inside them).
+
+  * **gray**            — reflected binary: g = b ^ (b >> 1).  Consecutive
+    values differ in one bit, decorrelating BT from carry ripples.
+  * **sign-magnitude**  — two's-complement int8 bytes to sign|magnitude
+    (the ``repro.link`` 'sign_magnitude' encode stage, made invertible
+    here: 0x80, the lone -128 pattern, maps to 0x80).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "gray_encode_bytes",
+    "gray_decode_bytes",
+    "sign_magnitude_encode_bytes",
+    "sign_magnitude_decode_bytes",
+    "bus_invert_partitions",
+]
+
+
+def bus_invert_partitions(lanes: int, partition: int | None) -> tuple[int, int]:
+    """(number of partitions, lanes per partition) of a bus-invert framing.
+
+    The one home of the partition contract — the codec encoders
+    (``repro.codec.schemes``), the single-launch kernel
+    (``repro.kernels.bt_codecs``) and the area model
+    (``repro.core.area.codec_area``) all validate against this, so they
+    cannot drift.  ``partition=None`` means one invert line over the whole
+    flit; otherwise it must divide the flit's lane count.
+    """
+    pw = lanes if partition is None else partition
+    if pw < 1 or lanes % pw != 0:
+        raise ValueError(
+            f"bus-invert partition of {pw} lanes does not divide the "
+            f"{lanes}-lane flit"
+        )
+    return lanes // pw, pw
+
+
+def gray_encode_bytes(x: jax.Array) -> jax.Array:
+    """Reflected-binary Gray code of each byte: g = b ^ (b >> 1)."""
+    v = x.astype(jnp.int32) & 0xFF
+    return ((v ^ (v >> 1)) & 0xFF).astype(x.dtype)
+
+
+def gray_decode_bytes(g: jax.Array) -> jax.Array:
+    """Inverse Gray map per byte: b = g ^ (g>>1) ^ ... ^ (g>>7), folded."""
+    v = g.astype(jnp.int32) & 0xFF
+    for s in (1, 2, 4):  # prefix-XOR fold over the 8 bit positions
+        v = v ^ (v >> s)
+    return (v & 0xFF).astype(g.dtype)
+
+
+def sign_magnitude_encode_bytes(x: jax.Array) -> jax.Array:
+    """Two's-complement int8 byte patterns to sign|magnitude bytes.
+
+    Matches ``repro.link.stages.to_sign_magnitude`` on every byte
+    (including -128 -> 0x80, which keeps the map bijective: 0x80 is the
+    only pattern with sign set and zero magnitude).
+    """
+    v = x.astype(jnp.int32) & 0xFF
+    neg = v >= 0x80
+    mag = jnp.where(neg, (0x100 - v) & 0xFF, v)
+    out = jnp.where(neg, 0x80 | (mag & 0x7F), mag)
+    return (out & 0xFF).astype(x.dtype)
+
+
+def sign_magnitude_decode_bytes(s: jax.Array) -> jax.Array:
+    """Inverse of :func:`sign_magnitude_encode_bytes` per byte."""
+    v = s.astype(jnp.int32) & 0xFF
+    mag = v & 0x7F
+    neg = v >= 0x80
+    out = jnp.where(neg, jnp.where(mag == 0, 0x80, (0x100 - mag) & 0xFF), mag)
+    return (out & 0xFF).astype(s.dtype)

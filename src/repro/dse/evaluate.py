@@ -4,16 +4,21 @@ For every :class:`~repro.dse.space.DesignPoint` of a grid, one
 :class:`Evaluation` joins the repo's models end to end:
 
   * **BT** — measured on the workload's actual flit streams.  All points'
-    stream variants are measured by ONE batched Pallas launch per
-    (stream, key width) via ``repro.kernels.bt_count_variants`` — the
-    variant axis lives inside the launch, so a grid of G configurations
+    (ordering, codec) configs are measured by ONE batched Pallas launch
+    per (stream, key width) via ``repro.kernels.bt_count_codecs`` — the
+    config axis lives inside the launch, so a grid of G configurations
     costs 1 launch where the per-config path costs G (the same claim
     structure as ``bt_count_links`` for the NoC; demonstrated from the
-    traced jaxpr in ``benchmarks/dse_sweep.py``).
+    traced jaxpr in ``benchmarks/dse_sweep.py`` / ``codec_bt.py``).
+    Coded points' invert-line transitions count against them, so their BT
+    reductions are net of wire overhead (DESIGN.md §11).
   * **Area / timing** — the calibrated closed-form models of
-    ``repro.core.area`` (DESIGN.md §6), per family/N/W/k.
+    ``repro.core.area`` (DESIGN.md §6), per family/N/W/k, plus the codec
+    encoder area folded into ``PSUArea.codec`` for coded points.
   * **Link power / energy** — ``repro.link.LinkPowerModel`` maps the BT
-    reduction to link-related power reduction and absolute energy.
+    reduction to link-related power reduction and absolute energy
+    (``coded_link_energy_pj`` charges invert lines and the widened static
+    floor).
   * **NoC (optional)** — points with a ``topology`` are additionally run
     through ``repro.noc.simulate_noc`` (per-link batched BT kernel) as a
     source-sorted fabric carrying the workload across the topology
@@ -33,15 +38,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.area import PSUArea, PSUTiming, psu_area
-from repro.kernels import Variant, bt_count_variants
+from repro.core.area import PSUArea, PSUTiming, codec_area, psu_area
+from repro.kernels import CodecVariant, bt_count_codecs
 from repro.link import LinkPowerModel, LinkSpec
 
 from .space import DesignPoint, parse_topology
 
 __all__ = ["Workload", "Evaluation", "evaluate_grid"]
 
-_BASELINE = Variant("none", None, False)
+_BASELINE = CodecVariant("none", None, False, "none", None)
 
 
 class Workload(NamedTuple):
@@ -100,12 +105,14 @@ class Evaluation:
     timing: PSUTiming
     total_bt: int
     num_flits: int
-    bt_reduction: float  # vs the unsorted stream, fraction
+    bt_reduction: float  # vs the unsorted uncoded stream, net of overhead
     area_reduction: float  # vs the precise ACC-PSU at the same (N, W)
     link_power_reduction: float  # Fig. 6/7 model applied to bt_reduction
     energy_pj: float
     noc_bt_reduction: float | None = None  # fabric-level, when topology set
     noc_active_links: int | None = None
+    aux_bt: int = 0  # invert-line transitions (wire-codec overhead)
+    extra_wires: int = 0  # invert lines beside the data lanes
 
     @property
     def label(self) -> str:
@@ -114,6 +121,11 @@ class Evaluation:
     @property
     def area_um2(self) -> float:
         return self.area.total
+
+    @property
+    def gross_bt(self) -> int:
+        """Data BT plus the codec's invert-line transitions."""
+        return self.total_bt + self.aux_bt
 
     @property
     def bt_per_flit(self) -> float:
@@ -127,7 +139,8 @@ class Evaluation:
 
 def _noc_spec(point: DesignPoint, workload: Workload) -> LinkSpec:
     """Input-only LinkSpec carrying the workload packets under the point's
-    ordering (a LinkSpec means the same thing on a NoC link, DESIGN.md §9)."""
+    ordering and codec (a LinkSpec means the same thing on a NoC link,
+    DESIGN.md §9/§11)."""
     lanes = workload.lanes
     return LinkSpec(
         width_bits=8 * lanes,
@@ -138,6 +151,7 @@ def _noc_spec(point: DesignPoint, workload: Workload) -> LinkSpec:
         width=point.width,
         k=point.k if point.k is not None else 4,
         descending=point.descending,
+        codec=point.codec if point.codec is not None else "none",
     )
 
 
@@ -160,7 +174,7 @@ def _noc_total_bt(
         topo, flows, _noc_spec(point, workload), sort_at="source",
         interpret=interpret, name=point.label,
     )
-    return rep.total_bt, rep.active_links
+    return rep.gross_bt, rep.active_links
 
 
 def evaluate_grid(
@@ -182,34 +196,35 @@ def evaluate_grid(
         return ()
     _validate_workload(workload)
     power = power if power is not None else LinkPowerModel()
+    lanes = workload.lanes
 
-    # --- unique stream variants per key width (+ the reduction baseline) ---
-    variants_by_width: dict[int, list[Variant]] = {}
+    # --- unique (ordering, codec) configs per key width (+ baseline) ---
+    configs_by_width: dict[int, list[CodecVariant]] = {}
     for pt in points:
-        vs = variants_by_width.setdefault(pt.width, [_BASELINE])
-        if pt.variant not in vs:
-            vs.append(pt.variant)
+        vs = configs_by_width.setdefault(pt.width, [_BASELINE])
+        if pt.codec_variant not in vs:
+            vs.append(pt.codec_variant)
 
     # --- measure: ONE batched launch per (stream, width) ---
-    bt_tab: dict[tuple[int, Variant], int] = {}
-    for width in sorted(variants_by_width):
-        vs = tuple(variants_by_width[width])
-        totals = np.zeros((len(vs), 2), dtype=np.int64)
+    bt_tab: dict[tuple[int, CodecVariant], tuple[int, int]] = {}
+    for width in sorted(configs_by_width):
+        vs = tuple(configs_by_width[width])
+        totals = np.zeros((len(vs), 3), dtype=np.int64)
         for s in workload.streams:
             totals += np.asarray(
-                bt_count_variants(
+                bt_count_codecs(
                     jnp.asarray(s),
                     None,
-                    variants=vs,
+                    configs=vs,
                     width=width,
-                    input_lanes=workload.lanes,
+                    input_lanes=lanes,
                     block_packets=block_packets,
                     interpret=interpret,
                 ),
                 dtype=np.int64,
             )
-        for v, (bi, bw) in zip(vs, totals.tolist()):
-            bt_tab[(width, v)] = int(bi) + int(bw)
+        for v, (bi, bw, aux) in zip(vs, totals.tolist()):
+            bt_tab[(width, v)] = (int(bi) + int(bw), int(aux))
 
     # --- NoC runs (points with a topology), baseline cached per fabric ---
     noc_base: dict[tuple[str, int], int] = {}
@@ -217,17 +232,31 @@ def evaluate_grid(
 
     evals: list[Evaluation] = []
     for pt in points:
-        total_bt = bt_tab[(pt.width, pt.variant)]
-        base_bt = bt_tab[(pt.width, _BASELINE)]
-        bt_red = 1.0 - total_bt / max(base_bt, 1)
+        total_bt, aux_bt = bt_tab[(pt.width, pt.codec_variant)]
+        base_bt, _ = bt_tab[(pt.width, _BASELINE)]
+        # coded points are scored net of their invert-line transitions
+        bt_red = 1.0 - (total_bt + aux_bt) / max(base_bt, 1)
         area = pt.area()
+        extra_wires = 0
+        if pt.codec is not None:
+            # fold the encoder hardware into the point's area breakdown
+            cv = pt.codec_variant
+            area = PSUArea(
+                area.popcount,
+                area.sort,
+                codec=codec_area(cv.codec, lanes, cv.partition),
+            )
+            from repro.codec.schemes import codec_by_name  # deferred
+
+            extra_wires = codec_by_name(pt.codec).extra_wires(lanes)
         acc_total = psu_area(pt.n, pt.width).total
         noc_red = noc_links = None
         if pt.topology is not None:
             key = (pt.topology, pt.width)
             if key not in noc_base:
                 base_pt = dataclasses.replace(
-                    pt, family="psu", ordering="none", k=None, descending=False
+                    pt, family="psu", ordering="none", k=None,
+                    descending=False, codec=None,
                 )
                 noc_base[key], _ = _noc_total_bt(base_pt, workload, interpret)
             bt_fabric, noc_links = _noc_total_bt(pt, workload, interpret)
@@ -242,9 +271,13 @@ def evaluate_grid(
                 bt_reduction=bt_red,
                 area_reduction=1.0 - area.total / acc_total,
                 link_power_reduction=power.power_reduction(bt_red),
-                energy_pj=power.link_energy_pj(total_bt, num_flits),
+                energy_pj=power.coded_link_energy_pj(
+                    total_bt, aux_bt, num_flits, 8 * lanes, extra_wires
+                ),
                 noc_bt_reduction=noc_red,
                 noc_active_links=noc_links,
+                aux_bt=aux_bt,
+                extra_wires=extra_wires,
             )
         )
     return tuple(evals)

@@ -26,12 +26,16 @@ _FIELDS = (
     "k",
     "ordering",
     "descending",
+    "codec",
     "topology",
     "area_um2",
     "area_popcount_um2",
     "area_sort_um2",
+    "area_codec_um2",
     "area_reduction",
     "total_bt",
+    "aux_bt",
+    "extra_wires",
     "num_flits",
     "bt_per_flit",
     "bt_reduction",
@@ -56,12 +60,16 @@ def point_record(e: Evaluation, *, on_front: bool = False) -> dict:
         "k": pt.k,
         "ordering": pt.ordering,
         "descending": pt.descending,
+        "codec": pt.codec,
         "topology": pt.topology,
         "area_um2": round(e.area_um2, 3),
         "area_popcount_um2": round(e.area.popcount, 3),
         "area_sort_um2": round(e.area.sort, 3),
+        "area_codec_um2": round(e.area.codec, 3),
         "area_reduction": round(e.area_reduction, 6),
         "total_bt": e.total_bt,
+        "aux_bt": e.aux_bt,
+        "extra_wires": e.extra_wires,
         "num_flits": e.num_flits,
         "bt_per_flit": round(e.bt_per_flit, 6),
         "bt_reduction": round(e.bt_reduction, 6),

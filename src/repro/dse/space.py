@@ -13,6 +13,10 @@ A :class:`DesignPoint` names any point of that space —
     or the data-independent baselines 'none' / 'column_major' (which have
     NO sorting hardware: zero area, zero sort latency);
   * ``descending``— sort direction of the transmit order;
+  * ``codec``     — optional ``repro.codec`` wire codec at the link
+    egress ('bus_invert', 'gray', ...; None = uncoded) — the
+    coding-vs-ordering axis, measured net of invert-line overhead and
+    encoder area (DESIGN.md §11);
   * ``topology``  — optional NoC fabric ('mesh4x4', 'torus4x4', 'ring8',
     ...) on which the point is additionally evaluated per link.
 
@@ -34,7 +38,7 @@ from repro.core.area import (
     psu_area,
     psu_timing,
 )
-from repro.kernels import Variant
+from repro.kernels import CodecVariant, Variant
 
 __all__ = [
     "DesignPoint",
@@ -80,6 +84,7 @@ class DesignPoint:
     k: int | None = 4
     ordering: str = "app"
     descending: bool = False
+    codec: str | None = None
     topology: str | None = None
 
     def __post_init__(self) -> None:
@@ -117,6 +122,14 @@ class DesignPoint:
                 raise ValueError(
                     f"descending is meaningless for {self.ordering!r}"
                 )
+        if self.codec is not None:
+            from repro.codec.schemes import CODECS  # deferred: keep space light
+
+            if self.codec not in CODECS:
+                raise ValueError(
+                    f"unknown codec {self.codec!r}; registered codecs: "
+                    f"{', '.join(sorted(CODECS))}"
+                )
         if self.topology is not None and not _TOPOLOGY_RE.match(self.topology):
             raise ValueError(
                 f"topology {self.topology!r} does not match "
@@ -126,7 +139,8 @@ class DesignPoint:
     # ------------------------------------------------------------ derived
     @property
     def label(self) -> str:
-        """Compact report name, e.g. ``app-k4@N25`` or ``bitonic@N49``."""
+        """Compact report name, e.g. ``app-k4@N25`` or
+        ``acc+bus_invert@N25``."""
         if self.ordering == "app":
             head = f"app-k{self.k}"
         elif self.family != "psu":
@@ -134,13 +148,29 @@ class DesignPoint:
         else:
             head = self.ordering
         tail = "-desc" if self.descending else ""
+        coded = f"+{self.codec}" if self.codec else ""
         noc = f"/{self.topology}" if self.topology else ""
-        return f"{head}{tail}@N{self.n}{noc}"
+        return f"{head}{tail}{coded}@N{self.n}{noc}"
 
     @property
     def variant(self) -> Variant:
         """The stream-measurement variant for the batched BT kernel."""
         return Variant(self.ordering, self.k, self.descending)
+
+    @property
+    def codec_variant(self) -> CodecVariant:
+        """The (ordering, codec) config for the single-launch codec-BT
+        kernel (``repro.kernels.bt_count_codecs``)."""
+        if self.codec is None:
+            scheme, partition = "none", None
+        else:
+            from repro.codec.schemes import codec_by_name  # deferred
+
+            c = codec_by_name(self.codec)
+            scheme, partition = c.scheme, c.partition
+        return CodecVariant(
+            self.ordering, self.k, self.descending, scheme, partition
+        )
 
     def area(self) -> PSUArea:
         """Modeled area of this point's sorting unit (um^2, DESIGN.md §6)."""
@@ -182,6 +212,7 @@ def expand_grid(
     ks: tuple[int, ...] = (2, 4, 8),
     orderings: tuple[str, ...] = ("none", "acc", "app"),
     descendings: tuple[bool, ...] = (False,),
+    codecs: tuple[str | None, ...] = (None,),
     topologies: tuple[str | None, ...] = (None,),
 ) -> tuple[DesignPoint, ...]:
     """Deterministic expansion of a design grid into valid points.
@@ -190,6 +221,8 @@ def expand_grid(
     expands once per bucket count in ``ks``; every other ordering ignores
     ``ks``; comparator families pair only with 'acc'; the data-independent
     orderings carry no hardware so only family 'psu' and ascending order).
+    Every point additionally expands over ``codecs`` (None = uncoded wire,
+    or registered ``repro.codec`` names — the coding-vs-ordering axis).
     Duplicates are dropped, first occurrence wins — the output order is a
     pure function of the argument order.
     """
@@ -211,18 +244,20 @@ def expand_grid(
                             for desc in descendings:
                                 if desc and ordering in ("none", "column_major"):
                                     continue
-                                pt = DesignPoint(
-                                    family=family,
-                                    n=n,
-                                    width=width,
-                                    k=k,
-                                    ordering=ordering,
-                                    descending=desc,
-                                    topology=topo,
-                                )
-                                if pt not in seen:
-                                    seen.add(pt)
-                                    points.append(pt)
+                                for codec in codecs:
+                                    pt = DesignPoint(
+                                        family=family,
+                                        n=n,
+                                        width=width,
+                                        k=k,
+                                        ordering=ordering,
+                                        descending=desc,
+                                        codec=codec,
+                                        topology=topo,
+                                    )
+                                    if pt not in seen:
+                                        seen.add(pt)
+                                        points.append(pt)
     return tuple(points)
 
 

@@ -9,12 +9,17 @@
 #   bt_variants.py- multi-variant ordered BT: a whole design grid's stream
 #                   measurements in one launch (the repro.dse hot path,
 #                   DESIGN.md §10)
+#   bt_codecs.py  - multi-codec x multi-ordering coded BT: the whole
+#                   ordering-vs-coding comparison grid in one launch (the
+#                   repro.codec hot path, DESIGN.md §11)
 #   quantize.py   - int8 egress quantizer for the compressed all-reduce path
 # ops.py holds the jit'd wrappers, ref.py the pure-jnp oracles.
 from .ops import (
+    CodecVariant,
     PsuStreamResult,
     Variant,
     bt_count,
+    bt_count_codecs,
     bt_count_links,
     bt_count_variants,
     default_interpret,
@@ -32,7 +37,9 @@ __all__ = [
     "bt_count",
     "bt_count_links",
     "bt_count_variants",
+    "bt_count_codecs",
     "Variant",
+    "CodecVariant",
     "quantize_egress",
     "default_interpret",
 ]

@@ -1,0 +1,398 @@
+"""Pallas TPU kernel: batched multi-codec x multi-ordering BT measurement.
+
+``repro.codec`` makes "ordering vs coding vs ordering∘coding" a measured
+axis: every configuration pairs a packet ordering (the paper's PSU) with a
+link codec (bus-invert / gray / sign-magnitude / transition signaling).
+Measuring each pair with ``psu_stream`` + a jnp codec + ``bt_count`` costs
+one (or more) kernel launches per configuration; this kernel puts the
+whole *codec x ordering* grid inside ONE launch.
+
+One grid step loads a (BP, N) packet block, runs the popcount stage ONCE,
+and then — for every static config — derives the ordering (the shared
+``psu._rank_from_keys`` counting-sort machinery and the permutation-matrix
+reorder of ``bt_variants.py``), packs the flit stream, applies the codec
+and accumulates per-side BT plus invert-line transitions.  Configs sharing
+an ordering share its reorder; codecs are applied per config on the shared
+stream.
+
+Codec state across blocks (DESIGN.md §11):
+
+  * stateless codecs (``none`` / ``gray`` / ``sign_magnitude``) are per-byte
+    maps — per-block edge flits patch the G-1 inter-block boundaries
+    exactly as in ``bt_variants.py``;
+  * ``transition`` signaling's wire depends on the whole history, but its
+    boundary flips equal the *data* flit's popcount, so blocks emit data
+    edges and the wrapper adds each block's first-flit popcount;
+  * ``bus_invert``'s sequential invert decision is re-expressed as a
+    per-block prefix scan: the recurrence v_t = tie_t ? 0 : h_t ^ v_{t-1}
+    (h/tie from vectorized pairwise data HDs) collapses to a prefix-XOR
+    with tie resets, evaluated for BOTH possible entry states — the two
+    branches of a block are complement-or-equal throughout, so the block's
+    coding is fully determined by its first invert bit.  The kernel emits
+    per-branch, per-partition BT partials and edge wire/invert states; the
+    ``ops.py`` wrapper folds the O(G) inter-block carry (choosing each
+    block's branch from the previous block's last wire flit) in plain jnp.
+
+Zero-padded tail packets are masked *inside* the kernel (each block knows
+its valid flit count from ``program_id``), so non-block-multiple P needs no
+wrapper-side subtraction.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from repro.core.coding import (
+    bus_invert_partitions as _partitions,
+    gray_encode_bytes,
+    sign_magnitude_encode_bytes,
+)
+
+from .bt_variants import Variant, validate_variants
+from .psu import _popcount_bits, _rank_from_keys
+
+__all__ = [
+    "CodecVariant",
+    "CODEC_SCHEMES",
+    "validate_codec_variants",
+    "bt_codecs_pallas",
+]
+
+CODEC_SCHEMES = ("none", "gray", "sign_magnitude", "transition", "bus_invert")
+
+
+class CodecVariant(NamedTuple):
+    """One measured (ordering, codec) configuration of the codec-BT kernel.
+
+    ``key`` / ``k`` / ``descending`` are the ordering axes of
+    ``bt_variants.Variant``; ``codec`` is a static scheme id from
+    ``CODEC_SCHEMES``; ``partition`` is the bus-invert group width in lanes
+    (None = one invert line over the whole flit; meaningless otherwise).
+    """
+
+    key: str = "acc"
+    k: int | None = None
+    descending: bool = False
+    codec: str = "none"
+    partition: int | None = None
+
+    @property
+    def ordering(self) -> Variant:
+        return Variant(self.key, self.k, self.descending)
+
+
+def validate_codec_variants(
+    configs: tuple[CodecVariant, ...], width: int, lanes: int
+) -> tuple[CodecVariant, ...]:
+    """Check a static config tuple against the kernel's contract."""
+    if not configs:
+        raise ValueError("need at least one codec config")
+    out = []
+    for cfg in configs:
+        cfg = CodecVariant(*cfg)
+        validate_variants((cfg.ordering,), width)
+        if cfg.codec not in CODEC_SCHEMES:
+            raise ValueError(
+                f"config {cfg}: unknown codec scheme {cfg.codec!r}; "
+                f"choose from {CODEC_SCHEMES}"
+            )
+        if cfg.codec == "bus_invert":
+            _partitions(lanes, cfg.partition)
+        elif cfg.partition is not None:
+            raise ValueError(
+                f"config {cfg}: partition is only meaningful for 'bus_invert'"
+            )
+        out.append(cfg)
+    return tuple(out)
+
+
+def max_partitions(
+    configs: tuple[CodecVariant, ...], lanes: int
+) -> int:
+    """Invert-line slots the kernel's outputs must provide (>= 1)."""
+    return max(
+        [1]
+        + [
+            _partitions(lanes, c.partition)[0]
+            for c in configs
+            if c.codec == "bus_invert"
+        ]
+    )
+
+
+def _bus_invert_bits(hd: jax.Array, lbits: int) -> tuple[jax.Array, jax.Array]:
+    """Invert-line states for both entry branches from pairwise data HDs.
+
+    ``hd`` is (T-1, P) Hamming distances between consecutive data flit
+    groups.  The sequential decision v_t = [2*HD(d_t, w_{t-1}) > L] obeys
+    v_t = tie_t ? 0 : h_t ^ v_{t-1} (h_t = [2*HD_t > L], tie_t =
+    [2*HD_t == L]), which is a prefix-XOR with resets at ties — evaluated
+    here with one cumsum and one cummax instead of a sequential scan.
+    Returns (v0, v1), both (T, P), for entry states v_0 = 0 and v_0 = 1.
+    """
+    tm1, npart = hd.shape
+    h = (2 * hd > lbits).astype(jnp.int32)
+    tie = (2 * hd == lbits).astype(jnp.int32)
+    xpre = jnp.cumsum(h, axis=0) & 1  # X_t = h_1 ^ ... ^ h_t
+    tpos = lax.broadcasted_iota(jnp.int32, (tm1, npart), 0) + 1
+    packed = jnp.where(tie == 1, 2 * tpos + xpre, 0)  # (t, X_t) at ties
+    cmax = lax.cummax(packed, axis=0)  # carries the most recent tie
+    xr = jnp.where(cmax > 0, cmax & 1, 0)  # X at the last tie (else 0)
+    zeros = jnp.zeros((1, npart), jnp.int32)
+    v0 = jnp.concatenate([zeros, xpre ^ xr], axis=0)
+    # no tie yet -> the entry bit still propagates: v1 = v0 ^ [no tie <= t]
+    notie = jnp.concatenate(
+        [zeros + 1, (cmax == 0).astype(jnp.int32)], axis=0
+    )
+    return v0, v0 ^ notie
+
+
+def _bt_codecs_kernel(
+    x_ref,
+    w_ref,
+    bt_ref,
+    edge_ref,
+    inv_edge_ref,
+    *,
+    configs: tuple[CodecVariant, ...],
+    width: int,
+    input_lanes: int,
+    weight_lanes: int,
+    pack: str,
+    real_rows: int,
+    pmax: int,
+):
+    """Measure coded + ordered BT of one (BP, N) block under every config."""
+    x = x_ref[...].astype(jnp.int32)
+    w = w_ref[...].astype(jnp.int32)
+    bp, n = x.shape
+    flits = n // input_lanes
+    lanes = input_lanes + weight_lanes
+    rows = bp * flits
+    g = pl.program_id(0)
+    valid = jnp.minimum(jnp.int32(rows), jnp.int32(real_rows) - g * rows)
+
+    row_idx = lax.broadcasted_iota(jnp.int32, (rows, 1), 0)
+    bmask = (row_idx[1:] < valid).astype(jnp.int32)  # (rows-1, 1) boundaries
+
+    def _last_valid(arr):  # (rows, L) -> (L,): the row at index valid-1
+        onehot = (row_idx == valid - 1).astype(jnp.int32)
+        return (arr * onehot).sum(axis=0)
+
+    def _flit(values, ln):
+        if pack == "lane":
+            return values.reshape(bp, ln, flits).transpose(0, 2, 1)
+        return values.reshape(bp, flits, ln)
+
+    # --- popcount stage: ONCE per block, shared by every bucketing ---
+    pc = _popcount_bits(x, width)
+
+    # --- one reordered + packed stream per unique ordering ---
+    streams: dict[Variant, jax.Array] = {}
+    for cfg in configs:
+        if cfg.ordering in streams:
+            continue
+        key_name, k, descending = cfg.ordering
+        if key_name in ("acc", "app"):
+            if key_name == "acc":
+                key, nb = pc, width + 1
+            else:
+                key, nb = (pc * k) // (width + 1), k
+            if descending:
+                key = (nb - 1) - key
+            rank = _rank_from_keys(key, nb)
+            iota_j = lax.broadcasted_iota(jnp.int32, (bp, n, n), 2)
+            perm = (rank[:, :, None] == iota_j).astype(jnp.float32)
+            payload = jnp.stack([x, w], axis=1).astype(jnp.float32)
+            moved = lax.dot_general(
+                payload,
+                perm,
+                dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+                preferred_element_type=jnp.float32,
+            ).astype(jnp.int32)
+            xs, ws = moved[:, 0, :], moved[:, 1, :]
+        elif key_name == "column_major":
+            xs = x.reshape(bp, flits, input_lanes).transpose(0, 2, 1)
+            xs = xs.reshape(bp, n)
+            ws = w.reshape(bp, flits, input_lanes).transpose(0, 2, 1)
+            ws = ws.reshape(bp, n)
+        else:  # 'none'
+            xs, ws = x, w
+        if weight_lanes:
+            flit_block = jnp.concatenate(
+                [_flit(xs, input_lanes), _flit(ws, weight_lanes)], axis=-1
+            )
+        else:
+            flit_block = _flit(xs, input_lanes)
+        streams[cfg.ordering] = flit_block.reshape(rows, lanes)
+
+    # --- codec + BT-accumulate per config on the shared streams ---
+    for ci, cfg in enumerate(configs):
+        stream = streams[cfg.ordering]
+        zero_inv = jnp.zeros((2, 2, pmax), jnp.int32)
+
+        if cfg.codec in ("none", "gray", "sign_magnitude"):
+            if cfg.codec == "gray":
+                wire = gray_encode_bytes(stream)
+            elif cfg.codec == "sign_magnitude":
+                wire = sign_magnitude_encode_bytes(stream)
+            else:
+                wire = stream
+            flips = _popcount_bits(wire[1:] ^ wire[:-1], 8) * bmask
+            row = jnp.stack(
+                [
+                    flips[:, :input_lanes].sum(),
+                    flips[:, input_lanes:].sum() if weight_lanes else jnp.int32(0),
+                    jnp.int32(0),
+                ]
+            )
+            part = jnp.broadcast_to(row, (2, 1, 3))
+            edge = jnp.stack([wire[0], _last_valid(wire)])  # (2, lanes)
+            bt_ref[0, ci] = jnp.pad(part, ((0, 0), (0, pmax - 1), (0, 0)))
+            edge_ref[0, ci] = jnp.broadcast_to(edge, (2, 2, lanes))
+            inv_edge_ref[0, ci] = zero_inv
+
+        elif cfg.codec == "transition":
+            # wire_t ^ wire_{t-1} == data_t: boundary flips = data popcount
+            ppc = _popcount_bits(stream, 8)
+            contrib = ppc[1:] * bmask
+            row = jnp.stack(
+                [
+                    contrib[:, :input_lanes].sum(),
+                    contrib[:, input_lanes:].sum()
+                    if weight_lanes
+                    else jnp.int32(0),
+                    jnp.int32(0),
+                ]
+            )
+            part = jnp.broadcast_to(row, (2, 1, 3))
+            # edges carry DATA flits (the wrapper adds first-flit popcounts)
+            edge = jnp.stack([stream[0], _last_valid(stream)])
+            bt_ref[0, ci] = jnp.pad(part, ((0, 0), (0, pmax - 1), (0, 0)))
+            edge_ref[0, ci] = jnp.broadcast_to(edge, (2, 2, lanes))
+            inv_edge_ref[0, ci] = zero_inv
+
+        else:  # bus_invert
+            npart, pw = _partitions(lanes, cfg.partition)
+            lbits = 8 * pw
+            d = stream.reshape(rows, npart, pw)
+            dpc = _popcount_bits(d[1:] ^ d[:-1], 8)  # (rows-1, npart, pw)
+            v0, v1 = _bus_invert_bits(dpc.sum(axis=-1), lbits)
+            # input/weight lane split inside each partition: global lane id
+            # part*pw + j < input_lanes (iota, not a captured constant)
+            lane_id = lax.broadcasted_iota(
+                jnp.int32, (npart, pw), 0
+            ) * pw + lax.broadcasted_iota(jnp.int32, (npart, pw), 1)
+            in_mask = (lane_id < input_lanes).astype(jnp.int32)
+            parts, edges, inv_edges = [], [], []
+            for v in (v0, v1):
+                e = v[1:] ^ v[:-1]  # (rows-1, npart) invert-line flips
+                lane_flips = jnp.where(e[:, :, None] == 1, 8 - dpc, dpc)
+                lane_flips = lane_flips * bmask[:, :, None]
+                bt_in = (lane_flips * in_mask).sum(axis=(0, 2))
+                bt_wg = (lane_flips * (1 - in_mask)).sum(axis=(0, 2))
+                aux = (e * bmask).sum(axis=0)
+                parts.append(jnp.stack([bt_in, bt_wg, aux], axis=-1))
+                wire = (d ^ (v[:, :, None] * 0xFF)).reshape(rows, lanes)
+                edges.append(jnp.stack([wire[0], _last_valid(wire)]))
+                inv_edges.append(jnp.stack([v[0], _last_valid(v)]))
+            bt_ref[0, ci] = jnp.pad(
+                jnp.stack(parts), ((0, 0), (0, pmax - npart), (0, 0))
+            )
+            edge_ref[0, ci] = jnp.stack(edges)
+            inv_edge_ref[0, ci] = jnp.pad(
+                jnp.stack(inv_edges), ((0, 0), (0, 0), (0, pmax - npart))
+            )
+
+
+def bt_codecs_pallas(
+    inputs: jax.Array,
+    weights: jax.Array,
+    *,
+    configs: tuple[CodecVariant, ...],
+    width: int = 8,
+    input_lanes: int = 8,
+    weight_lanes: int = 0,
+    pack: str = "lane",
+    block_packets: int = 64,
+    real_packets: int | None = None,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Per-config coded BT partials of a (P, N) packet batch in ONE launch.
+
+    Args:
+      inputs / weights: (P, N) int packets; P a multiple of
+        ``block_packets`` (the ``ops.py`` wrapper zero-pads; padded flits
+        are masked inside the kernel via ``real_packets``).
+      configs: static tuple of :class:`CodecVariant` configurations.
+      real_packets: packets that are real data (default: all of P).
+
+    Returns:
+      (partials, edges, inv_edges):
+        * int32 (G, C, 2, PMAX, 3) per-block, per-entry-branch,
+          per-partition (input, weight, invert-line) BT partials over
+          block-internal valid boundaries (branches are identical for every
+          codec except bus-invert; non-partitioned codecs use slot 0);
+        * int32 (G, C, 2, 2, lanes) per-branch first/last wire rows (DATA
+          rows for 'transition');
+        * int32 (G, C, 2, 2, PMAX) per-branch first/last invert-line
+          states (bus-invert only, zeros otherwise).
+    """
+    p, n = inputs.shape
+    lanes = input_lanes + weight_lanes
+    configs = validate_codec_variants(configs, width, lanes)
+    if p % block_packets != 0:
+        raise ValueError(f"P={p} not a multiple of block_packets={block_packets}")
+    if n % input_lanes != 0:
+        raise ValueError(f"packet size {n} not divisible by input_lanes={input_lanes}")
+    if weight_lanes not in (0, input_lanes):
+        raise ValueError(
+            "codec kernel needs a symmetric (or absent) weight side: "
+            f"weight_lanes={weight_lanes} vs input_lanes={input_lanes}"
+        )
+    if pack not in ("lane", "row"):
+        raise ValueError(f"codec kernel supports pack 'lane'|'row', got {pack!r}")
+    if real_packets is None:
+        real_packets = p
+    if not 0 < real_packets <= p:
+        raise ValueError(f"real_packets={real_packets} outside (0, {p}]")
+    nc = len(configs)
+    flits = n // input_lanes
+    pmax = max_partitions(configs, lanes)
+    grid = (p // block_packets,)
+    kern = functools.partial(
+        _bt_codecs_kernel,
+        configs=configs,
+        width=width,
+        input_lanes=input_lanes,
+        weight_lanes=weight_lanes,
+        pack=pack,
+        real_rows=real_packets * flits,
+        pmax=pmax,
+    )
+    pk_spec = pl.BlockSpec((block_packets, n), lambda i: (i, 0))
+    gblocks = p // block_packets
+    out_shape = [
+        jax.ShapeDtypeStruct((gblocks, nc, 2, pmax, 3), jnp.int32),
+        jax.ShapeDtypeStruct((gblocks, nc, 2, 2, lanes), jnp.int32),
+        jax.ShapeDtypeStruct((gblocks, nc, 2, 2, pmax), jnp.int32),
+    ]
+    out_specs = [
+        pl.BlockSpec((1, nc, 2, pmax, 3), lambda i: (i, 0, 0, 0, 0)),
+        pl.BlockSpec((1, nc, 2, 2, lanes), lambda i: (i, 0, 0, 0, 0)),
+        pl.BlockSpec((1, nc, 2, 2, pmax), lambda i: (i, 0, 0, 0, 0)),
+    ]
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[pk_spec, pk_spec],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(inputs.astype(jnp.int32), weights.astype(jnp.int32))

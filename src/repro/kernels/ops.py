@@ -14,6 +14,12 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from .bt_codecs import (
+    CodecVariant,
+    _partitions,
+    bt_codecs_pallas,
+    validate_codec_variants,
+)
 from .bt_links import bt_links_pallas
 from .bt_variants import Variant, bt_variants_pallas, validate_variants
 from .btcount import bt_count_pallas
@@ -30,7 +36,9 @@ __all__ = [
     "bt_count",
     "bt_count_links",
     "bt_count_variants",
+    "bt_count_codecs",
     "Variant",
+    "CodecVariant",
     "quantize_egress",
     "default_interpret",
 ]
@@ -382,6 +390,171 @@ def bt_count_variants(
         flips = _popcount_bits(jnp.stack(last_flits), 8)  # (V, lanes)
         bt = bt - _halves(flips)
     return bt
+
+
+@partial(
+    jax.jit,
+    static_argnames=(
+        "configs",
+        "width",
+        "input_lanes",
+        "weight_lanes",
+        "pack",
+        "block_packets",
+        "interpret",
+    ),
+)
+def bt_count_codecs(
+    inputs: jax.Array,
+    weights: jax.Array | None = None,
+    configs: tuple[CodecVariant, ...] = (CodecVariant(),),
+    width: int = 8,
+    input_lanes: int = 8,
+    weight_lanes: int | None = None,
+    pack: str = "lane",
+    block_packets: int = 64,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Coded + ordered BT of (P, N) packets under MANY (ordering, codec)
+    configurations in ONE kernel launch.
+
+    The batched replacement for one ``psu_stream`` launch + a jnp codec +
+    ``bt_count`` launch per configuration: the whole codec x ordering grid
+    lives inside the single launch (``bt_codecs.py`` shares one popcount
+    pass and one reorder per distinct ordering; stateful codecs run as
+    vectorized per-block prefix scans).  This is what makes the
+    ``repro.codec.compare`` tables and the ``repro.dse`` codec axis one
+    launch per measured stream (``benchmarks/codec_bt.py``).
+
+    Accepts any (P, N) integer packets; P is padded to the kernel block
+    size with zero packets, which the kernel masks out internally (no
+    wrapper-side tail subtraction).  The G-1 inter-block boundaries are
+    patched here per codec from the per-block edge states the kernel
+    emits: byte-map codecs XOR adjacent edge flits, transition signaling
+    adds each block's first-flit popcount, and bus-invert folds an O(G)
+    carry — each block's entry branch is chosen from the previous block's
+    last wire flit (``lax.scan``, no extra kernel launch).
+
+    Args:
+      inputs: (P, N) integer packets.
+      weights: optional (P, N) paired weight bytes.
+      configs: static tuple of ``CodecVariant`` configurations.
+      width: element bit width W of the sort keys.
+      input_lanes / weight_lanes: bytes of each side per flit (weight side
+        defaults to ``input_lanes`` when weights are given, else 0).
+      pack: 'lane' or 'row' flit layout.
+
+    Returns:
+      int32 (C, 3): per-config (input-side BT, weight-side BT, invert-line
+      BT) totals.  The invert-line column is the coding overhead the wire
+      still pays switching energy for (zero for codecs without extra
+      lines).
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    if weights is None:
+        weight_lanes = 0 if weight_lanes is None else weight_lanes
+        weights = jnp.zeros_like(inputs)
+    elif weight_lanes is None:
+        weight_lanes = input_lanes
+    if weights.shape != inputs.shape:
+        raise ValueError(f"paired shapes differ: {inputs.shape} vs {weights.shape}")
+    p, n = inputs.shape
+    lanes = input_lanes + weight_lanes
+    configs = validate_codec_variants(tuple(configs), width, lanes)
+    bp = min(block_packets, max(1, p))
+    pad = (-p) % bp
+    x = jnp.pad(inputs.astype(jnp.int32), ((0, pad), (0, 0)))
+    w = jnp.pad(weights.astype(jnp.int32), ((0, pad), (0, 0)))
+    partials, edges, inv_edges = bt_codecs_pallas(
+        x,
+        w,
+        configs=configs,
+        width=width,
+        input_lanes=input_lanes,
+        weight_lanes=weight_lanes,
+        pack=pack,
+        block_packets=bp,
+        real_packets=p,
+        interpret=interpret,
+    )
+    grid = (p + pad) // bp
+
+    def _sides(flips):  # (..., lanes) -> (..., 2) per-side sums
+        wside = (
+            flips[..., input_lanes:].sum(-1)
+            if weight_lanes
+            else jnp.zeros_like(flips[..., 0])
+        )
+        return jnp.stack([flips[..., :input_lanes].sum(-1), wside], axis=-1)
+
+    totals = []
+    for ci, cfg in enumerate(configs):
+        if cfg.codec == "bus_invert":
+            npart, pw = _partitions(lanes, cfg.partition)
+            lbits = 8 * pw
+            in_mask = (
+                jnp.arange(lanes, dtype=jnp.int32) < input_lanes
+            ).astype(jnp.int32).reshape(npart, pw)
+            total = partials[0, ci, 0, :npart]  # (npart, 3): block 0, branch 0
+            if grid > 1:
+
+                def fold(carry, blk):
+                    carry_wire, carry_inv = carry
+                    part_g, edge_g, inv_g = blk
+                    # branch-0 first wire IS the block's first data flit
+                    d_first = edge_g[0, 0].reshape(npart, pw)
+                    hd = _popcount_bits(d_first ^ carry_wire, 8).sum(-1)
+                    b = (2 * hd > lbits).astype(jnp.int32)  # (npart,)
+                    first_wire = d_first ^ (b[:, None] * 0xFF)
+                    flips = _popcount_bits(carry_wire ^ first_wire, 8)
+                    bnd = jnp.stack(
+                        [
+                            (flips * in_mask).sum(-1),
+                            (flips * (1 - in_mask)).sum(-1),
+                            (carry_inv != b).astype(jnp.int32),
+                        ],
+                        axis=-1,
+                    )  # (npart, 3): the inter-block boundary itself
+                    sel = jnp.where(b[:, None] == 1, part_g[1], part_g[0])
+                    ew = edge_g[:, 1].reshape(2, npart, pw)
+                    new_wire = jnp.where(b[:, None] == 1, ew[1], ew[0])
+                    iv = inv_g[:, 1]
+                    new_inv = jnp.where(b == 1, iv[1], iv[0])
+                    return (new_wire, new_inv), bnd + sel
+
+                carry0 = (
+                    edges[0, ci, 0, 1].reshape(npart, pw),
+                    inv_edges[0, ci, 0, 1, :npart],
+                )
+                _, contribs = jax.lax.scan(
+                    fold,
+                    carry0,
+                    (
+                        partials[1:, ci, :, :npart],
+                        edges[1:, ci],
+                        inv_edges[1:, ci, :, :, :npart],
+                    ),
+                )
+                total = total + contribs.sum(axis=0)
+            totals.append(total.sum(axis=0))  # (3,)
+        else:
+            total = partials[:, ci, 0].sum(axis=(0, 1))  # (3,) over G, slots
+            if grid > 1:
+                if cfg.codec == "transition":
+                    # boundary flips = the next block's first DATA flit bits
+                    flips = _popcount_bits(edges[1:, ci, 0, 0, :], 8)
+                else:
+                    flips = _popcount_bits(
+                        jnp.bitwise_xor(
+                            edges[:-1, ci, 0, 1, :], edges[1:, ci, 0, 0, :]
+                        ),
+                        8,
+                    )
+                bnd = _sides(flips).sum(axis=0)  # (2,)
+                total = total + jnp.concatenate([bnd, jnp.zeros((1,), jnp.int32)])
+            totals.append(total)
+    return jnp.stack(totals).astype(jnp.int32)
 
 
 @partial(jax.jit, static_argnames=("block", "interpret"))

@@ -19,6 +19,8 @@ __all__ = [
     "bt_count_ref",
     "bt_variants_ref",
     "variant_order_ref",
+    "codec_stream_ref",
+    "bt_codecs_ref",
     "quantize_egress_ref",
 ]
 
@@ -176,6 +178,75 @@ def bt_variants_ref(
             else jnp.int32(0)
         )
         rows.append(jnp.stack([bt_i, bt_w]))
+    return jnp.stack(rows).astype(jnp.int32)
+
+
+def codec_stream_ref(stream: jax.Array, scheme: str, partition: int | None = None):
+    """The wire image of ``stream`` under one codec scheme — the sequential
+    ``repro.codec.schemes`` encoders (bus-invert as a ``lax.scan`` over
+    flits), which the prefix-scan formulation inside the codec kernel is
+    pinned against.  Returns a ``CodedStream`` (wire, invert lines | None).
+    """
+    # deferred: repro.codec registers stages into repro.link at import, and
+    # repro.link imports this package — a module-level import would cycle
+    from repro.codec.schemes import bus_invert_encode, codec_by_name
+
+    if scheme == "bus_invert":
+        return bus_invert_encode(stream, partition)
+    return codec_by_name(scheme).encode(stream.astype(jnp.uint8))
+
+
+def bt_codecs_ref(
+    inputs: jax.Array,
+    weights: jax.Array | None,
+    configs,
+    *,
+    width: int = 8,
+    input_lanes: int = 8,
+    weight_lanes: int = 0,
+    pack: str = "lane",
+) -> jax.Array:
+    """Oracle for the multi-codec BT kernel: for each (ordering, codec)
+    config, the unfused order -> gather -> flit-pack -> codec-encode -> BT
+    composition on the whole stream.
+
+    ``configs`` are ``(key, k, descending, codec, partition)`` tuples
+    (``repro.kernels.bt_codecs.CodecVariant``).  Returns int32 (C, 3)
+    per-config (input-side, weight-side, invert-line) totals, matching
+    ``repro.kernels.bt_count_codecs``.
+    """
+    from repro.codec.schemes import invert_line_transitions
+
+    p, n = inputs.shape
+    flits = n // input_lanes
+
+    def _flits(values, lanes):
+        if pack == "lane":
+            return values.reshape(p, lanes, flits).transpose(0, 2, 1)
+        return values.reshape(p, flits, lanes)
+
+    rows = []
+    for cfg in configs:
+        key, k, descending, scheme, partition = cfg
+        order = variant_order_ref(
+            inputs, (key, k, descending), width=width, input_lanes=input_lanes
+        )
+        xs = jnp.take_along_axis(inputs.astype(jnp.int32), order, axis=-1)
+        halves = [_flits(xs, input_lanes)]
+        if weight_lanes:
+            ws = jnp.take_along_axis(weights.astype(jnp.int32), order, axis=-1)
+            halves.append(_flits(ws, weight_lanes))
+        stream = jnp.concatenate(halves, axis=-1).reshape(
+            p * flits, input_lanes + weight_lanes
+        )
+        coded = codec_stream_ref(stream.astype(jnp.uint8), scheme, partition)
+        bt_i = bt_count_ref(coded.wire[:, :input_lanes])
+        bt_w = (
+            bt_count_ref(coded.wire[:, input_lanes:])
+            if weight_lanes
+            else jnp.int32(0)
+        )
+        rows.append(jnp.stack([bt_i, bt_w, invert_line_transitions(coded.invert)]))
     return jnp.stack(rows).astype(jnp.int32)
 
 

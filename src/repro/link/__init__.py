@@ -7,8 +7,15 @@
 #   pipeline.py - TxPipeline: staged path + fused single-launch hot path
 #   power.py    - the Fig. 6/7 link power model
 # Old import paths (repro.core.link, repro.core.ordering) are shims onto
-# this package.
-from .framing import LinkConfig, measure, pack_to_flits, paired_stream
+# this package.  Wire codecs (repro.codec, DESIGN.md §11) plug in through
+# the LinkSpec `codec` field.
+from .framing import (
+    LinkConfig,
+    measure,
+    pack_to_flits,
+    paired_stream,
+    unpack_from_flits,
+)
 from .pipeline import LinkReport, TxPipeline, TxResult
 from .power import LinkPowerModel
 from .spec import LinkSpec
@@ -19,11 +26,13 @@ from .stages import (
     PACK_STAGES,
     KeyStage,
     PackStage,
+    lookup_stage,
     make_order,
     order_packets,
     row_bucket_keys,
     row_bucket_order,
     tensor_flit_stream,
+    to_gray,
     to_sign_magnitude,
 )
 
@@ -35,6 +44,7 @@ __all__ = [
     "LinkReport",
     "LinkPowerModel",
     "pack_to_flits",
+    "unpack_from_flits",
     "paired_stream",
     "measure",
     "make_order",
@@ -45,7 +55,9 @@ __all__ = [
     "PACK_STAGES",
     "KeyStage",
     "PackStage",
+    "lookup_stage",
     "to_sign_magnitude",
+    "to_gray",
     "tensor_flit_stream",
     "row_bucket_keys",
     "row_bucket_order",

@@ -22,9 +22,15 @@ import jax.numpy as jnp
 from repro.core.bt import BTReport, bt_report
 
 from .spec import LinkSpec
-from .stages import PACK_STAGES, make_order
+from .stages import PACK_STAGES, lookup_stage, make_order
 
-__all__ = ["LinkConfig", "pack_to_flits", "paired_stream", "measure"]
+__all__ = [
+    "LinkConfig",
+    "pack_to_flits",
+    "unpack_from_flits",
+    "paired_stream",
+    "measure",
+]
 
 # Legacy name: framing-only callers configured a ``LinkConfig``; the spec is
 # a drop-in superset (same leading fields, defaults and derived properties).
@@ -44,13 +50,31 @@ def pack_to_flits(
     packing the transmitting unit uses after the PSU (paper Fig. 2 shows the
     resulting per-flit popcount trend).  ``pack="row"`` is plain row-major.
     """
-    stage = PACK_STAGES.get(pack)
-    if stage is None or stage.per_packet is None:
+    stage = lookup_stage("pack", pack, PACK_STAGES)
+    if stage.per_packet is None:
         raise ValueError(
-            f"unknown per-packet pack order {pack!r} (choose 'row' or 'lane';"
-            " 'col' is a stream-only layout)"
+            f"pack stage {pack!r} is a stream-only layout; per-packet "
+            "framing uses 'row' or 'lane'"
         )
     return stage.per_packet(values, lanes)
+
+
+def unpack_from_flits(
+    flits: jax.Array, pack: PackOrder = "lane"
+) -> jax.Array:
+    """Inverse of :func:`pack_to_flits`: (P, F, lanes) flit halves back to
+    the (P, N) payloads a receiver reassembles (round-tripped in
+    ``tests/test_framing.py``, incl. single-flit packets)."""
+    lookup_stage("pack", pack, PACK_STAGES)  # same registry, same UX
+    p, f, lanes = flits.shape
+    if pack == "row":
+        return flits.reshape(p, f * lanes)
+    if pack == "lane":
+        return flits.transpose(0, 2, 1).reshape(p, f * lanes)
+    raise ValueError(
+        f"pack stage {pack!r} is a stream-only layout; per-packet "
+        "framing uses 'row' or 'lane'"
+    )
 
 
 def _validate_paired(

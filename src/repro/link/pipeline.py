@@ -45,10 +45,12 @@ class TxResult:
 
     order: jax.Array  # (P, N) int32 (or (R,) for row streams)
     rank: Optional[jax.Array]  # (P, N) int32; None on the staged path
-    stream: jax.Array  # (T, lanes) uint8 packed flit rows
+    stream: jax.Array  # (T, lanes) uint8 wire rows (codec-coded if any)
     bt_input: jax.Array  # int32: input-side bit transitions
     bt_weight: jax.Array  # int32: weight-side bit transitions
     fused: bool  # produced by the single-launch kernel?
+    invert: Optional[jax.Array] = None  # (T, P) uint8 bus-invert lines
+    bt_aux: jax.Array | int = 0  # int32: invert-line transitions
 
 
 @dataclasses.dataclass(frozen=True)
@@ -62,10 +64,18 @@ class LinkReport:
     weight_bt: int
     fused: bool = False
     energy_pj: float = 0.0
+    aux_bt: int = 0  # invert-line transitions (codec overhead)
+    extra_wires: int = 0  # invert lines added beside the data lanes
 
     @property
     def total_bt(self) -> int:
         return self.input_bt + self.weight_bt
+
+    @property
+    def gross_bt(self) -> int:
+        """Data BT plus the codec's own invert-line transitions — the
+        number every codec comparison is scored on (net of overhead)."""
+        return self.total_bt + self.aux_bt
 
     @property
     def input_bt_per_flit(self) -> float:
@@ -80,8 +90,12 @@ class LinkReport:
         return self.total_bt / max(self.num_flits, 1)
 
     def reduction_vs(self, base: "LinkReport") -> float:
-        """Overall BT reduction relative to a baseline report (fraction)."""
-        return 1.0 - self.total_bt / max(base.total_bt, 1e-9)
+        """Overall BT reduction relative to a baseline report (fraction).
+
+        Scored on ``gross_bt``, so coded streams are credited net of their
+        invert-line overhead (identical to the data-only ratio when neither
+        report carries a codec)."""
+        return 1.0 - self.gross_bt / max(base.gross_bt, 1e-9)
 
     def to_bt_report(self) -> BTReport:
         """Legacy ``repro.core.bt.BTReport`` view (Table-I columns)."""
@@ -139,11 +153,26 @@ class TxPipeline:
 
     def _fusable(self, weights: jax.Array | None) -> bool:
         s = self.spec
+        # a wire codec recodes the assembled stream AFTER packing, so its
+        # BT cannot come out of the fused sort+pack+measure kernel; coded
+        # specs take the staged path (the single-launch multi-codec hot
+        # path is repro.kernels.bt_count_codecs)
         return (
             s.key in ("acc", "app")
             and s.pack in ("lane", "row")
+            and s.codec == "none"
             and (weights is None or s.symmetric)
         )
+
+    def _code_wire(
+        self, stream: jax.Array
+    ) -> tuple[jax.Array, Optional[jax.Array], jax.Array]:
+        """Apply the spec's wire codec: (wire, invert lines, aux BT)."""
+        # deferred import: repro.codec registers into repro.link on import
+        from repro.codec.schemes import codec_by_name, invert_line_transitions
+
+        coded = codec_by_name(self.spec.codec).encode(stream)
+        return coded.wire, coded.invert, invert_line_transitions(coded.invert)
 
     # ------------------------------------------------------------- packet TX
     def run(
@@ -169,8 +198,8 @@ class TxPipeline:
         fused = self._fused if self._fused is not None else self._fusable(weights)
         if fused and not self._fusable(weights):
             raise ValueError(
-                f"spec (key={s.key!r}, pack={s.pack!r}, symmetric={s.symmetric})"
-                " cannot run fused"
+                f"spec (key={s.key!r}, pack={s.pack!r}, codec={s.codec!r}, "
+                f"symmetric={s.symmetric}) cannot run fused"
             )
         if fused:
             res = psu_stream(
@@ -193,12 +222,15 @@ class TxPipeline:
             descending=s.descending,
         )
         stream = assemble_stream(xi, wi, s, order, s.pack)
+        invert, bt_aux = None, jnp.int32(0)
+        if s.codec != "none":
+            stream, invert, bt_aux = self._code_wire(stream)
         bt_i = bt_count(stream[:, : s.input_lanes], interpret=self._interpret)
         if wi is not None and s.weight_lanes:
             bt_w = bt_count(stream[:, s.input_lanes :], interpret=self._interpret)
         else:
             bt_w = jnp.int32(0)
-        return TxResult(order, None, stream, bt_i, bt_w, False)
+        return TxResult(order, None, stream, bt_i, bt_w, False, invert, bt_aux)
 
     def transmit(
         self, inputs: jax.Array, weights: jax.Array | None = None
@@ -212,18 +244,40 @@ class TxPipeline:
         weights: jax.Array | None = None,
         name: str = "stream",
     ) -> LinkReport:
-        """BT / energy report for transmitting the packets under this spec."""
+        """BT / energy report for transmitting the packets under this spec.
+
+        Coded specs report their invert-line transitions and added wires,
+        and the energy model charges both (``coded_link_energy_pj``) — the
+        BT win is net of the codec's own overhead."""
         res = self.run(inputs, weights)
-        num_flits = int(res.stream.shape[0])
+        num_flits, lanes = (int(d) for d in res.stream.shape)
         bt_i, bt_w = int(res.bt_input), int(res.bt_weight)
+        aux, wires = int(res.bt_aux), self._extra_wires(lanes)
         return LinkReport(
             name,
             num_flits,
             bt_i,
             bt_w,
             fused=res.fused,
-            energy_pj=self.power.link_energy_pj(bt_i + bt_w, num_flits),
+            energy_pj=self.power.coded_link_energy_pj(
+                bt_i + bt_w, aux, num_flits, 8 * lanes, wires
+            ),
+            aux_bt=aux,
+            extra_wires=wires,
         )
+
+    def _extra_wires(self, lanes: int) -> int:
+        """Invert lines the spec's codec adds beside ``lanes`` byte lanes.
+
+        ``lanes`` is the ACTUAL width of the assembled stream — an
+        input-only run of a paired spec codes only the input half, so the
+        codec framing (and the wire/energy accounting) must follow the
+        stream, not ``bytes_per_flit``."""
+        if self.spec.codec == "none":
+            return 0
+        from repro.codec.schemes import codec_by_name
+
+        return codec_by_name(self.spec.codec).extra_wires(lanes)
 
     # --------------------------------------------------------------- row TX
     def row_order(self, rows: jax.Array) -> jax.Array:
@@ -238,26 +292,41 @@ class TxPipeline:
             )
         return row_bucket_order(rows, s.k, width=s.width, descending=s.descending)
 
+    def _row_wire(self, rows: jax.Array) -> tuple[jax.Array, jax.Array]:
+        """(wire stream, aux BT) of an (R, B) byte-row stream."""
+        enc = self.encode(rows)
+        ordered = jnp.take(enc, self.row_order(enc), axis=0)
+        stream = PACK_STAGES[self.spec.pack].stream(
+            ordered, self.spec.bytes_per_flit
+        ).astype(jnp.uint8)
+        if self.spec.codec == "none":
+            return stream, jnp.int32(0)
+        wire, _, bt_aux = self._code_wire(stream)
+        return wire, bt_aux
+
     def transmit_rows(self, rows: jax.Array) -> jax.Array:
         """Wire image of an (R, B) byte-row stream (weight matrix traffic,
         DESIGN.md §3.3): encode, order whole rows by popcount bucket, lay
-        out with the pack stage ('row' = HBM-natural, 'col' = interleaved)."""
-        enc = self.encode(rows)
-        ordered = jnp.take(enc, self.row_order(enc), axis=0)
-        return PACK_STAGES[self.spec.pack].stream(
-            ordered, self.spec.bytes_per_flit
-        ).astype(jnp.uint8)
+        out with the pack stage ('row' = HBM-natural, 'col' = interleaved),
+        then apply the wire codec (if any)."""
+        return self._row_wire(rows)[0]
 
     def measure_rows(self, rows: jax.Array, name: str = "rows") -> LinkReport:
         """BT / energy report for streaming ``rows`` under this spec."""
-        stream = self.transmit_rows(rows)
+        stream, bt_aux = self._row_wire(rows)
+        aux = int(bt_aux)
         bt = int(bt_count(stream, interpret=self._interpret))
-        num_flits = int(stream.shape[0])
+        num_flits, lanes = (int(d) for d in stream.shape)
+        wires = self._extra_wires(lanes)
         return LinkReport(
             name,
             num_flits,
             bt,
             0,
             fused=False,
-            energy_pj=self.power.link_energy_pj(bt, num_flits),
+            energy_pj=self.power.coded_link_energy_pj(
+                bt, aux, num_flits, 8 * lanes, wires
+            ),
+            aux_bt=aux,
+            extra_wires=wires,
         )

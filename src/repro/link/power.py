@@ -36,6 +36,31 @@ class LinkPowerModel:
             + self.static_flit_energy_pj * float(num_flits)
         )
 
+    def coded_link_energy_pj(
+        self,
+        data_bt: float,
+        aux_bt: float,
+        num_flits: int,
+        data_wires: int,
+        extra_wires: int = 0,
+    ) -> float:
+        """Energy of a codec-coded stream, net of its added lines.
+
+        Invert-line transitions (``aux_bt``) switch real wires, so they pay
+        the same per-transition energy as data; the ``extra_wires`` invert
+        lines also widen the clocked register bank, scaling the per-flit
+        static floor by the wire-count ratio (DESIGN.md §11).  With
+        ``aux_bt = extra_wires = 0`` this is exactly ``link_energy_pj`` —
+        BT wins of any codec are reported *net* of this overhead.
+        """
+        if data_wires <= 0:
+            raise ValueError(f"need data_wires >= 1, got {data_wires}")
+        floor = 1.0 + extra_wires / float(data_wires)
+        return (
+            self.energy_per_transition_pj * float(data_bt + aux_bt)
+            + self.static_flit_energy_pj * floor * float(num_flits)
+        )
+
     def power_reduction(self, bt_reduction: float) -> float:
         """Link-related power reduction predicted from a BT reduction."""
         return self.transfer_factor * bt_reduction

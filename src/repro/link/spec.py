@@ -7,8 +7,12 @@ on it (DESIGN.md §3.2):
 
     key     — how sort keys are derived ('none' | 'column_major' | 'acc' |
               'app' | 'row_bucket'),
-    encode  — wire byte recoding ('identity' | 'sign_magnitude'),
+    encode  — element byte recoding ('identity' | 'sign_magnitude' |
+              'gray'), applied BEFORE the key stage,
     pack    — flit layout ('row' | 'lane' | 'col'),
+    codec   — wire coding of the assembled stream ('none' | a registered
+              ``repro.codec`` name, e.g. 'bus_invert'), applied AFTER
+              ordering and packing (DESIGN.md §11),
 
 plus the key-stage parameters (element width W, APP bucket count k, sort
 direction).  ``LinkSpec`` is a drop-in superset of the old
@@ -41,6 +45,7 @@ class LinkSpec:
     key: str = "acc"  # repro.link.stages.KEY_STAGES
     encode: str = "identity"  # repro.link.stages.ENCODE_STAGES
     pack: str = "lane"  # repro.link.stages.PACK_STAGES
+    codec: str = "none"  # repro.codec.CODECS (wire coding, DESIGN.md §11)
 
     # --- key-stage parameters ---
     width: int = 8  # element bit width W of the sort keys
@@ -82,9 +87,11 @@ class LinkSpec:
             ("encode", stages.ENCODE_STAGES),
             ("pack", stages.PACK_STAGES),
         ):
-            value = getattr(self, field)
-            if value not in registry:
-                raise ValueError(
-                    f"unknown {field} stage {value!r}; "
-                    f"choose from {sorted(registry)}"
-                )
+            stages.lookup_stage(field, getattr(self, field), registry)
+        if self.codec != "none":
+            # deferred further: repro.codec registers into repro.link at
+            # import, so this import must not run while link initializes
+            # (it never does: module-level specs use the 'none' default)
+            from repro.codec.schemes import CODECS
+
+            stages.lookup_stage("codec", self.codec, CODECS)

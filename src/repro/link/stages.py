@@ -27,11 +27,12 @@ path ``repro.core.ordering`` re-exports it.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Optional
+from typing import Callable, Dict, Mapping, Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.coding import gray_encode_bytes
 from repro.core.popcount import bucket_map, popcount
 from repro.core.sorting import counting_sort_indices
 
@@ -41,14 +42,28 @@ __all__ = [
     "KEY_STAGES",
     "ENCODE_STAGES",
     "PACK_STAGES",
+    "lookup_stage",
     "make_order",
     "order_packets",
     "ORDER_STRATEGIES",
     "to_sign_magnitude",
+    "to_gray",
     "tensor_flit_stream",
     "row_bucket_keys",
     "row_bucket_order",
 ]
+
+
+def lookup_stage(kind: str, name: str, registry: Mapping[str, object]):
+    """Registry lookup with the harness-wide unknown-name UX: errors list
+    every registered stage name (mirrors ``benchmarks/run.py``)."""
+    stage = registry.get(name)
+    if stage is None:
+        raise ValueError(
+            f"unknown {kind} stage {name!r}; registered {kind} stages: "
+            f"{', '.join(sorted(registry))}"
+        )
+    return stage
 
 
 # --------------------------------------------------------------------------
@@ -71,9 +86,22 @@ def to_sign_magnitude(q_int8: jax.Array) -> jax.Array:
     return (sign | jnp.abs(q).astype(jnp.uint8)).astype(jnp.uint8)
 
 
+def to_gray(values: jax.Array) -> jax.Array:
+    """Recode bytes as reflected-binary Gray code (repro.core.coding).
+
+    The stateless half of the ``repro.codec`` family surfaced as an encode
+    stage: applied before the KEY stage, so popcount keys are derived from
+    the gray image — the element-level composition (DESIGN.md §11; the
+    wire-level composition, keys from raw bytes, is the ``LinkSpec.codec``
+    stage instead).
+    """
+    return gray_encode_bytes(values.astype(jnp.uint8))
+
+
 ENCODE_STAGES: Dict[str, Callable[[jax.Array], jax.Array]] = {
     "identity": lambda v: v,
     "sign_magnitude": to_sign_magnitude,
+    "gray": to_gray,
 }
 
 

@@ -43,3 +43,19 @@ class NocPowerModel(LinkPowerModel):
         return self.link_energy_pj(total_bt, num_flits) + (
             self.router_flit_energy_pj * float(num_flits)
         )
+
+    def coded_hop_energy_pj(
+        self,
+        data_bt: float,
+        aux_bt: float,
+        num_flits: int,
+        data_wires: int,
+        extra_wires: int = 0,
+    ) -> float:
+        """Coded-link traversal: the widened-wire link model (identical to
+        the point-to-point ``coded_link_energy_pj`` accounting, DESIGN.md
+        §11) plus the router flit overhead.  Reduces to ``hop_energy_pj``
+        when the link is uncoded."""
+        return self.coded_link_energy_pj(
+            data_bt, aux_bt, num_flits, data_wires, extra_wires
+        ) + self.router_flit_energy_pj * float(num_flits)

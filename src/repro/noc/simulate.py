@@ -24,7 +24,12 @@ Where the sorting unit sits is the modeled design choice (DESIGN.md §9):
 
 Element ordering reuses the registered ``repro.link`` stages (the KEY /
 ENCODE / PACK registries and ``assemble_stream``), so a ``LinkSpec`` means
-the same thing on a NoC link as on the paper's point-to-point link.
+the same thing on a NoC link as on the paper's point-to-point link.  That
+includes the wire-codec stage (DESIGN.md §11): a spec naming a
+``repro.codec`` codec puts one encoder at every active link's egress — the
+measured streams are the coded wire images and each link's invert-line
+transitions ride along as ``LinkStats.bt_aux``, so fabric-level
+coding-vs-ordering comparisons are net of overhead.
 """
 
 from __future__ import annotations
@@ -86,10 +91,16 @@ class LinkStats:
     bt_input: int
     bt_weight: int
     energy_pj: float
+    bt_aux: int = 0  # invert-line transitions (wire-codec overhead)
 
     @property
     def total_bt(self) -> int:
         return self.bt_input + self.bt_weight
+
+    @property
+    def gross_bt(self) -> int:
+        """Data BT plus the codec's invert-line transitions."""
+        return self.total_bt + self.bt_aux
 
     @property
     def bt_per_flit(self) -> float:
@@ -101,12 +112,15 @@ class LinkStreams(NamedTuple):
 
     ``streams`` is (L, T_max, lanes) uint8; links shorter than T_max are
     padded with copies of their last flit (BT-neutral), ``lengths`` keeps
-    the real flit counts.
+    the real flit counts.  When the spec names a wire codec, ``streams``
+    is the *coded* wire image and ``aux_bt`` carries each link's
+    invert-line transitions (all zeros otherwise).
     """
 
     link_ids: tuple[int, ...]
     streams: jax.Array
     lengths: tuple[int, ...]
+    aux_bt: tuple[int, ...] = ()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -130,6 +144,15 @@ class NocReport:
         return sum(s.total_bt for s in self.links)
 
     @property
+    def total_aux_bt(self) -> int:
+        """Fabric-wide invert-line transitions (wire-codec overhead)."""
+        return sum(s.bt_aux for s in self.links)
+
+    @property
+    def gross_bt(self) -> int:
+        return self.total_bt + self.total_aux_bt
+
+    @property
     def total_flit_hops(self) -> int:
         """Flits summed over links — each hop retransmits the payload."""
         return sum(s.num_flits for s in self.links)
@@ -143,8 +166,9 @@ class NocReport:
         return max((h for _, h in self.flow_hops), default=0)
 
     def reduction_vs(self, base: "NocReport") -> float:
-        """Fabric-level BT reduction relative to a baseline run (fraction)."""
-        return 1.0 - self.total_bt / max(base.total_bt, 1e-9)
+        """Fabric-level BT reduction relative to a baseline run (fraction,
+        scored on ``gross_bt`` so coded fabrics are net of overhead)."""
+        return 1.0 - self.gross_bt / max(base.gross_bt, 1e-9)
 
 
 def _validate_flow(flow: TrafficFlow, spec: LinkSpec) -> None:
@@ -243,12 +267,13 @@ def expand_link_streams(
     # links with the same queued-flow composition carry byte-identical
     # streams (every link of a unicast route, every tree link of a
     # multicast) — assemble each distinct queue once
-    assembled: dict[tuple[int, ...], jax.Array] = {}
+    assembled: dict[tuple[int, ...], tuple[jax.Array, int]] = {}
     streams: list[jax.Array] = []
+    aux_bts: list[int] = []
     for lid in link_ids:
         idxs = tuple(segments[lid])
-        stream = assembled.get(idxs)
-        if stream is None:
+        entry = assembled.get(idxs)
+        if entry is None:
             xi = jnp.concatenate([per_flow[i][0] for i in idxs], axis=0)
             wis = [per_flow[i][1] for i in idxs]
             wi = None if wis[0] is None else jnp.concatenate(wis, axis=0)
@@ -259,10 +284,23 @@ def expand_link_streams(
                 wi = None if wi is None else jnp.take(wi, perm, axis=0)
                 order = jnp.take(order, perm, axis=0)
             stream = assemble_stream(xi, wi, spec, order, spec.pack)
-            assembled[idxs] = stream
-        streams.append(stream)
+            aux = 0
+            if spec.codec != "none":
+                # each link's egress encoder codes its own queue; the
+                # batched kernel then measures the coded wire directly
+                from repro.codec.schemes import (
+                    codec_by_name,
+                    invert_line_transitions,
+                )
+
+                coded = codec_by_name(spec.codec).encode(stream)
+                stream = coded.wire
+                aux = int(invert_line_transitions(coded.invert))
+            entry = assembled[idxs] = (stream, aux)
+        streams.append(entry[0])
+        aux_bts.append(entry[1])
     stacked, lengths = stack_link_streams(streams, spec.bytes_per_flit)
-    return LinkStreams(tuple(link_ids), stacked, lengths)
+    return LinkStreams(tuple(link_ids), stacked, lengths, tuple(aux_bts))
 
 
 def stack_link_streams(
@@ -304,6 +342,11 @@ def simulate_noc(
     """
     power = power if power is not None else NocPowerModel()
     ls = expand_link_streams(topo, flows, spec, sort_at=sort_at)
+    extra_wires = 0
+    if spec.codec != "none":
+        from repro.codec.schemes import codec_by_name
+
+        extra_wires = codec_by_name(spec.codec).extra_wires(spec.bytes_per_flit)
     stats: list[LinkStats] = []
     if ls.link_ids:
         bt = np.asarray(
@@ -311,8 +354,8 @@ def simulate_noc(
                 ls.streams, input_lanes=spec.input_lanes, interpret=interpret
             )
         )
-        for (lid, length, (bi, bw)) in zip(
-            ls.link_ids, ls.lengths, bt.astype(int).tolist()
+        for (lid, length, aux, (bi, bw)) in zip(
+            ls.link_ids, ls.lengths, ls.aux_bt, bt.astype(int).tolist()
         ):
             u, v = topo.links[lid]
             stats.append(
@@ -323,7 +366,13 @@ def simulate_noc(
                     num_flits=length,
                     bt_input=bi,
                     bt_weight=bw,
-                    energy_pj=power.hop_energy_pj(bi + bw, length),
+                    # same coded-wire accounting as the point-to-point
+                    # path: invert lines switch and widen this hop too
+                    energy_pj=power.coded_hop_energy_pj(
+                        bi + bw, aux, length,
+                        8 * spec.bytes_per_flit, extra_wires,
+                    ),
+                    bt_aux=aux,
                 )
             )
     flow_hops = tuple(

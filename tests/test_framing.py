@@ -1,0 +1,110 @@
+"""Link framing edge cases (DESIGN.md §1): pack/unpack round-trips,
+single-flit packets, and non-byte-multiple sort-key widths."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import psu_stream
+from repro.kernels.ref import psu_stream_ref
+from repro.link import (
+    LinkSpec,
+    TxPipeline,
+    pack_to_flits,
+    paired_stream,
+    unpack_from_flits,
+)
+
+
+@pytest.mark.parametrize("pack", ["row", "lane"])
+@pytest.mark.parametrize(
+    "shape,lanes",
+    [
+        ((5, 64), 8),
+        ((5, 64), 16),
+        ((7, 16), 16),  # single-flit packets: F = 1
+        ((3, 8), 8),  # single-flit, minimal lanes
+        ((1, 32), 8),  # single packet
+    ],
+)
+def test_pack_unpack_round_trip(pack, shape, lanes):
+    rng = np.random.default_rng(hash((pack, shape, lanes)) % 2**31)
+    v = jnp.asarray(rng.integers(0, 256, shape, dtype=np.uint8))
+    flits = pack_to_flits(v, lanes, pack)
+    assert flits.shape == (shape[0], shape[1] // lanes, lanes)
+    assert (np.asarray(unpack_from_flits(flits, pack)) == np.asarray(v)).all()
+
+
+def test_single_flit_packets_through_tx_pipeline():
+    """F=1 framing: each packet is one flit; 'row' and 'lane' packing
+    coincide and the fused path equals the staged one."""
+    spec = LinkSpec(
+        width_bits=128, flits_per_packet=1, input_lanes=8, weight_lanes=8
+    )
+    assert spec.elems_per_packet == 8
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.integers(0, 256, (12, 8), dtype=np.uint8))
+    w = jnp.asarray(rng.integers(0, 256, (12, 8), dtype=np.uint8))
+    fused = TxPipeline(spec, fused=True).run(x, w)
+    staged = TxPipeline(spec, fused=False).run(x, w)
+    assert fused.stream.shape == (12, 16)
+    assert (np.asarray(fused.stream) == np.asarray(staged.stream)).all()
+    assert int(fused.bt_input) == int(staged.bt_input)
+    assert int(fused.bt_weight) == int(staged.bt_weight)
+    # row/lane packing coincide at F=1
+    row = pack_to_flits(x, 8, "row")
+    lane = pack_to_flits(x, 8, "lane")
+    assert (np.asarray(row) == np.asarray(lane)).all()
+
+
+@pytest.mark.parametrize("width", [4, 5])
+def test_non_byte_multiple_key_widths(width):
+    """Sort keys narrower than a byte (W=4/5): the fused kernel, the ref
+    composition and the staged pipeline agree, and the wire image
+    round-trips through pack/unpack as a per-packet permutation."""
+    rng = np.random.default_rng(width)
+    x = jnp.asarray(rng.integers(0, 2**width, (10, 32), dtype=np.uint8))
+    w = jnp.asarray(rng.integers(0, 2**width, (10, 32), dtype=np.uint8))
+    res = psu_stream(x, w, width=width, input_lanes=8)
+    order, rank, stream, bt_i, bt_w = psu_stream_ref(
+        x, w, width=width, input_lanes=8
+    )
+    assert (np.asarray(res.stream) == np.asarray(stream)).all()
+    assert int(res.bt_input) == int(bt_i)
+
+    spec = LinkSpec(key="acc", width=width)
+    fused = TxPipeline(spec, fused=True).run(x, w)
+    staged = TxPipeline(spec, fused=False).run(x, w)
+    assert int(fused.bt_input) == int(staged.bt_input)
+    assert int(fused.bt_weight) == int(staged.bt_weight)
+
+    # unpacking the input half of the wire recovers each packet's bytes
+    # up to the transmit permutation
+    half = fused.stream[:, :8].reshape(10, 4, 8)
+    back = unpack_from_flits(half, "lane")
+    assert (
+        np.sort(np.asarray(back), axis=-1) == np.sort(np.asarray(x), axis=-1)
+    ).all()
+
+
+def test_paired_stream_round_trips_byte_content():
+    cfg = LinkSpec()
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.integers(0, 256, (6, 32), dtype=np.uint8))
+    w = jnp.asarray(rng.integers(0, 256, (6, 32), dtype=np.uint8))
+    s = paired_stream(x, w, cfg, "acc")
+    # both halves carry exactly the packets' bytes (reordered)
+    halves = np.asarray(s).reshape(6, 4, 16)
+    for side, src in ((halves[:, :, :8], x), (halves[:, :, 8:], w)):
+        back = unpack_from_flits(jnp.asarray(side), "lane")
+        assert (
+            np.sort(np.asarray(back), -1) == np.sort(np.asarray(src), -1)
+        ).all()
+
+
+def test_stream_only_pack_rejected_with_registry_ux():
+    v = jnp.zeros((2, 16), jnp.uint8)
+    with pytest.raises(ValueError, match="stream-only"):
+        pack_to_flits(v, 8, "col")
+    with pytest.raises(ValueError, match="registered pack stages"):
+        unpack_from_flits(jnp.zeros((2, 2, 8), jnp.uint8), "bogus")
