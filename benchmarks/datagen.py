@@ -45,33 +45,67 @@ def im2col(img: np.ndarray, k: int = 5) -> np.ndarray:
     )
 
 
+def _pad_to_packets(stream: np.ndarray, elems: int, lanes: int) -> np.ndarray:
+    """Round a flat byte stream up to whole packets without dropping bytes.
+
+    The final partial packet is completed by cycling the stream's last
+    ``lanes`` bytes — i.e. the period-``lanes`` extension
+    ``padded[o] = padded[o - lanes]``, which is phase-correct at any tail
+    offset: since packet offsets are flit-aligned (``elems`` is a multiple
+    of ``lanes``), every fully-padded flit equals its predecessor and the
+    only boundary transitions left are the final real bytes' own — the
+    repeated-flit convention of the repro.kernels padding/masking contract
+    (under per-packet sorting the tail packet additionally pays its own
+    intra-packet transitions).  Streams already a whole number of packets
+    are returned unchanged.
+    """
+    pad = (-stream.size) % elems
+    if not pad:
+        return stream
+    tail = stream[-min(lanes, stream.size):]
+    return np.concatenate([stream, np.resize(tail, pad)])
+
+
 def conv_streams(n_images: int = 24, kernel: int = 5, elems: int = 64,
-                 seed: int = 42, column_major: bool = False):
-    """(input_packets, weight_packets) for one PE's link (one output channel,
-    matching the paper's platform where the allocation unit feeds each PE its
-    own stream).  Inputs are im2col patches streamed patch-major
+                 seed: int = 42, column_major: bool = False,
+                 channels: int = 6, lanes: int = 16):
+    """(input_packets, weight_packets) for one PE's link of the paper's
+    conv platform.  Inputs are im2col patches streamed patch-major
     (``column_major=False``, the non-optimized order) or position-major
     (``column_major=True`` — the paper's column-major layout: all patches'
     values at kernel position 0, then position 1, ...); weights follow the
-    same traversal of the repeated kernel."""
+    same traversal.
+
+    The weight stream cycles the layer's ``channels`` output-channel
+    kernels across the patch sequence (LeNet: 6 in conv1, 16 in conv2) —
+    the PE allocation's round-robin over output channels.  The pre-fix
+    model broadcast ONE kernel into every packet, which collapsed
+    weight-side ordering gains and under-reduced the overall numbers
+    (DESIGN.md §10's honest-calibration note records the recalibration).
+
+    Streams whose byte count is not a whole number of ``elems`` packets
+    are padded — never truncated — by cycling the last ``lanes``-byte flit
+    into the final packet (see :func:`_pad_to_packets`).
+    """
     rng = np.random.default_rng(seed)
     imgs = synth_images(n_images, seed=seed)
     k2 = kernel * kernel
-    kern = (rng.normal(size=k2) * 60 + 128).clip(0, 255).astype(np.uint8)
+    kerns = (rng.normal(size=(channels, k2)) * 60 + 128).clip(0, 255).astype(
+        np.uint8
+    )
     inps, wgts = [], []
     for im in imgs:
         patches = im2col(im, kernel)  # (P, 25)
-        wmat = np.broadcast_to(kern, patches.shape)
+        wmat = kerns[np.arange(len(patches)) % channels]  # cycle channels
         if column_major:
             inps.append(patches.T.reshape(-1))
             wgts.append(wmat.T.reshape(-1))
         else:
             inps.append(patches.reshape(-1))
             wgts.append(wmat.reshape(-1))
-    inp_stream = np.concatenate(inps)
-    wgt_stream = np.concatenate(wgts)
-    p = inp_stream.size // elems
+    inp_stream = _pad_to_packets(np.concatenate(inps), elems, lanes)
+    wgt_stream = _pad_to_packets(np.concatenate(wgts), elems, lanes)
     return (
-        inp_stream[: p * elems].reshape(p, elems),
-        wgt_stream[: p * elems].reshape(p, elems),
+        inp_stream.reshape(-1, elems),
+        wgt_stream.reshape(-1, elems),
     )

@@ -9,14 +9,20 @@ with `repro.dse` on the measured conv streams:
   * **fronts** — the 3-objective (area x BT-reduction x latency) front and
     the paper's area x BT plane, whose measured knee is the paper's own
     k=4 choice;
-  * **fused vs per-config** — the whole grid's stream measurements come
-    from ONE `bt_count_variants` launch (the variant axis lives inside the
+  * **fused vs per-config** — the grid's stream measurements come from
+    ONE `bt_count_variants` launch (the variant axis lives inside the
     launch) where the per-config baseline pays one `psu_stream`/`bt_count`
     launch per configuration.  Launch counts are read from the traced
     jaxpr, not asserted by hand; wall time is reported for reference only
     (same caveat as `kernel_bench` / `noc_bt`: launches are the claim);
+  * **full multi-axis grid** — a grid mixing a NoC topology and a wire
+    codec still traces to ONE `bt_count_axes` launch (DESIGN.md §12):
+    every workload stream, every mesh route link and every (ordering,
+    codec) config are axes of the same launch
+    (`repro.dse.grid_launch_count` reads it from the jaxpr; the per-point
+    path pays one chain per point x link);
   * **NoC point** — one APP k=4 design evaluated per link on a 4x4 mesh
-    through `repro.noc` (its own batched per-link launch);
+    (the route links ride the same launch);
   * **artifact** — `repro.dse.report` writes the machine-readable JSON
     front (`REPRO_DSE_ARTIFACT` overrides the path) for the bench
     trajectory; CI uploads it with the smoke CSV.
@@ -25,8 +31,11 @@ Paper reference points ride along in the derived strings (Table I / Fig. 5
 / abstract): APP k=4 = 35.4 % area reduction at 19.50 % overall BT
 reduction (20.42 % precise).  The conv-traffic model reproduces the paper's
 input-side reductions (the stream the PSU actually orders, table1_bt's
-calibration target); its weight-stream model under-reduces, so overall
-reductions land below the paper's — reported side by side, as in fig7.
+calibration target); the weight stream cycles the layer's output-channel
+kernels (DESIGN.md §10's recalibration: overall ACC 14.2 % / APP 12.7 %
+measured vs the paper's 20.42 % / 19.50 % — the residual gap is the
+synthetic kernels' near-uniform byte distribution) — reported side by
+side, as in fig7, never substituted.
 """
 
 from __future__ import annotations
@@ -43,6 +52,7 @@ from repro.dse import (
     DesignPoint,
     Workload,
     evaluate_grid,
+    grid_launch_count,
     k_sweep,
     knee_point,
     pareto_front,
@@ -134,8 +144,8 @@ def run(
             f"app-k4 area_red={app4.area_reduction * 100:.1f}% "
             f"(paper {PAPER['app_area_red']}%) "
             f"bt_red={app4.bt_reduction * 100:.2f}% "
-            f"(paper overall {PAPER['app_bt_red']}%; weight-stream model "
-            f"under-reduces, see table1_bt) on_front={int(app4 in front)}",
+            f"(paper overall {PAPER['app_bt_red']}%; multi-channel weight "
+            f"model, DESIGN.md §10 recalibration) on_front={int(app4 in front)}",
         ))
 
     # --- fused vs per-config: 1 launch vs |grid| (traced jaxpr) ---
@@ -179,13 +189,29 @@ def run(
 
     # --- one NoC design point: per-link evaluation on a 4x4 mesh ---
     noc_pt = DesignPoint(ordering="app", k=4, topology="mesh4x4")
-    noc_eval = evaluate_grid(
-        (noc_pt,), Workload("conv", (workload.streams[0],), lanes=_LANES)
-    )[0]
+    noc_workload = Workload("conv", (workload.streams[0],), lanes=_LANES)
+    noc_eval = evaluate_grid((noc_pt,), noc_workload)[0]
     rows.append((
         f"dse/{noc_eval.label}", 0.0,
         f"fabric bt_red={noc_eval.noc_bt_reduction * 100:.2f}% over "
-        f"{noc_eval.noc_active_links} links (source-sorted, repro.noc)",
+        f"{noc_eval.noc_active_links} links (source-sorted, route links "
+        f"ride the grid launch)",
+    ))
+
+    # --- the FULL multi-axis grid (streams + NoC links + codec axis)
+    # still traces to ONE pallas launch (DESIGN.md §12) ---
+    axis_pts = tuple(k_sweep(n=n0, width=8, ks=tuple(ks))) + (
+        DesignPoint(n=n0, ordering="acc", k=None, codec="bus_invert4"),
+        DesignPoint(n=n0, ordering="app", k=4, topology="mesh4x4"),
+    )
+    grid_launches = grid_launch_count(axis_pts, workload)
+    n_links = len(workload.streams) + (noc_eval.noc_active_links or 0)
+    rows.append((
+        "dse/grid_launches", 0.0,
+        f"{len(axis_pts)} points over {n_links} links (streams + mesh4x4 "
+        f"route, identical route queues deduped) x orderings x codecs -> "
+        f"{grid_launches} pallas launch(es) in the traced jaxpr (per-point "
+        f"path: one sort/codec/BT chain per point x link)",
     ))
 
     # --- machine-readable artifact for the bench trajectory ---

@@ -11,10 +11,12 @@ from repro.core import bitonic_area, csn_area, psu_area
 
 PAPER = {("app", 25): 2193.0, ("app", 49): 6928.0, "overall_reduction": 35.4}
 
+TINY_KWARGS = {"ns": (25,)}  # CI smoke (REPRO_BENCH_TINY=1): one sort width
 
-def run() -> list[tuple[str, float, str]]:
+
+def run(ns: tuple[int, ...] = (25, 49)) -> list[tuple[str, float, str]]:
     rows = []
-    for n in (25, 49):
+    for n in ns:
         designs = {
             "bitonic": bitonic_area(n),
             "csn": csn_area(n),
@@ -47,7 +49,7 @@ def run() -> list[tuple[str, float, str]]:
     # timing model at the paper's 500 MHz target (latency scaling argument)
     from repro.core import bitonic_timing, psu_timing
 
-    for n in (25, 49):
+    for n in ns:
         acc, app, bit = psu_timing(n), psu_timing(n, k=4), bitonic_timing(n)
         rows.append((
             f"fig5/timing/N{n}", 0.0,

@@ -20,10 +20,12 @@ PAPER = {
 }
 LINK_SHARE = 4.98 / 18.27  # PE-level share of link-related power (Fig. 6)
 
+TINY_KWARGS = {"conv_images": 2}  # CI smoke (REPRO_BENCH_TINY=1)
 
-def run() -> list[tuple[str, float, str]]:
+
+def run(conv_images: int = 24) -> list[tuple[str, float, str]]:
     model = LinkPowerModel()
-    inp, wgt = conv_streams()
+    inp, wgt = conv_streams(n_images=conv_images)
     base = _measure_separate(inp, "none") + _measure_separate(wgt, "none")
     rows = []
     for strat in ("acc", "app"):

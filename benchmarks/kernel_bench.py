@@ -17,7 +17,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels import bt_count, psu_sort, psu_stream, quantize_egress
+from repro.kernels import (
+    bt_count,
+    pallas_launch_count,
+    psu_sort,
+    psu_stream,
+    quantize_egress,
+)
 
 
 def _time(fn, *args, iters=3):
@@ -30,32 +36,10 @@ def _time(fn, *args, iters=3):
 
 def count_pallas_launches(fn, *args) -> int:
     """Number of ``pallas_call`` equations in the traced jaxpr of ``fn``
-    (recursing through pjit/scan/etc. sub-jaxprs)."""
-    try:  # jaxpr types' public home since jax 0.4.33
-        from jax.extend import core as jcore
-    except ImportError:  # older releases
-        from jax import core as jcore
-
-    def walk(jaxpr) -> int:
-        n = 0
-        for eqn in jaxpr.eqns:
-            if eqn.primitive.name == "pallas_call":
-                n += 1
-            for v in eqn.params.values():
-                for sub in _subjaxprs(v):
-                    n += walk(sub)
-        return n
-
-    def _subjaxprs(v):
-        if isinstance(v, jcore.ClosedJaxpr):
-            yield v.jaxpr
-        elif isinstance(v, jcore.Jaxpr):
-            yield v
-        elif isinstance(v, (tuple, list)):
-            for item in v:
-                yield from _subjaxprs(item)
-
-    return walk(jax.make_jaxpr(fn)(*args).jaxpr)
+    (recursing through pjit/scan/etc. sub-jaxprs).  The walker's one home
+    is ``repro.kernels.pallas_launch_count``; this alias keeps the
+    historical benchmark import path."""
+    return pallas_launch_count(fn, *args)
 
 
 def _tx_unfused(x, w):
@@ -78,10 +62,18 @@ def _tx_fused(x, w):
     return res.bt_input + res.bt_weight
 
 
-def run() -> list[tuple[str, float, str]]:
+TINY_KWARGS = {"packets": 128, "bt_flits": 2048, "quant_elems": 1 << 14}
+# CI smoke shapes (REPRO_BENCH_TINY=1): same code paths, minutes -> seconds
+
+
+def run(
+    packets: int = 1024,
+    bt_flits: int = 16384,
+    quant_elems: int = 1 << 20,
+) -> list[tuple[str, float, str]]:
     rng = np.random.default_rng(0)
     rows = []
-    for p, n in [(256, 25), (1024, 64)]:
+    for p, n in [(min(256, packets), 25), (packets, 64)]:
         x = jnp.asarray(rng.integers(0, 256, (p, n), dtype=np.uint8))
         us = _time(lambda v: psu_sort(v)[0], x)
         rows.append((f"kernel/psu/P{p}xN{n}", us, f"{us / p:.2f}us/packet"))
@@ -89,7 +81,7 @@ def run() -> list[tuple[str, float, str]]:
         rows.append((f"kernel/psu_app/P{p}xN{n}", us, f"{us / p:.2f}us/packet"))
 
     # fused vs unfused TX pipeline (ordered-BT measurement path)
-    p, n = 1024, 64
+    p, n = packets, 64
     x = jnp.asarray(rng.integers(0, 256, (p, n), dtype=np.uint8))
     w = jnp.asarray(rng.integers(0, 256, (p, n), dtype=np.uint8))
     blocks = p // 64
@@ -108,10 +100,14 @@ def run() -> list[tuple[str, float, str]]:
         f"wall {us_u / max(us_f, 1e-9):.2f}x vs unfused on this backend)",
     ))
 
-    s = jnp.asarray(rng.integers(0, 256, (16384, 16), dtype=np.uint8))
+    s = jnp.asarray(rng.integers(0, 256, (bt_flits, 16), dtype=np.uint8))
     us = _time(bt_count, s)
-    rows.append(("kernel/bt_count/16k_flits", us, f"{16384 * 16 / us:.1f}MB/s"))
-    g = jnp.asarray(rng.normal(size=(1 << 20,)).astype(np.float32))
+    rows.append((
+        f"kernel/bt_count/{bt_flits}_flits", us, f"{bt_flits * 16 / us:.1f}MB/s"
+    ))
+    g = jnp.asarray(rng.normal(size=(quant_elems,)).astype(np.float32))
     us = _time(lambda v: quantize_egress(v)[0], g)
-    rows.append(("kernel/quantize/1M", us, f"{(1 << 20) * 4 / us:.1f}MB/s"))
+    rows.append((
+        f"kernel/quantize/{quant_elems}", us, f"{quant_elems * 4 / us:.1f}MB/s"
+    ))
     return rows

@@ -32,6 +32,8 @@ KERNEL = 5
 N_CH = 6
 ELEMS, LANES = 64, 16  # validated Table-I framing on the input link
 
+TINY_KWARGS = {"n_images": 1}  # CI smoke (REPRO_BENCH_TINY=1)
+
 
 def conv_pool_reference(img: np.ndarray, kernels: np.ndarray):
     patches = im2col(img, KERNEL).astype(np.int64)  # (P, 25)

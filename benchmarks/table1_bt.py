@@ -32,6 +32,9 @@ PAPER = {
 # input-side BT/flit from Table I (the stream the PSU actually orders);
 # the weight-stream generation is underspecified in the paper (see
 # EXPERIMENTS.md §Table I), so the input side is the calibration target.
+# The conv weight stream cycles the layer's 6 output-channel kernels
+# (DESIGN.md §10 recalibration: overall ACC 14.2 % / APP 12.7 % vs the
+# paper's 20.42 % / 19.50 % — reported side by side, never substituted).
 PAPER_INPUT = {"none": 31.035, "column_major": 26.004, "acc": 22.333, "app": 22.887}
 
 STRATS = ("none", "column_major", "acc", "app")

@@ -16,7 +16,7 @@ they name key/encode/pack stages.  Composition semantics (DESIGN.md §11):
     must sit, because their wire image depends on flit order.
 
 ``kernel_config`` maps a spec's (ordering, codec) selection onto the
-static :class:`~repro.kernels.bt_codecs.CodecVariant` the single-launch
+static :class:`~repro.kernels.CodecVariant` the single-launch
 measurement kernel consumes.
 """
 

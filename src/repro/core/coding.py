@@ -3,7 +3,7 @@ codecs (DESIGN.md §11).
 
 These are the shared primitives of the codec subsystem: ``repro.codec``
 builds its stateless encode/decode pairs from them, and the Pallas codec
-kernel (``repro.kernels.bt_codecs``) applies the same maps inside one
+kernel (``repro.kernels.axes``) applies the same maps inside one
 launch, so the two paths cannot drift.  Every function operates on the low
 8 bits of any integer array and returns the input dtype (uint8 streams
 outside kernels, int32 lanes inside them).
@@ -34,7 +34,7 @@ def bus_invert_partitions(lanes: int, partition: int | None) -> tuple[int, int]:
 
     The one home of the partition contract — the codec encoders
     (``repro.codec.schemes``), the single-launch kernel
-    (``repro.kernels.bt_codecs``) and the area model
+    (``repro.kernels.axes``) and the area model
     (``repro.core.area.codec_area``) all validate against this, so they
     cannot drift.  ``partition=None`` means one invert line over the whole
     flit; otherwise it must divide the flit's lane count.

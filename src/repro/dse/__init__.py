@@ -1,14 +1,15 @@
 # The design-space exploration subsystem (DESIGN.md §10): the paper
 # evaluates two points (ACC, APP k=4); this layer maps the whole space.
 #   space.py    - DesignPoint (family/N/W/k/ordering/topology) + grids
-#   evaluate.py - grid x workload -> joined BT/area/timing/power records,
-#                 all stream variants measured by ONE batched Pallas launch
-#                 (repro.kernels.bt_count_variants); optional per-link NoC
-#                 evaluation via repro.noc
+#   evaluate.py - grid x workload -> joined BT/area/timing/power records;
+#                 every stream, NoC route link and (ordering, codec) config
+#                 rides ONE multi-axis Pallas launch per key width
+#                 (repro.kernels.bt_count_axes, DESIGN.md §12);
+#                 grid_launch_count reads the collapse from the traced jaxpr
 #   pareto.py   - dominance filtering + knee selection over
 #                 area x BT-reduction x latency
 #   report.py   - JSON / CSV artifacts for the bench trajectory
-from .evaluate import Evaluation, Workload, evaluate_grid
+from .evaluate import Evaluation, Workload, evaluate_grid, grid_launch_count
 from .pareto import (
     AREA_BT_OBJECTIVES,
     DEFAULT_OBJECTIVES,
@@ -38,6 +39,7 @@ __all__ = [
     "Workload",
     "Evaluation",
     "evaluate_grid",
+    "grid_launch_count",
     "parse_topology",
     "Objective",
     "DEFAULT_OBJECTIVES",

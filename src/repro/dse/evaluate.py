@@ -3,15 +3,17 @@
 For every :class:`~repro.dse.space.DesignPoint` of a grid, one
 :class:`Evaluation` joins the repo's models end to end:
 
-  * **BT** — measured on the workload's actual flit streams.  All points'
-    (ordering, codec) configs are measured by ONE batched Pallas launch
-    per (stream, key width) via ``repro.kernels.bt_count_codecs`` — the
-    config axis lives inside the launch, so a grid of G configurations
-    costs 1 launch where the per-config path costs G (the same claim
-    structure as ``bt_count_links`` for the NoC; demonstrated from the
-    traced jaxpr in ``benchmarks/dse_sweep.py`` / ``codec_bt.py``).
-    Coded points' invert-line transitions count against them, so their BT
-    reductions are net of wire overhead (DESIGN.md §11).
+  * **BT** — measured on the workload's actual flit streams by ONE
+    multi-axis Pallas launch per key width (``repro.kernels.bt_count_axes``,
+    DESIGN.md §12): every workload stream AND every distinct NoC fabric
+    queue rides the launch's link axis (jagged links masked in-kernel),
+    every (ordering, codec) config its static variant x codec axes.  A
+    grid of G configurations over S streams plus an R-link fabric costs
+    ONE launch where the per-point path costs G x (S + R)
+    (:func:`grid_launch_count` reads the collapse from the traced jaxpr;
+    ``benchmarks/dse_sweep.py`` reports it).  Coded points' invert-line
+    transitions count against them, so their BT reductions are net of
+    wire overhead (DESIGN.md §11).
   * **Area / timing** — the calibrated closed-form models of
     ``repro.core.area`` (DESIGN.md §6), per family/N/W/k, plus the codec
     encoder area folded into ``PSUArea.codec`` for coded points.
@@ -19,10 +21,16 @@ For every :class:`~repro.dse.space.DesignPoint` of a grid, one
     reduction to link-related power reduction and absolute energy
     (``coded_link_energy_pj`` charges invert lines and the widened static
     floor).
-  * **NoC (optional)** — points with a ``topology`` are additionally run
-    through ``repro.noc.simulate_noc`` (per-link batched BT kernel) as a
-    source-sorted fabric carrying the workload across the topology
-    diameter, reported as fabric-level BT reduction vs the unsorted fabric.
+  * **NoC (optional)** — points with a ``topology`` are additionally
+    scored per link on a source-sorted fabric carrying the workload from
+    router 0 to the farthest router: the fabric's link queue is one more
+    row of the SAME multi-axis launch, scaled by the route length (every
+    route link retransmits the byte-identical queue — the same
+    distinct-queue dedup ``noc.simulate`` applies; source sorting is a
+    per-packet ordering, so the in-kernel reorder reproduces
+    ``repro.noc.simulate_noc``'s wire images bit-for-bit, asserted in
+    ``tests/test_axes.py``), reported as fabric-level BT reduction vs the
+    unsorted fabric.
 
 The unsorted 'none' variant is always measured as the reduction baseline;
 area reductions are vs the precise ACC-PSU at the same (N, W), matching the
@@ -39,12 +47,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.area import PSUArea, PSUTiming, codec_area, psu_area
-from repro.kernels import CodecVariant, bt_count_codecs
-from repro.link import LinkPowerModel, LinkSpec
+from repro.kernels import (
+    CodecVariant,
+    bt_count_axes,
+    default_interpret,
+    pallas_launch_count,
+)
+from repro.link import LinkPowerModel
 
 from .space import DesignPoint, parse_topology
 
-__all__ = ["Workload", "Evaluation", "evaluate_grid"]
+__all__ = ["Workload", "Evaluation", "evaluate_grid", "grid_launch_count"]
 
 _BASELINE = CodecVariant("none", None, False, "none", None)
 
@@ -137,44 +150,158 @@ class Evaluation:
         return self.timing.sort_time_ns(self.point.n)
 
 
-def _noc_spec(point: DesignPoint, workload: Workload) -> LinkSpec:
-    """Input-only LinkSpec carrying the workload packets under the point's
-    ordering and codec (a LinkSpec means the same thing on a NoC link,
-    DESIGN.md §9/§11)."""
-    lanes = workload.lanes
-    return LinkSpec(
-        width_bits=8 * lanes,
-        flits_per_packet=workload.elems_per_packet // lanes,
-        input_lanes=lanes,
-        weight_lanes=0,
-        key=point.ordering,
-        width=point.width,
-        k=point.k if point.k is not None else 4,
-        descending=point.descending,
-        codec=point.codec if point.codec is not None else "none",
-    )
+def _configs_by_width(
+    points: tuple[DesignPoint, ...],
+) -> dict[int, tuple[CodecVariant, ...]]:
+    """Unique (ordering, codec) configs per key width, baseline first."""
+    by_width: dict[int, list[CodecVariant]] = {}
+    for pt in points:
+        vs = by_width.setdefault(pt.width, [_BASELINE])
+        if pt.codec_variant not in vs:
+            vs.append(pt.codec_variant)
+    return {w: tuple(vs) for w, vs in by_width.items()}
 
 
-def _noc_total_bt(
-    point: DesignPoint, workload: Workload, interpret: bool | None
-) -> tuple[int, int]:
-    """(fabric total BT, active links) of the workload crossing the fabric
-    from router 0 to the farthest router, sorted at the source."""
-    from repro.noc import TrafficFlow, hop_count, simulate_noc
+def _grid_links(
+    points: tuple[DesignPoint, ...], workload: Workload
+) -> tuple[list[jax.Array], dict[str, tuple[int, int]]]:
+    """The measurement links of one grid launch.
 
-    topo = parse_topology(point.topology)
-    far = max(
-        range(topo.num_routers), key=lambda r: hop_count(topo, 0, r)
+    The first ``len(workload.streams)`` rows are the point-to-point
+    streams (measured independently, the Table-I setup).  Then, per
+    distinct topology named by any point, ONE row carrying the
+    source-sorted fabric's link queue (all the workload's packets, router
+    0 toward the farthest router): every link of the unicast route
+    retransmits the byte-identical queue, so — exactly like
+    ``noc.simulate``'s distinct-queue dedup — the queue is measured once
+    and the fold scales it by the route length.  Returns
+    (payloads, {topology: (row index, link count)}).
+    """
+    from repro.noc import hop_count  # deferred: keep dse importable alone
+
+    streams = [jnp.asarray(s) for s in workload.streams]
+    payloads = list(streams)
+    topo_rows: dict[str, tuple[int, int]] = {}
+    names = dict.fromkeys(
+        pt.topology for pt in points if pt.topology is not None
     )
-    flows = [
-        TrafficFlow(f"{workload.name}/{i}", 0, (far,), jnp.asarray(s))
-        for i, s in enumerate(workload.streams)
-    ]
-    rep = simulate_noc(
-        topo, flows, _noc_spec(point, workload), sort_at="source",
-        interpret=interpret, name=point.label,
+    for name in names:
+        topo = parse_topology(name)
+        far = max(range(topo.num_routers), key=lambda r: hop_count(topo, 0, r))
+        nlinks = hop_count(topo, 0, far)
+        q = streams[0] if len(streams) == 1 else jnp.concatenate(streams, axis=0)
+        topo_rows[name] = (len(payloads), nlinks)
+        payloads.append(q)
+    return payloads, topo_rows
+
+
+def _stack_links(
+    payloads: Sequence[jax.Array],
+) -> tuple[jax.Array, tuple[int, ...]]:
+    """Stack jagged (P_l, N) packet queues to (L, P_max, N) + valid counts
+    (zero-padded; the kernel masks past each link's valid count)."""
+    valid = tuple(int(s.shape[0]) for s in payloads)
+    pmax = max(valid)
+    stacked = jnp.stack(
+        [
+            s if s.shape[0] == pmax
+            else jnp.pad(s, ((0, pmax - s.shape[0]), (0, 0)))
+            for s in payloads
+        ]
     )
-    return rep.gross_bt, rep.active_links
+    return stacked, valid
+
+
+def _measure_grid(
+    points: tuple[DesignPoint, ...],
+    workload: Workload,
+    *,
+    interpret: bool | None,
+    block_packets: int,
+) -> tuple[
+    dict[tuple[int, CodecVariant], tuple[int, int]],
+    dict[tuple[int, str, CodecVariant], int],
+    dict[str, int],
+]:
+    """Run the grid's single-launch-per-width measurement.
+
+    Returns (bt_tab, noc_tab, topo_links): point-to-point (data BT, aux
+    BT) per (width, config), fabric gross BT per (width, topology,
+    config), and active link counts per topology.
+    """
+    configs_by_width = _configs_by_width(points)
+    payloads, topo_rows = _grid_links(points, workload)
+    stacked, valid = _stack_links(payloads)
+    n_p2p = len(workload.streams)
+    bt_tab: dict[tuple[int, CodecVariant], tuple[int, int]] = {}
+    noc_tab: dict[tuple[int, str, CodecVariant], int] = {}
+    for width in sorted(configs_by_width):
+        vs = configs_by_width[width]
+        out = np.asarray(
+            bt_count_axes(
+                stacked,
+                None,
+                valid=valid,
+                configs=vs,
+                width=width,
+                input_lanes=workload.lanes,
+                block_packets=block_packets,
+                interpret=interpret,
+            ),
+            dtype=np.int64,
+        )  # (L, C, 3)
+        for ci, v in enumerate(vs):
+            p2p = out[:n_p2p, ci]
+            bt_tab[(width, v)] = (
+                int(p2p[:, :2].sum()),
+                int(p2p[:, 2].sum()),
+            )
+            for name, (row, nlinks) in topo_rows.items():
+                # every route link retransmits the identical queue
+                noc_tab[(width, name, v)] = nlinks * int(out[row, ci].sum())
+    return bt_tab, noc_tab, {n: r[1] for n, r in topo_rows.items()}
+
+
+def grid_launch_count(
+    points: Sequence[DesignPoint],
+    workload: Workload,
+    *,
+    interpret: bool | None = None,
+    block_packets: int = 64,
+) -> int:
+    """``pallas_call`` equations in the traced jaxpr of the WHOLE grid
+    measurement — every stream, every NoC route link, every (ordering,
+    codec) config.  One key width traces to exactly 1 (the DESIGN.md §12
+    claim, asserted in ``tests/test_axes.py`` and reported by
+    ``benchmarks/dse_sweep.py``); mixed widths add one launch per width
+    (the popcount mask is per width).
+    """
+    points = tuple(points)
+    if not points:
+        return 0
+    _validate_workload(workload)
+    if interpret is None:
+        interpret = default_interpret()
+    configs_by_width = _configs_by_width(points)
+    payloads, _ = _grid_links(points, workload)
+    stacked, valid = _stack_links(payloads)
+
+    def measure(arr):
+        return tuple(
+            bt_count_axes(
+                arr,
+                None,
+                valid=valid,
+                configs=configs_by_width[w],
+                width=w,
+                input_lanes=workload.lanes,
+                block_packets=block_packets,
+                interpret=interpret,
+            )
+            for w in sorted(configs_by_width)
+        )
+
+    return pallas_launch_count(measure, stacked)
 
 
 def evaluate_grid(
@@ -188,8 +315,10 @@ def evaluate_grid(
     """Evaluate every design point of a grid against one workload.
 
     Points sharing a stream variant (e.g. the comparator families, which
-    sort exactly like ACC) share one measurement; distinct key widths get
-    separate launches (the popcount mask is per width).
+    sort exactly like ACC) share one measurement; all streams, NoC route
+    links and (ordering, codec) configs ride ONE multi-axis launch, with
+    distinct key widths split into one launch per width (the popcount
+    mask is per width).
     """
     points = tuple(points)
     if not points:
@@ -198,36 +327,9 @@ def evaluate_grid(
     power = power if power is not None else LinkPowerModel()
     lanes = workload.lanes
 
-    # --- unique (ordering, codec) configs per key width (+ baseline) ---
-    configs_by_width: dict[int, list[CodecVariant]] = {}
-    for pt in points:
-        vs = configs_by_width.setdefault(pt.width, [_BASELINE])
-        if pt.codec_variant not in vs:
-            vs.append(pt.codec_variant)
-
-    # --- measure: ONE batched launch per (stream, width) ---
-    bt_tab: dict[tuple[int, CodecVariant], tuple[int, int]] = {}
-    for width in sorted(configs_by_width):
-        vs = tuple(configs_by_width[width])
-        totals = np.zeros((len(vs), 3), dtype=np.int64)
-        for s in workload.streams:
-            totals += np.asarray(
-                bt_count_codecs(
-                    jnp.asarray(s),
-                    None,
-                    configs=vs,
-                    width=width,
-                    input_lanes=lanes,
-                    block_packets=block_packets,
-                    interpret=interpret,
-                ),
-                dtype=np.int64,
-            )
-        for v, (bi, bw, aux) in zip(vs, totals.tolist()):
-            bt_tab[(width, v)] = (int(bi) + int(bw), int(aux))
-
-    # --- NoC runs (points with a topology), baseline cached per fabric ---
-    noc_base: dict[tuple[str, int], int] = {}
+    bt_tab, noc_tab, topo_links = _measure_grid(
+        points, workload, interpret=interpret, block_packets=block_packets
+    )
     num_flits = workload.num_flits
 
     evals: list[Evaluation] = []
@@ -252,15 +354,10 @@ def evaluate_grid(
         acc_total = psu_area(pt.n, pt.width).total
         noc_red = noc_links = None
         if pt.topology is not None:
-            key = (pt.topology, pt.width)
-            if key not in noc_base:
-                base_pt = dataclasses.replace(
-                    pt, family="psu", ordering="none", k=None,
-                    descending=False, codec=None,
-                )
-                noc_base[key], _ = _noc_total_bt(base_pt, workload, interpret)
-            bt_fabric, noc_links = _noc_total_bt(pt, workload, interpret)
-            noc_red = 1.0 - bt_fabric / max(noc_base[key], 1)
+            gross = noc_tab[(pt.width, pt.topology, pt.codec_variant)]
+            base = noc_tab[(pt.width, pt.topology, _BASELINE)]
+            noc_red = 1.0 - gross / max(base, 1)
+            noc_links = topo_links[pt.topology]
         evals.append(
             Evaluation(
                 point=pt,

@@ -1,28 +1,29 @@
 # The paper's compute hot-spot IS a sorting circuit, so the kernels here are
 # the paper's contribution itself, TPU-native (DESIGN.md §3):
-#   psu.py        - popcount-sorting unit (ACC/APP), the Fig. 1 dataflow
-#   psu_stream.py - fused TX pipeline: sort -> reorder -> pack -> BT count
-#                   in one launch (the repro.link hot path, DESIGN.md §3.2)
-#   btcount.py    - bit-transition counting over flit streams (the metric)
-#   bt_links.py   - batched per-link BT over a whole NoC's streams in one
-#                   launch (the repro.noc hot path, DESIGN.md §9)
-#   bt_variants.py- multi-variant ordered BT: a whole design grid's stream
-#                   measurements in one launch (the repro.dse hot path,
-#                   DESIGN.md §10)
-#   bt_codecs.py  - multi-codec x multi-ordering coded BT: the whole
-#                   ordering-vs-coding comparison grid in one launch (the
-#                   repro.codec hot path, DESIGN.md §11)
-#   quantize.py   - int8 egress quantizer for the compressed all-reduce path
-# ops.py holds the jit'd wrappers, ref.py the pure-jnp oracles.
+#   psu.py      - popcount-sorting unit (ACC/APP), the Fig. 1 dataflow
+#   axes.py     - the ONE multi-axis BT measurement core (DESIGN.md §12):
+#                 link axis on the grid, variant (ordering) and codec axes
+#                 static inside the launch, one in-kernel masking convention.
+#                 The four old entry points — the fused TX pipeline
+#                 (psu_stream), the per-link NoC batch (bt_count_links), the
+#                 design-grid batch (bt_count_variants) and the codec x
+#                 ordering batch (bt_count_codecs) — are thin configurations
+#                 of this kernel.
+#   btcount.py  - bit-transition counting over one flit stream (the metric)
+#   quantize.py - int8 egress quantizer for the compressed all-reduce path
+# ops.py holds the jit'd wrappers (padding, inter-block fold, interpret
+# switch), ref.py the pure-jnp oracles.
 from .ops import (
     CodecVariant,
     PsuStreamResult,
     Variant,
     bt_count,
+    bt_count_axes,
     bt_count_codecs,
     bt_count_links,
     bt_count_variants,
     default_interpret,
+    pallas_launch_count,
     psu_reorder,
     psu_sort,
     psu_stream,
@@ -35,6 +36,7 @@ __all__ = [
     "psu_stream",
     "PsuStreamResult",
     "bt_count",
+    "bt_count_axes",
     "bt_count_links",
     "bt_count_variants",
     "bt_count_codecs",
@@ -42,4 +44,5 @@ __all__ = [
     "CodecVariant",
     "quantize_egress",
     "default_interpret",
+    "pallas_launch_count",
 ]

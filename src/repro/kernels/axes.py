@@ -1,0 +1,526 @@
+"""Pallas TPU kernel: the ONE multi-axis BT measurement core.
+
+Four near-duplicate kernels used to live in this package — ``psu_stream``
+(fused TX pipeline), ``bt_links`` (per-link NoC batch), ``bt_variants``
+(design-grid variant batch) and ``bt_codecs`` (codec x ordering batch) —
+each reimplementing popcount -> bucket -> rank -> permutation-reorder ->
+flit-pack -> BT with its own padding convention.  This module replaces all
+four with one kernel whose launch carries three orthogonal axes:
+
+  * **link** — grid dimension 0: each grid row measures one independent
+    stream (a NoC link, a workload stream, a point-to-point wire).  Links
+    may be jagged: a ``valid`` vector carries each link's real packet
+    count and everything past it is masked *inside* the kernel.
+  * **variant** (ordering) — static, unrolled at trace time: 'none' /
+    'column_major' / 'acc' / 'app'(k) x direction.  One popcount pass per
+    block is shared by every bucketing; one permutation-matrix reorder is
+    shared by every config naming the same ordering.
+  * **codec** — static, unrolled at trace time: 'none' / 'gray' /
+    'sign_magnitude' / 'transition' / 'bus_invert'(partition), applied to
+    the assembled wire per config (DESIGN.md §11/§12).
+
+One unified padding/masking convention (DESIGN.md §12): the wrapper pads
+the packet axis to a block multiple with zero packets and the link axis
+with zero links; the kernel masks every flit boundary at or past each
+link's ``valid`` row count, so padded flits contribute ZERO data-side BT
+**and zero aux (invert-line) BT** — in particular a bus-invert decision is
+never evaluated on a padded flit (the old repeated-flit convention was
+BT-neutral for data wires but could flip a coded link's invert line).
+
+Cross-block state is the same partial/edge split as before, now per link:
+each (link, block) emits per-config BT partials over its block-internal
+valid boundaries plus first/last-valid edge flits (and bus-invert branch
+states), from which the ``ops.py`` wrapper folds the O(G) inter-block
+carry per link in plain jnp — no extra kernel launch.
+
+The fused TX pipeline is this same kernel with ``emit_stream=True`` (one
+link, one config): the permutation-matrix contraction then also yields
+``order`` (permuted iota), ``rank`` and the packed wire stream, exactly as
+the old ``psu_stream`` kernel did (DESIGN.md §3.2).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from repro.core.coding import (
+    bus_invert_partitions as _partitions,
+    gray_encode_bytes,
+    sign_magnitude_encode_bytes,
+)
+
+from .psu import _popcount_bits, _rank_from_keys
+
+__all__ = [
+    "Variant",
+    "VARIANT_KEYS",
+    "validate_variants",
+    "CodecVariant",
+    "CODEC_SCHEMES",
+    "validate_codec_variants",
+    "max_partitions",
+    "bt_axes_pallas",
+]
+
+VARIANT_KEYS = ("none", "column_major", "acc", "app")
+
+CODEC_SCHEMES = ("none", "gray", "sign_magnitude", "transition", "bus_invert")
+
+
+class Variant(NamedTuple):
+    """One measured ordering configuration of the multi-axis kernel.
+
+    ``key`` is a packet-granularity ordering ('none' | 'column_major' |
+    'acc' | 'app'); ``k`` is the APP bucket count (None for every other
+    key); ``descending`` flips the sort direction (ACC/APP only).
+    """
+
+    key: str = "acc"
+    k: int | None = None
+    descending: bool = False
+
+
+class CodecVariant(NamedTuple):
+    """One measured (ordering, codec) configuration of the multi-axis
+    kernel.
+
+    ``key`` / ``k`` / ``descending`` are the ordering axes of
+    :class:`Variant`; ``codec`` is a static scheme id from
+    ``CODEC_SCHEMES``; ``partition`` is the bus-invert group width in lanes
+    (None = one invert line over the whole flit; meaningless otherwise).
+    """
+
+    key: str = "acc"
+    k: int | None = None
+    descending: bool = False
+    codec: str = "none"
+    partition: int | None = None
+
+    @property
+    def ordering(self) -> Variant:
+        return Variant(self.key, self.k, self.descending)
+
+
+def validate_variants(
+    variants: tuple[Variant, ...], width: int
+) -> tuple[Variant, ...]:
+    """Check a static variant tuple against the kernel's contract."""
+    if not variants:
+        raise ValueError("need at least one variant")
+    out = []
+    for v in variants:
+        v = Variant(*v)
+        if v.key not in VARIANT_KEYS:
+            raise ValueError(
+                f"unknown variant key {v.key!r}; choose from {VARIANT_KEYS}"
+            )
+        if v.key == "app":
+            if v.k is None or not 1 <= v.k <= width + 1:
+                raise ValueError(
+                    f"variant {v}: 'app' needs k in [1, {width + 1}]"
+                )
+        elif v.k is not None:
+            raise ValueError(f"variant {v}: k is only meaningful for 'app'")
+        if v.descending and v.key not in ("acc", "app"):
+            raise ValueError(
+                f"variant {v}: descending applies to sorted keys only"
+            )
+        out.append(v)
+    return tuple(out)
+
+
+def validate_codec_variants(
+    configs: tuple[CodecVariant, ...], width: int, lanes: int
+) -> tuple[CodecVariant, ...]:
+    """Check a static config tuple against the kernel's contract."""
+    if not configs:
+        raise ValueError("need at least one codec config")
+    out = []
+    for cfg in configs:
+        cfg = CodecVariant(*cfg)
+        validate_variants((cfg.ordering,), width)
+        if cfg.codec not in CODEC_SCHEMES:
+            raise ValueError(
+                f"config {cfg}: unknown codec scheme {cfg.codec!r}; "
+                f"choose from {CODEC_SCHEMES}"
+            )
+        if cfg.codec == "bus_invert":
+            _partitions(lanes, cfg.partition)
+        elif cfg.partition is not None:
+            raise ValueError(
+                f"config {cfg}: partition is only meaningful for 'bus_invert'"
+            )
+        out.append(cfg)
+    return tuple(out)
+
+
+def max_partitions(
+    configs: tuple[CodecVariant, ...], lanes: int
+) -> int:
+    """Invert-line slots the kernel's outputs must provide (>= 1)."""
+    return max(
+        [1]
+        + [
+            _partitions(lanes, c.partition)[0]
+            for c in configs
+            if c.codec == "bus_invert"
+        ]
+    )
+
+
+def _bus_invert_bits(hd: jax.Array, lbits: int) -> tuple[jax.Array, jax.Array]:
+    """Invert-line states for both entry branches from pairwise data HDs.
+
+    ``hd`` is (T-1, P) Hamming distances between consecutive data flit
+    groups.  The sequential decision v_t = [2*HD(d_t, w_{t-1}) > L] obeys
+    v_t = tie_t ? 0 : h_t ^ v_{t-1} (h_t = [2*HD_t > L], tie_t =
+    [2*HD_t == L]), which is a prefix-XOR with resets at ties — evaluated
+    here with one cumsum and one cummax instead of a sequential scan.
+    Returns (v0, v1), both (T, P), for entry states v_0 = 0 and v_0 = 1.
+    """
+    tm1, npart = hd.shape
+    h = (2 * hd > lbits).astype(jnp.int32)
+    tie = (2 * hd == lbits).astype(jnp.int32)
+    xpre = jnp.cumsum(h, axis=0) & 1  # X_t = h_1 ^ ... ^ h_t
+    tpos = lax.broadcasted_iota(jnp.int32, (tm1, npart), 0) + 1
+    packed = jnp.where(tie == 1, 2 * tpos + xpre, 0)  # (t, X_t) at ties
+    cmax = lax.cummax(packed, axis=0)  # carries the most recent tie
+    xr = jnp.where(cmax > 0, cmax & 1, 0)  # X at the last tie (else 0)
+    zeros = jnp.zeros((1, npart), jnp.int32)
+    v0 = jnp.concatenate([zeros, xpre ^ xr], axis=0)
+    # no tie yet -> the entry bit still propagates: v1 = v0 ^ [no tie <= t]
+    notie = jnp.concatenate(
+        [zeros + 1, (cmax == 0).astype(jnp.int32)], axis=0
+    )
+    return v0, v0 ^ notie
+
+
+def _bt_axes_kernel(
+    x_ref,
+    w_ref,
+    valid_ref,
+    bt_ref,
+    edge_ref,
+    inv_edge_ref,
+    order_ref=None,
+    rank_ref=None,
+    stream_ref=None,
+    *,
+    configs: tuple[CodecVariant, ...],
+    width: int,
+    input_lanes: int,
+    weight_lanes: int,
+    split_lanes: int,
+    pack: str,
+    pmax: int,
+    emit_stream: bool,
+):
+    """Measure one (link, packet-block) cell under every static config."""
+    x = x_ref[0].astype(jnp.int32)  # (BP, N)
+    w = w_ref[0].astype(jnp.int32)
+    bp, n = x.shape
+    flits = n // input_lanes
+    lanes = input_lanes + weight_lanes
+    rows = bp * flits
+    g = pl.program_id(1)
+
+    # --- the ONE masking convention: rows at or past this link's valid
+    # count contribute nothing (data BT, aux BT, edge flits alike) ---
+    valid = jnp.minimum(
+        jnp.int32(rows), valid_ref[0, 0] * flits - g * jnp.int32(rows)
+    )
+    row_idx = lax.broadcasted_iota(jnp.int32, (rows, 1), 0)
+    bmask = (row_idx[1:] < valid).astype(jnp.int32)  # (rows-1, 1) boundaries
+
+    def _last_valid(arr):  # (rows, L) -> (L,): the row at index valid-1
+        onehot = (row_idx == valid - 1).astype(jnp.int32)
+        return (arr * onehot).sum(axis=0)
+
+    def _flit(values, ln):
+        if pack == "lane":
+            return values.reshape(bp, ln, flits).transpose(0, 2, 1)
+        return values.reshape(bp, flits, ln)
+
+    # --- popcount stage: ONCE per block, shared by every bucketing
+    # (computed lazily — identity-ordering launches skip it entirely) ---
+    pc = None
+
+    # --- one reordered + packed stream per unique ordering ---
+    streams: dict[Variant, jax.Array] = {}
+    for cfg in configs:
+        if cfg.ordering in streams:
+            continue
+        key_name, k, descending = cfg.ordering
+        order = rank = None
+        if key_name in ("acc", "app"):
+            # --- bucket encoder + shared rank machinery (psu.py) ---
+            if pc is None:
+                pc = _popcount_bits(x, width)
+            if key_name == "acc":
+                key, nb = pc, width + 1
+            else:
+                key, nb = (pc * k) // (width + 1), k
+            if descending:
+                key = (nb - 1) - key
+            rank = _rank_from_keys(key, nb)
+            # --- reorder: one permutation-matrix MXU product yields the
+            # ordered payloads (and, in emit_stream mode, `order` = the
+            # permuted iota) in a single contraction (DESIGN.md §3.2) ---
+            iota_j = lax.broadcasted_iota(jnp.int32, (bp, n, n), 2)
+            perm = (rank[:, :, None] == iota_j).astype(jnp.float32)
+            rows_payload = [x, w]
+            if emit_stream:
+                iota_i = lax.broadcasted_iota(jnp.int32, (bp, n), 1)
+                rows_payload = [iota_i, x, w]
+            payload = jnp.stack(rows_payload, axis=1).astype(jnp.float32)
+            moved = lax.dot_general(
+                payload,
+                perm,
+                dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+                preferred_element_type=jnp.float32,
+            ).astype(jnp.int32)  # (BP, 2|3, N)
+            xs, ws = moved[:, -2, :], moved[:, -1, :]
+            if emit_stream:
+                order = moved[:, 0, :]
+        elif key_name == "column_major":
+            # fixed layout permutation — output position (l*F + f) carries
+            # input element (f*L + l): a transpose of the (F, L) packet view
+            xs = x.reshape(bp, flits, input_lanes).transpose(0, 2, 1)
+            xs = xs.reshape(bp, n)
+            ws = w.reshape(bp, flits, input_lanes).transpose(0, 2, 1)
+            ws = ws.reshape(bp, n)
+        else:  # 'none'
+            xs, ws = x, w
+        if weight_lanes:
+            flit_block = jnp.concatenate(
+                [_flit(xs, input_lanes), _flit(ws, weight_lanes)], axis=-1
+            )
+        else:
+            flit_block = _flit(xs, input_lanes)
+        stream = flit_block.reshape(rows, lanes)
+        streams[cfg.ordering] = stream
+        if emit_stream and cfg.ordering == configs[0].ordering:
+            order_ref[0] = order
+            rank_ref[0] = rank
+            stream_ref[0] = stream
+
+    # --- codec + BT-accumulate per config on the shared streams ---
+    for ci, cfg in enumerate(configs):
+        stream = streams[cfg.ordering]
+        zero_inv = jnp.zeros((2, 2, pmax), jnp.int32)
+
+        if cfg.codec in ("none", "gray", "sign_magnitude"):
+            if cfg.codec == "gray":
+                wire = gray_encode_bytes(stream)
+            elif cfg.codec == "sign_magnitude":
+                wire = sign_magnitude_encode_bytes(stream)
+            else:
+                wire = stream
+            flips = _popcount_bits(wire[1:] ^ wire[:-1], 8) * bmask
+            row = jnp.stack(
+                [
+                    flips[:, :split_lanes].sum(),
+                    flips[:, split_lanes:].sum()
+                    if split_lanes < lanes
+                    else jnp.int32(0),
+                    jnp.int32(0),
+                ]
+            )
+            part = jnp.broadcast_to(row, (2, 1, 3))
+            edge = jnp.stack([wire[0], _last_valid(wire)])  # (2, lanes)
+            bt_ref[0, 0, ci] = jnp.pad(part, ((0, 0), (0, pmax - 1), (0, 0)))
+            edge_ref[0, 0, ci] = jnp.broadcast_to(edge, (2, 2, lanes))
+            inv_edge_ref[0, 0, ci] = zero_inv
+
+        elif cfg.codec == "transition":
+            # wire_t ^ wire_{t-1} == data_t: boundary flips = data popcount
+            ppc = _popcount_bits(stream, 8)
+            contrib = ppc[1:] * bmask
+            row = jnp.stack(
+                [
+                    contrib[:, :split_lanes].sum(),
+                    contrib[:, split_lanes:].sum()
+                    if split_lanes < lanes
+                    else jnp.int32(0),
+                    jnp.int32(0),
+                ]
+            )
+            part = jnp.broadcast_to(row, (2, 1, 3))
+            # edges carry DATA flits (the wrapper adds first-flit popcounts)
+            edge = jnp.stack([stream[0], _last_valid(stream)])
+            bt_ref[0, 0, ci] = jnp.pad(part, ((0, 0), (0, pmax - 1), (0, 0)))
+            edge_ref[0, 0, ci] = jnp.broadcast_to(edge, (2, 2, lanes))
+            inv_edge_ref[0, 0, ci] = zero_inv
+
+        else:  # bus_invert
+            npart, pw = _partitions(lanes, cfg.partition)
+            lbits = 8 * pw
+            d = stream.reshape(rows, npart, pw)
+            dpc = _popcount_bits(d[1:] ^ d[:-1], 8)  # (rows-1, npart, pw)
+            v0, v1 = _bus_invert_bits(dpc.sum(axis=-1), lbits)
+            # input/weight lane split inside each partition: global lane id
+            # part*pw + j < split_lanes (iota, not a captured constant)
+            lane_id = lax.broadcasted_iota(
+                jnp.int32, (npart, pw), 0
+            ) * pw + lax.broadcasted_iota(jnp.int32, (npart, pw), 1)
+            in_mask = (lane_id < split_lanes).astype(jnp.int32)
+            parts, edges, inv_edges = [], [], []
+            for v in (v0, v1):
+                e = v[1:] ^ v[:-1]  # (rows-1, npart) invert-line flips
+                lane_flips = jnp.where(e[:, :, None] == 1, 8 - dpc, dpc)
+                lane_flips = lane_flips * bmask[:, :, None]
+                bt_in = (lane_flips * in_mask).sum(axis=(0, 2))
+                bt_wg = (lane_flips * (1 - in_mask)).sum(axis=(0, 2))
+                aux = (e * bmask).sum(axis=0)
+                parts.append(jnp.stack([bt_in, bt_wg, aux], axis=-1))
+                wire = (d ^ (v[:, :, None] * 0xFF)).reshape(rows, lanes)
+                edges.append(jnp.stack([wire[0], _last_valid(wire)]))
+                inv_edges.append(jnp.stack([v[0], _last_valid(v)]))
+            bt_ref[0, 0, ci] = jnp.pad(
+                jnp.stack(parts), ((0, 0), (0, pmax - npart), (0, 0))
+            )
+            edge_ref[0, 0, ci] = jnp.stack(edges)
+            inv_edge_ref[0, 0, ci] = jnp.pad(
+                jnp.stack(inv_edges), ((0, 0), (0, 0), (0, pmax - npart))
+            )
+
+
+def bt_axes_pallas(
+    inputs: jax.Array,
+    weights: jax.Array,
+    valid: jax.Array,
+    *,
+    configs: tuple[CodecVariant, ...],
+    width: int = 8,
+    input_lanes: int = 8,
+    weight_lanes: int = 0,
+    split_lanes: int | None = None,
+    pack: str = "lane",
+    block_packets: int = 64,
+    emit_stream: bool = False,
+    interpret: bool = False,
+):
+    """Per-(link, config) coded BT partials of a (L, P, N) batch, ONE launch.
+
+    Args:
+      inputs / weights: (L, P, N) int packets; P a multiple of
+        ``block_packets`` (the ``ops.py`` wrappers zero-pad; padded rows
+        are masked in-kernel via ``valid``).
+      valid: (L,) int32 real packet count per link (rows past it are
+        masked: zero data BT, zero aux BT).
+      configs: static tuple of :class:`CodecVariant` configurations — the
+        variant x codec axes of the launch.
+      split_lanes: byte lane where the input side ends for the per-side BT
+        accounting (default ``input_lanes``; the per-link NoC path packs
+        pre-assembled flit rows as N = lanes packets and splits here).
+      emit_stream: also emit (order, rank, stream) for ``configs[0]``'s
+        ordering — the fused-TX-pipeline mode (requires exactly one config
+        with an 'acc'/'app' ordering).
+
+    Returns:
+      (partials, edges, inv_edges[, order, rank, stream]):
+        * int32 (L, G, C, 2, PMAX, 3) per-block, per-entry-branch,
+          per-partition (input, weight, invert-line) BT partials over
+          block-internal valid boundaries (branches are identical for
+          every codec except bus-invert; non-partitioned codecs use
+          slot 0);
+        * int32 (L, G, C, 2, 2, lanes) per-branch first/last-valid wire
+          rows (DATA rows for 'transition');
+        * int32 (L, G, C, 2, 2, PMAX) per-branch first/last-valid
+          invert-line states (bus-invert only, zeros otherwise);
+        * with ``emit_stream``: int32 (L, P, N) order, (L, P, N) rank and
+          (L, P*F, lanes) packed stream.
+    """
+    links, p, n = inputs.shape
+    lanes = input_lanes + weight_lanes
+    configs = validate_codec_variants(configs, width, lanes)
+    if p % block_packets != 0:
+        raise ValueError(f"P={p} not a multiple of block_packets={block_packets}")
+    if n % input_lanes != 0:
+        raise ValueError(f"packet size {n} not divisible by input_lanes={input_lanes}")
+    if weight_lanes not in (0, input_lanes):
+        raise ValueError(
+            "the multi-axis kernel needs a symmetric (or absent) weight "
+            f"side: weight_lanes={weight_lanes} vs input_lanes={input_lanes}"
+        )
+    if pack not in ("lane", "row"):
+        raise ValueError(f"multi-axis kernel supports pack 'lane'|'row', got {pack!r}")
+    if split_lanes is None:
+        split_lanes = input_lanes
+    if not 0 <= split_lanes <= lanes:
+        raise ValueError(f"split_lanes={split_lanes} outside the {lanes}-lane flit")
+    if emit_stream:
+        if len(configs) != 1 or configs[0].codec != "none":
+            raise ValueError(
+                "emit_stream needs exactly one uncoded config, got "
+                f"{configs}"
+            )
+        if configs[0].key not in ("acc", "app"):
+            raise ValueError(
+                "emit_stream needs an 'acc'/'app' ordering (the fused TX "
+                f"pipeline), got {configs[0].key!r}"
+            )
+    if valid.shape != (links,):
+        raise ValueError(f"valid must be ({links},), got {tuple(valid.shape)}")
+    nc = len(configs)
+    flits = n // input_lanes
+    pmax = max_partitions(configs, lanes)
+    gblocks = p // block_packets
+    grid = (links, gblocks)
+    kern = functools.partial(
+        _bt_axes_kernel,
+        configs=configs,
+        width=width,
+        input_lanes=input_lanes,
+        weight_lanes=weight_lanes,
+        split_lanes=split_lanes,
+        pack=pack,
+        pmax=pmax,
+        emit_stream=emit_stream,
+    )
+    pk_spec = pl.BlockSpec((1, block_packets, n), lambda l, g: (l, g, 0))
+    out_shape = [
+        jax.ShapeDtypeStruct((links, gblocks, nc, 2, pmax, 3), jnp.int32),
+        jax.ShapeDtypeStruct((links, gblocks, nc, 2, 2, lanes), jnp.int32),
+        jax.ShapeDtypeStruct((links, gblocks, nc, 2, 2, pmax), jnp.int32),
+    ]
+    out_specs = [
+        pl.BlockSpec((1, 1, nc, 2, pmax, 3), lambda l, g: (l, g, 0, 0, 0, 0)),
+        pl.BlockSpec((1, 1, nc, 2, 2, lanes), lambda l, g: (l, g, 0, 0, 0, 0)),
+        pl.BlockSpec((1, 1, nc, 2, 2, pmax), lambda l, g: (l, g, 0, 0, 0, 0)),
+    ]
+    if emit_stream:
+        out_shape += [
+            jax.ShapeDtypeStruct((links, p, n), jnp.int32),
+            jax.ShapeDtypeStruct((links, p, n), jnp.int32),
+            jax.ShapeDtypeStruct((links, p * flits, lanes), jnp.int32),
+        ]
+        out_specs += [
+            pk_spec,
+            pk_spec,
+            pl.BlockSpec(
+                (1, block_packets * flits, lanes), lambda l, g: (l, g, 0)
+            ),
+        ]
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pk_spec,
+            pk_spec,
+            pl.BlockSpec((1, 1), lambda l, g: (l, 0)),
+        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(
+        inputs.astype(jnp.int32),
+        weights.astype(jnp.int32),
+        valid.astype(jnp.int32).reshape(links, 1),
+    )

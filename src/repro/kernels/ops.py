@@ -4,29 +4,36 @@ These handle padding/trimming, static-arg plumbing and the CPU-validation
 (interpret) switch.  ``interpret`` defaults to True when no TPU is present so
 the whole framework runs (slowly but correctly) on CPU; on TPU the compiled
 kernels are used.
+
+All four BT entry points — ``psu_stream`` (fused TX pipeline),
+``bt_count_links`` (per-link NoC batch), ``bt_count_variants`` (design-grid
+batch) and ``bt_count_codecs`` (codec x ordering batch) — are thin
+configurations of the ONE multi-axis kernel (``axes.py``, DESIGN.md §12):
+link axis on the grid, variant x codec axes static inside the launch, one
+in-kernel masking convention for padded rows, and one shared inter-block
+fold (:func:`_fold_axes`) for the O(G) boundary carry.
 """
 
 from __future__ import annotations
 
 from functools import partial
-from typing import NamedTuple
+from typing import NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
+from jax import lax
 
-from .bt_codecs import (
+from repro.core.coding import bus_invert_partitions as _partitions
+
+from .axes import (
     CodecVariant,
-    _partitions,
-    bt_codecs_pallas,
-    validate_codec_variants,
+    Variant,
+    bt_axes_pallas,
+    validate_variants,
 )
-from .bt_links import bt_links_pallas
-from .bt_variants import Variant, bt_variants_pallas, validate_variants
 from .btcount import bt_count_pallas
 from .psu import _popcount_bits, psu_sort_pallas
-from .psu_stream import psu_stream_pallas
 from .quantize import quantize_egress_pallas
-from .ref import variant_order_ref
 
 __all__ = [
     "psu_sort",
@@ -34,6 +41,7 @@ __all__ = [
     "psu_stream",
     "PsuStreamResult",
     "bt_count",
+    "bt_count_axes",
     "bt_count_links",
     "bt_count_variants",
     "bt_count_codecs",
@@ -41,12 +49,44 @@ __all__ = [
     "CodecVariant",
     "quantize_egress",
     "default_interpret",
+    "pallas_launch_count",
 ]
 
 
 def default_interpret() -> bool:
     """Interpret kernels unless running on real TPU hardware."""
     return jax.default_backend() != "tpu"
+
+
+def pallas_launch_count(fn, *args) -> int:
+    """Number of ``pallas_call`` equations in the traced jaxpr of ``fn``
+    (recursing through pjit/scan/etc. sub-jaxprs) — the measurement behind
+    every 1-launch claim in this repo (benchmarks and tests alike)."""
+    try:  # jaxpr types' public home since jax 0.4.33
+        from jax.extend import core as jcore
+    except ImportError:  # older releases
+        from jax import core as jcore
+
+    def walk(jaxpr) -> int:
+        n = 0
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name == "pallas_call":
+                n += 1
+            for v in eqn.params.values():
+                for sub in _subjaxprs(v):
+                    n += walk(sub)
+        return n
+
+    def _subjaxprs(v):
+        if isinstance(v, jcore.ClosedJaxpr):
+            yield v.jaxpr
+        elif isinstance(v, jcore.Jaxpr):
+            yield v
+        elif isinstance(v, (tuple, list)):
+            for item in v:
+                yield from _subjaxprs(item)
+
+    return walk(jax.make_jaxpr(fn)(*args).jaxpr)
 
 
 @partial(
@@ -97,6 +137,137 @@ def psu_reorder(
     return jnp.take_along_axis(packets, order, axis=-1)
 
 
+# --------------------------------------------------------------------------
+# the shared inter-block fold of the multi-axis kernel (DESIGN.md §12)
+
+
+def _fold_axes(
+    partials: jax.Array,  # (L, G, C, 2, PMAX, 3)
+    edges: jax.Array,  # (L, G, C, 2, 2, lanes)
+    inv_edges: jax.Array,  # (L, G, C, 2, 2, PMAX)
+    configs: tuple[CodecVariant, ...],
+    valid_rows: jax.Array,  # (L,) real flit rows per link
+    rows: int,  # flit rows per block
+    split_lanes: int,
+) -> jax.Array:
+    """Fold per-(link, block) kernel partials into (L, C, 3) totals.
+
+    Block-internal boundaries are already masked in-kernel; this patches
+    the G-1 inter-block boundaries per link in O(G) jnp — stateless codecs
+    XOR adjacent edge flits, transition signaling adds each block's
+    first-flit popcount, and bus-invert carries each block's entry branch
+    from the previous block's last wire flit (``lax.scan``).  Boundaries
+    into fully-padded blocks are masked by each link's ``valid_rows``.
+    """
+    nl, gblocks = partials.shape[:2]
+    lanes = edges.shape[-1]
+    if gblocks > 1:
+        # boundary (g-1 -> g) is real iff block g has any valid row
+        bnd_mask = (
+            jnp.arange(1, gblocks, dtype=jnp.int32)[None, :] * rows
+            < valid_rows[:, None]
+        ).astype(jnp.int32)  # (L, G-1)
+
+    def _sides(flips):  # (..., lanes) -> (..., 2) per-side sums
+        in_side = flips[..., :split_lanes].sum(-1)
+        w_side = (
+            flips[..., split_lanes:].sum(-1)
+            if split_lanes < lanes
+            else jnp.zeros_like(in_side)
+        )
+        return jnp.stack([in_side, w_side], axis=-1)
+
+    totals = []
+    for ci, cfg in enumerate(configs):
+        if cfg.codec == "bus_invert":
+            npart, pw = _partitions(lanes, cfg.partition)
+            lbits = 8 * pw
+            in_mask = (
+                jnp.arange(lanes, dtype=jnp.int32) < split_lanes
+            ).astype(jnp.int32).reshape(npart, pw)
+            # block 0 enters uninverted: branch 0
+            total = partials[:, 0, ci, 0, :npart]  # (L, npart, 3)
+            if gblocks > 1:
+
+                def fold(carry, blk):
+                    carry_wire, carry_inv = carry  # (L, npart, pw), (L, npart)
+                    part_g, edge_g, inv_g, m = blk
+                    # branch-0 first wire IS the block's first data flit
+                    d_first = edge_g[:, 0, 0].reshape(nl, npart, pw)
+                    hd = _popcount_bits(d_first ^ carry_wire, 8).sum(-1)
+                    b = (2 * hd > lbits).astype(jnp.int32)  # (L, npart)
+                    first_wire = d_first ^ (b[..., None] * 0xFF)
+                    flips = _popcount_bits(carry_wire ^ first_wire, 8)
+                    bnd = jnp.stack(
+                        [
+                            (flips * in_mask).sum(-1),
+                            (flips * (1 - in_mask)).sum(-1),
+                            (carry_inv != b).astype(jnp.int32),
+                        ],
+                        axis=-1,
+                    )  # (L, npart, 3): the inter-block boundary itself
+                    sel = jnp.where(b[..., None] == 1, part_g[:, 1], part_g[:, 0])
+                    ew = edge_g[:, :, 1].reshape(nl, 2, npart, pw)
+                    new_wire = jnp.where(b[..., None] == 1, ew[:, 1], ew[:, 0])
+                    iv = inv_g[:, :, 1]  # (L, 2, npart)
+                    new_inv = jnp.where(b == 1, iv[:, 1], iv[:, 0])
+                    # links whose valid rows end before this block keep
+                    # their carry and contribute nothing
+                    m3 = m[:, None, None]
+                    new_wire = jnp.where(m3 == 1, new_wire, carry_wire)
+                    new_inv = jnp.where(m[:, None] == 1, new_inv, carry_inv)
+                    return (new_wire, new_inv), (bnd + sel) * m3
+
+                carry0 = (
+                    edges[:, 0, ci, 0, 1].reshape(nl, npart, pw),
+                    inv_edges[:, 0, ci, 0, 1, :npart],
+                )
+                _, contribs = lax.scan(
+                    fold,
+                    carry0,
+                    (
+                        jnp.moveaxis(partials[:, 1:, ci, :, :npart], 1, 0),
+                        jnp.moveaxis(edges[:, 1:, ci], 1, 0),
+                        jnp.moveaxis(inv_edges[:, 1:, ci, :, :, :npart], 1, 0),
+                        jnp.moveaxis(bnd_mask, 1, 0),
+                    ),
+                )
+                total = total + contribs.sum(axis=0)
+            totals.append(total.sum(axis=1))  # (L, 3)
+        else:
+            # branch 0 carries every stateless codec; padded slots are zero
+            total = partials[:, :, ci, 0].sum(axis=(1, 2))  # (L, 3)
+            if gblocks > 1:
+                if cfg.codec == "transition":
+                    # boundary flips = the next block's first DATA flit bits
+                    flips = _popcount_bits(edges[:, 1:, ci, 0, 0, :], 8)
+                else:
+                    flips = _popcount_bits(
+                        jnp.bitwise_xor(
+                            edges[:, :-1, ci, 0, 1, :], edges[:, 1:, ci, 0, 0, :]
+                        ),
+                        8,
+                    )
+                bnd = (_sides(flips) * bnd_mask[..., None]).sum(axis=1)  # (L, 2)
+                total = total + jnp.concatenate(
+                    [bnd, jnp.zeros((nl, 1), jnp.int32)], axis=-1
+                )
+            totals.append(total)
+    return jnp.stack(totals, axis=1).astype(jnp.int32)  # (L, C, 3)
+
+
+def _paired(inputs, weights, weight_lanes, input_lanes):
+    """Shared (weights, weight_lanes) defaulting of the packet wrappers."""
+    if weights is None:
+        weight_lanes = 0 if weight_lanes is None else weight_lanes
+        weights = jnp.zeros_like(inputs)
+    elif weight_lanes is None:
+        weight_lanes = input_lanes
+    if weights.shape != inputs.shape:
+        raise ValueError(f"paired shapes differ: {inputs.shape} vs {weights.shape}")
+    return weights, weight_lanes
+
+
 class PsuStreamResult(NamedTuple):
     """Everything the fused TX pipeline produces in one kernel launch."""
 
@@ -134,64 +305,45 @@ def psu_stream(
 ) -> PsuStreamResult:
     """Fused popcount-sort -> reorder -> flit-pack -> BT-count, one launch.
 
-    Accepts any (P, N) integer packets; P is padded to the kernel block size
-    internally.  The per-block BT partials miss (a) the G-1 inter-block flit
-    boundaries and (b) over-count one boundary into the zero-padded tail when
-    P is not a block multiple; both are patched here with O(G) jnp arithmetic
-    on the packed stream — no extra kernel launch.
+    The multi-axis kernel in ``emit_stream`` mode: one link, one uncoded
+    'acc'/'app' config, with the permutation-matrix contraction also
+    yielding ``order``/``rank`` and the packed wire stream.  Accepts any
+    (P, N) integer packets; P is padded to the kernel block size and the
+    padded tail is masked in-kernel (the unified convention) — the wrapper
+    only folds the G-1 inter-block flit boundaries.
     """
     if interpret is None:
         interpret = default_interpret()
-    if weights is None:
-        weight_lanes = 0 if weight_lanes is None else weight_lanes
-        weights = jnp.zeros_like(inputs)
-    elif weight_lanes is None:
-        weight_lanes = input_lanes
-    if weights.shape != inputs.shape:
-        raise ValueError(f"paired shapes differ: {inputs.shape} vs {weights.shape}")
+    weights, weight_lanes = _paired(inputs, weights, weight_lanes, input_lanes)
     p, n = inputs.shape
     flits = n // input_lanes
     bp = min(block_packets, max(1, p))
     pad = (-p) % bp
     x = jnp.pad(inputs.astype(jnp.int32), ((0, pad), (0, 0)))
     w = jnp.pad(weights.astype(jnp.int32), ((0, pad), (0, 0)))
-    order, rank, stream, partials = psu_stream_pallas(
-        x,
-        w,
+    cfg = CodecVariant("acc" if k is None else "app", k, descending)
+    valid = jnp.full((1,), p, jnp.int32)
+    partials, edges, inv_edges, order, rank, stream = bt_axes_pallas(
+        x[None],
+        w[None],
+        valid,
+        configs=(cfg,),
         width=width,
-        k=k,
-        descending=descending,
         input_lanes=input_lanes,
         weight_lanes=weight_lanes,
         pack=pack,
         block_packets=bp,
+        emit_stream=True,
         interpret=interpret,
     )
-    bt = partials.sum(axis=0)  # (2,): block-internal boundaries
-
-    def _halves(flips_row):
-        return jnp.stack(
-            [flips_row[..., :input_lanes].sum(-1), flips_row[..., input_lanes:].sum(-1)],
-            axis=-1,
-        )
-
-    grid = (p + pad) // bp
-    if grid > 1:
-        # inter-block boundaries: last flit of block g-1 -> first of block g
-        starts = jnp.arange(1, grid) * (bp * flits)
-        flips = _popcount_bits(
-            jnp.bitwise_xor(stream[starts - 1], stream[starts]), 8
-        )
-        bt = bt + _halves(flips).sum(axis=0)
-    if pad:
-        # remove the spurious boundary from the last real flit into the
-        # zero-padded tail (zero flits contribute nothing else)
-        flips = _popcount_bits(stream[p * flits - 1], 8)
-        bt = bt - _halves(flips)
+    bt = _fold_axes(
+        partials, edges, inv_edges, (cfg,), valid * flits, bp * flits,
+        input_lanes,
+    )[0, 0]
     return PsuStreamResult(
-        order[:p],
-        rank[:p],
-        stream[: p * flits].astype(jnp.uint8),
+        order[0, :p],
+        rank[0, :p],
+        stream[0, : p * flits].astype(jnp.uint8),
         bt[0],
         bt[1],
     )
@@ -214,11 +366,104 @@ def bt_count(
 
 @partial(
     jax.jit,
+    static_argnames=(
+        "configs",
+        "width",
+        "input_lanes",
+        "weight_lanes",
+        "split_lanes",
+        "pack",
+        "block_packets",
+        "interpret",
+    ),
+)
+def bt_count_axes(
+    inputs: jax.Array,
+    weights: jax.Array | None = None,
+    valid: jax.Array | Sequence[int] | None = None,
+    configs: tuple[CodecVariant, ...] = (CodecVariant(),),
+    width: int = 8,
+    input_lanes: int = 8,
+    weight_lanes: int | None = None,
+    split_lanes: int | None = None,
+    pack: str = "lane",
+    block_packets: int = 64,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """The full multi-axis measurement: per-LINK, per-(ordering, codec)
+    config BT of a (L, P, N) packet batch in ONE kernel launch.
+
+    This is the grid the whole stack reduces to (DESIGN.md §12): NoC links,
+    DSE variants and wire codecs are orthogonal axes of one launch.  Links
+    may be jagged — ``valid`` gives each link's real packet count and
+    everything past it contributes zero data BT and zero aux BT (so a
+    bus-invert decision is never evaluated on a padded flit).
+
+    Args:
+      inputs: (L, P, N) integer packets (P = the longest link, zero-padded).
+      weights: optional (L, P, N) paired weight bytes.
+      valid: (L,) real packet counts (default: all P real).
+      configs: static tuple of :class:`CodecVariant` configurations.
+      split_lanes: lane where the input side ends for per-side accounting
+        (default ``input_lanes``; the NoC path feeds pre-assembled flit
+        rows as N = lanes packets and splits at the spec's input_lanes).
+
+    Returns:
+      int32 (L, C, 3): per-link, per-config (input-side BT, weight-side
+      BT, invert-line BT) totals.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    if inputs.ndim != 3:
+        raise ValueError(f"expected (L, P, N) packets, got {inputs.shape}")
+    weights, weight_lanes = _paired(inputs, weights, weight_lanes, input_lanes)
+    links, p, n = inputs.shape
+    flits = n // input_lanes
+    nc = len(configs)
+    if links == 0 or p == 0:
+        return jnp.zeros((links, nc, 3), jnp.int32)
+    if valid is None:
+        valid = jnp.full((links,), p, jnp.int32)
+    else:
+        # clamp to the packets actually present: a valid count past P would
+        # silently count the last-real -> zero-pad boundary as real
+        valid = jnp.minimum(jnp.asarray(valid, jnp.int32), p)
+    bp = min(block_packets, max(1, p))
+    pad = (-p) % bp
+    x = jnp.pad(inputs.astype(jnp.int32), ((0, 0), (0, pad), (0, 0)))
+    w = jnp.pad(weights.astype(jnp.int32), ((0, 0), (0, pad), (0, 0)))
+    partials, edges, inv_edges = bt_axes_pallas(
+        x,
+        w,
+        valid,
+        configs=tuple(configs),
+        width=width,
+        input_lanes=input_lanes,
+        weight_lanes=weight_lanes,
+        split_lanes=split_lanes,
+        pack=pack,
+        block_packets=bp,
+        interpret=interpret,
+    )
+    return _fold_axes(
+        partials,
+        edges,
+        inv_edges,
+        tuple(configs),
+        valid * flits,
+        bp * flits,
+        input_lanes if split_lanes is None else split_lanes,
+    )
+
+
+@partial(
+    jax.jit,
     static_argnames=("input_lanes", "width", "block_links", "block_rows", "interpret"),
 )
 def bt_count_links(
     streams: jax.Array,
     input_lanes: int | None = None,
+    lengths: jax.Array | Sequence[int] | None = None,
     width: int = 8,
     block_links: int = 8,
     block_rows: int = 512,
@@ -227,23 +472,28 @@ def bt_count_links(
     """Per-link BT of a (L, T, lanes) stream batch in ONE kernel launch.
 
     The batched replacement for looping ``bt_count`` over the links of a
-    NoC: the link axis goes on the Pallas grid (see ``bt_links.py``).
-    Accepts any L and T; both are rounded up to the block shape internally
-    — rows by repeating each link's last flit (the kernel slices its two
-    shifted views from the padded stream, so zero rows there would
-    fabricate a last-flit -> 0 boundary; a repeated flit flips nothing),
-    links by appending all-zero streams.  Links whose real streams are
-    shorter than T must be padded by the caller the same way, with copies
-    of their last flit (``repro.noc.simulate.stack_link_streams`` does).
+    NoC: each pre-assembled flit row is one N = lanes "packet" of the
+    multi-axis kernel with the identity ordering, so the link axis rides
+    the kernel grid.  Jagged links pass their real flit counts via
+    ``lengths`` and the kernel masks everything past them (the unified
+    convention) — any padding value is neutral, including the
+    repeated-last-flit rows ``repro.noc.simulate.stack_link_streams``
+    emits (which are also zero-BT on their own).
 
     Args:
       streams: (L, T, lanes) integer flit streams, one per link.
       input_lanes: lanes carrying input bytes (rest = weight side);
         default all lanes.
+      lengths: (L,) real flit counts for jagged links (default: all T).
+      width: element bit width of the lanes (byte lanes: 8).
+      block_links: unused (one grid row per link); kept for call
+        compatibility with the pre-unification kernel.
+      block_rows: flit rows per grid step.
 
     Returns:
       int32 (L, 2): per-link (input-side, weight-side) bit transitions.
     """
+    del block_links  # the link axis is unblocked on the unified grid
     if interpret is None:
         interpret = default_interpret()
     links, t, lanes = streams.shape
@@ -255,24 +505,30 @@ def bt_count_links(
         )
     if links == 0 or t < 2:
         return jnp.zeros((links, 2), jnp.int32)
-    bl = min(block_links, max(1, links))
-    br = min(block_rows, max(1, t - 1))
-    pad_l = (-links) % bl
-    pad_r = (-(t - 1)) % br
-    # row padding repeats each link's last flit (kernel shifts internally, so
-    # zero rows would fabricate a last-flit -> 0 boundary); link padding is
-    # all-zero streams, which flip nothing
-    x = jnp.pad(streams.astype(jnp.int32), ((0, 0), (0, pad_r), (0, 0)), mode="edge")
-    x = jnp.pad(x, ((0, pad_l), (0, 0), (0, 0)))
-    partials = bt_links_pallas(
+    valid = (
+        jnp.full((links,), t, jnp.int32)
+        if lengths is None
+        else jnp.minimum(jnp.asarray(lengths, jnp.int32), t)
+    )
+    bp = min(block_rows, max(1, t))
+    pad = (-t) % bp
+    x = jnp.pad(streams.astype(jnp.int32), ((0, 0), (0, pad), (0, 0)))
+    cfg = (CodecVariant("none"),)
+    partials, edges, inv_edges = bt_axes_pallas(
         x,
-        input_lanes=input_lanes,
+        jnp.zeros_like(x),
+        valid,
+        configs=cfg,
         width=width,
-        block_links=bl,
-        block_rows=br,
+        input_lanes=lanes,
+        weight_lanes=0,
+        split_lanes=input_lanes,
+        pack="row",
+        block_packets=bp,
         interpret=interpret,
     )
-    return partials.sum(axis=1)[:links]
+    bt = _fold_axes(partials, edges, inv_edges, cfg, valid, bp, input_lanes)
+    return bt[:, 0, :2]
 
 
 @partial(
@@ -300,96 +556,30 @@ def bt_count_variants(
 ) -> jax.Array:
     """Ordered BT of (P, N) packets under MANY variants in ONE kernel launch.
 
-    The batched replacement for looping one ``psu_stream``/``bt_count``
-    launch per design configuration: the variant axis lives inside the
-    single launch (``bt_variants.py`` unrolls the static variant tuple per
-    block, sharing one popcount pass), which is what makes a whole
+    The multi-axis kernel restricted to one link and uncoded configs: the
+    variant axis lives inside the single launch (one popcount pass per
+    block shared by every bucketing), which is what makes a whole
     ``repro.dse`` grid one launch per measured stream.
-
-    Accepts any (P, N) integer packets; P is padded to the kernel block
-    size with zero packets (zeros sort to zeros under every variant).  The
-    per-block partials miss (a) the G-1 inter-block flit boundaries —
-    patched from the per-block edge flits the kernel emits — and (b)
-    over-count one boundary from the last real flit into the zero-padded
-    tail, subtracted per variant from the reference reorder of the last
-    real packet (O(V*N) jnp arithmetic; no extra launch).
-
-    Args:
-      inputs: (P, N) integer packets.
-      weights: optional (P, N) paired weight bytes.
-      variants: static tuple of ``Variant(key, k, descending)`` configs.
-      width: element bit width W of the sort keys.
-      input_lanes / weight_lanes: bytes of each side per flit (weight side
-        defaults to ``input_lanes`` when weights are given, else 0).
-      pack: 'lane' or 'row' flit layout.
 
     Returns:
       int32 (V, 2): per-variant (input-side, weight-side) bit transitions.
     """
-    if interpret is None:
-        interpret = default_interpret()
     variants = validate_variants(tuple(variants), width)
-    if weights is None:
-        weight_lanes = 0 if weight_lanes is None else weight_lanes
-        weights = jnp.zeros_like(inputs)
-    elif weight_lanes is None:
-        weight_lanes = input_lanes
-    if weights.shape != inputs.shape:
-        raise ValueError(f"paired shapes differ: {inputs.shape} vs {weights.shape}")
-    p, n = inputs.shape
-    flits = n // input_lanes
-    bp = min(block_packets, max(1, p))
-    pad = (-p) % bp
-    x = jnp.pad(inputs.astype(jnp.int32), ((0, pad), (0, 0)))
-    w = jnp.pad(weights.astype(jnp.int32), ((0, pad), (0, 0)))
-    partials, edges = bt_variants_pallas(
-        x,
-        w,
-        variants=variants,
+    weights, weight_lanes = _paired(inputs, weights, weight_lanes, input_lanes)
+    configs = tuple(CodecVariant(v.key, v.k, v.descending) for v in variants)
+    out = bt_count_axes(
+        inputs[None],
+        weights[None],
+        None,
+        configs=configs,
         width=width,
         input_lanes=input_lanes,
         weight_lanes=weight_lanes,
         pack=pack,
-        block_packets=bp,
+        block_packets=block_packets,
         interpret=interpret,
     )
-    bt = partials.sum(axis=0)  # (V, 2): block-internal boundaries
-
-    def _halves(flips):  # (..., lanes) -> (..., 2) per-side sums
-        return jnp.stack(
-            [flips[..., :input_lanes].sum(-1), flips[..., input_lanes:].sum(-1)],
-            axis=-1,
-        )
-
-    grid = (p + pad) // bp
-    if grid > 1:
-        # inter-block boundaries: last flit of block g-1 -> first of block g
-        flips = _popcount_bits(
-            jnp.bitwise_xor(edges[:-1, :, 1, :], edges[1:, :, 0, :]), 8
-        )  # (G-1, V, lanes)
-        bt = bt + _halves(flips).sum(axis=0)
-    if pad:
-        # remove the spurious boundary from the last real flit into the
-        # zero-padded tail: reorder the ONE last real packet per variant
-        # with the pure-jnp reference and take its final flit
-        last_flits = []
-        for variant in variants:
-            order = variant_order_ref(
-                x[p - 1 : p], variant, width=width, input_lanes=input_lanes
-            )
-            xs = jnp.take_along_axis(x[p - 1 : p], order, axis=-1)
-            ws = jnp.take_along_axis(w[p - 1 : p], order, axis=-1)
-            if pack == "lane":
-                fi = xs.reshape(input_lanes, flits).T
-                fw = ws.reshape(weight_lanes, flits).T if weight_lanes else None
-            else:
-                fi = xs.reshape(flits, input_lanes)
-                fw = ws.reshape(flits, weight_lanes) if weight_lanes else None
-            row = fi[-1] if fw is None else jnp.concatenate([fi[-1], fw[-1]])
-            last_flits.append(row)
-        flips = _popcount_bits(jnp.stack(last_flits), 8)  # (V, lanes)
-        bt = bt - _halves(flips)
-    return bt
+    return out[0, :, :2]
 
 
 @partial(
@@ -418,31 +608,10 @@ def bt_count_codecs(
     """Coded + ordered BT of (P, N) packets under MANY (ordering, codec)
     configurations in ONE kernel launch.
 
-    The batched replacement for one ``psu_stream`` launch + a jnp codec +
-    ``bt_count`` launch per configuration: the whole codec x ordering grid
-    lives inside the single launch (``bt_codecs.py`` shares one popcount
-    pass and one reorder per distinct ordering; stateful codecs run as
-    vectorized per-block prefix scans).  This is what makes the
-    ``repro.codec.compare`` tables and the ``repro.dse`` codec axis one
-    launch per measured stream (``benchmarks/codec_bt.py``).
-
-    Accepts any (P, N) integer packets; P is padded to the kernel block
-    size with zero packets, which the kernel masks out internally (no
-    wrapper-side tail subtraction).  The G-1 inter-block boundaries are
-    patched here per codec from the per-block edge states the kernel
-    emits: byte-map codecs XOR adjacent edge flits, transition signaling
-    adds each block's first-flit popcount, and bus-invert folds an O(G)
-    carry — each block's entry branch is chosen from the previous block's
-    last wire flit (``lax.scan``, no extra kernel launch).
-
-    Args:
-      inputs: (P, N) integer packets.
-      weights: optional (P, N) paired weight bytes.
-      configs: static tuple of ``CodecVariant`` configurations.
-      width: element bit width W of the sort keys.
-      input_lanes / weight_lanes: bytes of each side per flit (weight side
-        defaults to ``input_lanes`` when weights are given, else 0).
-      pack: 'lane' or 'row' flit layout.
+    The multi-axis kernel restricted to one link: the whole codec x
+    ordering grid lives inside the launch (one popcount pass, one reorder
+    per distinct ordering, stateful codecs as vectorized per-block prefix
+    scans with the wrapper folding the O(G) inter-block carry).
 
     Returns:
       int32 (C, 3): per-config (input-side BT, weight-side BT, invert-line
@@ -450,111 +619,20 @@ def bt_count_codecs(
       still pays switching energy for (zero for codecs without extra
       lines).
     """
-    if interpret is None:
-        interpret = default_interpret()
-    if weights is None:
-        weight_lanes = 0 if weight_lanes is None else weight_lanes
-        weights = jnp.zeros_like(inputs)
-    elif weight_lanes is None:
-        weight_lanes = input_lanes
-    if weights.shape != inputs.shape:
-        raise ValueError(f"paired shapes differ: {inputs.shape} vs {weights.shape}")
-    p, n = inputs.shape
-    lanes = input_lanes + weight_lanes
-    configs = validate_codec_variants(tuple(configs), width, lanes)
-    bp = min(block_packets, max(1, p))
-    pad = (-p) % bp
-    x = jnp.pad(inputs.astype(jnp.int32), ((0, pad), (0, 0)))
-    w = jnp.pad(weights.astype(jnp.int32), ((0, pad), (0, 0)))
-    partials, edges, inv_edges = bt_codecs_pallas(
-        x,
-        w,
-        configs=configs,
+    weights, weight_lanes = _paired(inputs, weights, weight_lanes, input_lanes)
+    out = bt_count_axes(
+        inputs[None],
+        weights[None],
+        None,
+        configs=tuple(configs),
         width=width,
         input_lanes=input_lanes,
         weight_lanes=weight_lanes,
         pack=pack,
-        block_packets=bp,
-        real_packets=p,
+        block_packets=block_packets,
         interpret=interpret,
     )
-    grid = (p + pad) // bp
-
-    def _sides(flips):  # (..., lanes) -> (..., 2) per-side sums
-        wside = (
-            flips[..., input_lanes:].sum(-1)
-            if weight_lanes
-            else jnp.zeros_like(flips[..., 0])
-        )
-        return jnp.stack([flips[..., :input_lanes].sum(-1), wside], axis=-1)
-
-    totals = []
-    for ci, cfg in enumerate(configs):
-        if cfg.codec == "bus_invert":
-            npart, pw = _partitions(lanes, cfg.partition)
-            lbits = 8 * pw
-            in_mask = (
-                jnp.arange(lanes, dtype=jnp.int32) < input_lanes
-            ).astype(jnp.int32).reshape(npart, pw)
-            total = partials[0, ci, 0, :npart]  # (npart, 3): block 0, branch 0
-            if grid > 1:
-
-                def fold(carry, blk):
-                    carry_wire, carry_inv = carry
-                    part_g, edge_g, inv_g = blk
-                    # branch-0 first wire IS the block's first data flit
-                    d_first = edge_g[0, 0].reshape(npart, pw)
-                    hd = _popcount_bits(d_first ^ carry_wire, 8).sum(-1)
-                    b = (2 * hd > lbits).astype(jnp.int32)  # (npart,)
-                    first_wire = d_first ^ (b[:, None] * 0xFF)
-                    flips = _popcount_bits(carry_wire ^ first_wire, 8)
-                    bnd = jnp.stack(
-                        [
-                            (flips * in_mask).sum(-1),
-                            (flips * (1 - in_mask)).sum(-1),
-                            (carry_inv != b).astype(jnp.int32),
-                        ],
-                        axis=-1,
-                    )  # (npart, 3): the inter-block boundary itself
-                    sel = jnp.where(b[:, None] == 1, part_g[1], part_g[0])
-                    ew = edge_g[:, 1].reshape(2, npart, pw)
-                    new_wire = jnp.where(b[:, None] == 1, ew[1], ew[0])
-                    iv = inv_g[:, 1]
-                    new_inv = jnp.where(b == 1, iv[1], iv[0])
-                    return (new_wire, new_inv), bnd + sel
-
-                carry0 = (
-                    edges[0, ci, 0, 1].reshape(npart, pw),
-                    inv_edges[0, ci, 0, 1, :npart],
-                )
-                _, contribs = jax.lax.scan(
-                    fold,
-                    carry0,
-                    (
-                        partials[1:, ci, :, :npart],
-                        edges[1:, ci],
-                        inv_edges[1:, ci, :, :, :npart],
-                    ),
-                )
-                total = total + contribs.sum(axis=0)
-            totals.append(total.sum(axis=0))  # (3,)
-        else:
-            total = partials[:, ci, 0].sum(axis=(0, 1))  # (3,) over G, slots
-            if grid > 1:
-                if cfg.codec == "transition":
-                    # boundary flips = the next block's first DATA flit bits
-                    flips = _popcount_bits(edges[1:, ci, 0, 0, :], 8)
-                else:
-                    flips = _popcount_bits(
-                        jnp.bitwise_xor(
-                            edges[:-1, ci, 0, 1, :], edges[1:, ci, 0, 0, :]
-                        ),
-                        8,
-                    )
-                bnd = _sides(flips).sum(axis=0)  # (2,)
-                total = total + jnp.concatenate([bnd, jnp.zeros((1,), jnp.int32)])
-            totals.append(total)
-    return jnp.stack(totals).astype(jnp.int32)
+    return out[0]
 
 
 @partial(jax.jit, static_argnames=("block", "interpret"))

@@ -54,9 +54,9 @@ def _rank_from_keys(key: jax.Array, nb: int) -> jax.Array:
     """Stages 2-3 of the PSU on one (BP, N) int32 key block: one-hot /
     histogram / prefix-sum, then index mapping.
 
-    Factored out of :func:`_rank_block` so the multi-variant BT kernel
-    (``bt_variants.py``) can derive several bucketings from ONE popcount
-    pass without duplicating the counting-sort machinery.  Returns the
+    Factored out of :func:`_rank_block` so the multi-axis BT kernel
+    (``axes.py``) can derive several bucketings from ONE popcount pass
+    without duplicating the counting-sort machinery.  Returns the
     (BP, N) int32 ``rank`` (stable counting-sort output addresses).
     """
     bp, n = key.shape
@@ -78,9 +78,9 @@ def _rank_block(
     """Stages 1-3 of the PSU on one (BP, N) int32 block: popcount (+ APP
     bucket encoder), one-hot / histogram / prefix-sum, index mapping.
 
-    Shared between the standalone sort kernel below and the fused TX
-    pipeline (``psu_stream.py``), so the key derivation cannot drift between
-    them.  Returns the (BP, N) int32 ``rank`` (stable counting-sort output
+    Shared between the standalone sort kernel below and the multi-axis BT
+    core (``axes.py``), so the key derivation cannot drift between them.
+    Returns the (BP, N) int32 ``rank`` (stable counting-sort output
     addresses).
     """
     # --- popcount stage (+ APP bucket encoder) ---

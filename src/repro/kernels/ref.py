@@ -110,7 +110,7 @@ def variant_order_ref(
     the ``bt_variants`` kernel, as a pure-jnp (P, N) permutation.
 
     ``variant`` is a ``(key, k, descending)`` triple
-    (``repro.kernels.bt_variants.Variant``).  Built only from
+    (``repro.kernels.Variant``).  Built only from
     ``repro.core`` primitives so the kernel tests pin against the paper's
     reference dataflow.
     """
@@ -211,7 +211,7 @@ def bt_codecs_ref(
     composition on the whole stream.
 
     ``configs`` are ``(key, k, descending, codec, partition)`` tuples
-    (``repro.kernels.bt_codecs.CodecVariant``).  Returns int32 (C, 3)
+    (``repro.kernels.CodecVariant``).  Returns int32 (C, 3)
     per-config (input-side, weight-side, invert-line) totals, matching
     ``repro.kernels.bt_count_codecs``.
     """

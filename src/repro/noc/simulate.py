@@ -308,8 +308,11 @@ def stack_link_streams(
 ) -> tuple[jax.Array, tuple[int, ...]]:
     """Stack jagged (T_l, lanes) streams to (L, T_max, lanes) uint8.
 
-    Shorter streams are padded with copies of their last flit: a repeated
-    flit flips no bits, so the batched kernel's per-link totals are exact.
+    Shorter streams are padded with copies of their last flit and the real
+    flit counts are returned alongside.  Since the unified kernel masks
+    everything past each link's length (DESIGN.md §12), the padding value
+    is no longer load-bearing — a repeated flit merely keeps the padded
+    tensor self-consistent for callers that inspect it.
     """
     if not streams:
         return jnp.zeros((0, 1, lanes), jnp.uint8), ()
@@ -351,7 +354,10 @@ def simulate_noc(
     if ls.link_ids:
         bt = np.asarray(
             bt_count_links(
-                ls.streams, input_lanes=spec.input_lanes, interpret=interpret
+                ls.streams,
+                input_lanes=spec.input_lanes,
+                lengths=ls.lengths,
+                interpret=interpret,
             )
         )
         for (lid, length, aux, (bi, bw)) in zip(
