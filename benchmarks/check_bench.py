@@ -1,0 +1,60 @@
+"""Gate on the bench trajectory (the CI bench-smoke check step).
+
+After ``python -m benchmarks.run --json``, every module in
+``benchmarks.run.MODULES`` must have written a ``BENCH_<module>.json``
+with at least one row and no recorded failure — a module that silently
+produced nothing is as much a regression as one that raised.
+
+Usage: ``python -m benchmarks.check_bench [dir]`` (default: cwd, the
+directory the JSONs were written to).  Exits non-zero listing every
+missing/failed module.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+from .run import MODULES
+
+
+def check(root: str = ".") -> list[str]:
+    """Problem strings for the trajectory under ``root`` (empty = clean)."""
+    problems = []
+    for name in MODULES:
+        path = os.path.join(root, f"BENCH_{name}.json")
+        if not os.path.exists(path):
+            problems.append(f"{name}: missing {path} (module produced no JSON)")
+            continue
+        with open(path) as f:
+            payload = json.load(f)
+        if payload.get("failed"):
+            problems.append(f"{name}: {payload['failed']}")
+            continue
+        rows = payload.get("rows", [])
+        if not rows:
+            problems.append(f"{name}: JSON has no rows")
+            continue
+        bad = [
+            str(r.get("name", "?"))
+            for r in rows
+            if "FAILED:" in f"{r.get('name', '')},{r.get('derived', '')}"
+        ]
+        if bad:
+            problems.append(f"{name}: FAILED rows: {', '.join(bad)}")
+    return problems
+
+
+def main() -> None:
+    root = sys.argv[1] if len(sys.argv) > 1 else "."
+    problems = check(root)
+    if problems:
+        raise SystemExit(
+            "bench trajectory check failed:\n  " + "\n  ".join(problems)
+        )
+    print(f"bench trajectory OK: all {len(MODULES)} module JSONs present")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,12 +1,20 @@
-"""Microbenchmarks of the Pallas kernels (interpret mode on CPU; on-TPU
-these compile to real kernels — the numbers here track algorithmic cost and
-regression, not TPU throughput).
+"""Microbenchmarks of the BT/PSU kernels across the execution backends
+(DESIGN.md §13): ``compiled`` jnp (the CPU/GPU production default),
+``interpret`` (the Pallas interpreter, kept as an explicit validation
+switch), and ``pallas`` (the real TPU kernel, timed only when a TPU is
+attached).
 
 Includes the fused-vs-unfused TX-pipeline comparison: the unfused path is
 the seed's three-step ordered-BT measurement (``psu_sort`` launch -> host
 gather + flit pack -> ``bt_count`` launch), the fused path is the single
 ``psu_stream`` launch.  Launch counts are measured from the traced jaxpr
-(every ``pallas_call`` equation, recursively), not asserted by hand.
+(every ``pallas_call`` equation, recursively), not asserted by hand —
+they are the cross-backend invariant.  Wall time is reported PER BACKEND
+(the ``kernel/tx_fused/<backend>`` rows): an earlier revision compared
+fused-vs-unfused wall clock measured in interpret mode, which times the
+Python interpreter rather than the kernels, and that framing is gone.
+``benchmarks/run.py --json`` persists these rows as the wall-clock
+trajectory (``BENCH_kernel_bench.json``).
 """
 
 from __future__ import annotations
@@ -97,8 +105,28 @@ def run(
     rows.append((
         f"kernel/tx_fused/P{p}xN{n}", us_f,
         f"pallas_launches={lf} (one launch, {blocks} grid steps = 1/block; "
-        f"wall {us_u / max(us_f, 1e-9):.2f}x vs unfused on this backend)",
+        f"launch count is the claim — per-backend wall rows below)",
     ))
+
+    # --- the SAME fused measurement on every available backend ---
+    # (bit-exact by construction; these rows are the wall-clock trajectory
+    # the BENCH_kernel_bench.json artifact tracks)
+    backends = ["compiled", "interpret"]
+    if jax.default_backend() == "tpu":
+        backends.insert(0, "pallas")
+    wall = {}
+    for be in backends:
+        fn = lambda a, b, be=be: psu_stream(a, b, k=4, backend=be).bt_input
+        wall[be] = _time(fn, x, w, iters=1 if be == "interpret" else 3)
+    for be in backends:
+        if be == "interpret":
+            note = "pallas interpreter — validation switch, not a perf path"
+        else:
+            note = (
+                f"{wall['interpret'] / max(wall[be], 1e-9):.1f}x vs "
+                f"interpret wall, bit-exact"
+            )
+        rows.append((f"kernel/tx_fused/{be}/P{p}xN{n}", wall[be], note))
 
     s = jnp.asarray(rng.integers(0, 256, (bt_flits, 16), dtype=np.uint8))
     us = _time(bt_count, s)

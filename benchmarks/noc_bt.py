@@ -13,10 +13,11 @@ Three report groups (DESIGN.md §9):
     on the Pallas grid, ONE launch for the whole fabric) against looping
     the single-stream ``bt_count`` kernel per link (two launches per link,
     one per lane side).  Launch counts are read from the traced jaxpr, not
-    asserted by hand; wall time is reported for reference only — on CPU
-    interpret mode it tracks the Python interpreter, not TPU dispatch, and
-    can favor either path depending on shape (same caveat as
-    ``kernel_bench``'s fused-vs-unfused row: launches are the claim).
+    asserted by hand; wall time is reported for reference only on whatever
+    backend ``repro.kernels.default_backend()`` resolves (DESIGN.md §13 —
+    compiled jnp on CPU) and can favor either path depending on shape
+    (same caveat as ``kernel_bench``'s fused-vs-unfused rows: launches are
+    the claim).
 """
 
 from __future__ import annotations

@@ -10,79 +10,115 @@ derived`` CSV (the harness contract).
   noc_bt           -> §V NoC fabric   (per-link BT across topologies/hops)
   dse_sweep        -> design-space Pareto fronts (area x BT x latency)
   codec_bt         -> ordering vs coding vs composed (repro.codec tables)
-  kernel_bench     -> Pallas kernel microbenchmarks
+  kernel_bench     -> kernel microbenchmarks (per-backend wall rows)
   roofline_report  -> deliverable (g) tables from the dry-run records
 
-Usage: ``python -m benchmarks.run [module ...]`` runs the named modules in
-registry order (no names = all); ``--list`` prints the valid names.  Set
-REPRO_BENCH_TINY=1 to run each module at its smoke-test shape (a module's
-optional ``TINY_KWARGS`` dict) — the CI benchmark smoke step.
+Usage: ``python -m benchmarks.run [--json] [module ...]`` runs the named
+modules in registry order (no names = all); ``--list`` prints the valid
+names.  Set REPRO_BENCH_TINY=1 to run each module at its smoke-test shape
+(a module's optional ``TINY_KWARGS`` dict) — the CI benchmark smoke step.
+
+``--json`` additionally writes one ``BENCH_<module>.json`` per module run
+to the current directory: the CSV rows plus the resolved kernel backend
+(DESIGN.md §13), the jax platform, the run kwargs (the shapes) and the
+module wall time.  CI uploads these as the persistent wall-clock
+trajectory and ``benchmarks.check_bench`` gates on them.
 """
 
 from __future__ import annotations
 
+import importlib
+import json
 import os
 import sys
 import time
 
+# The registry: ``--list`` order, run order, and the set of JSON artifacts
+# ``benchmarks.check_bench`` requires.
+MODULES = (
+    "table1_bt",
+    "fig5_area",
+    "fig7_power",
+    "lenet_workload",
+    "arch_bt",
+    "noc_bt",
+    "dse_sweep",
+    "codec_bt",
+    "kernel_bench",
+    "roofline_report",
+)
+
+
+def _write_json(name: str, payload: dict) -> None:
+    with open(f"BENCH_{name}.json", "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+
 
 def main() -> None:
-    from . import (
-        arch_bt,
-        codec_bt,
-        dse_sweep,
-        fig5_area,
-        fig7_power,
-        kernel_bench,
-        lenet_workload,
-        noc_bt,
-        roofline_report,
-        table1_bt,
-    )
-
-    mods = [
-        ("table1_bt", table1_bt),
-        ("fig5_area", fig5_area),
-        ("fig7_power", fig7_power),
-        ("lenet_workload", lenet_workload),
-        ("arch_bt", arch_bt),
-        ("noc_bt", noc_bt),
-        ("dse_sweep", dse_sweep),
-        ("codec_bt", codec_bt),
-        ("kernel_bench", kernel_bench),
-        ("roofline_report", roofline_report),
-    ]
     args = sys.argv[1:]
+    emit_json = "--json" in args
+    args = [a for a in args if a != "--json"]
     if "--list" in args:
-        for name, _ in mods:
+        for name in MODULES:
             print(name)
         return
-    valid = ", ".join(name for name, _ in mods)
     names = dict.fromkeys(args)  # dedup, keep request order for the error
-    unknown = [a for a in names if a not in dict(mods)]
+    unknown = [a for a in names if a not in MODULES]
     if unknown:
         listed = ", ".join(repr(a) for a in unknown)
         raise SystemExit(
             f"unknown benchmark module{'s' if len(unknown) > 1 else ''} "
-            f"{listed}; valid names: {valid}"
+            f"{listed}; valid names: {', '.join(MODULES)}"
         )
+
+    import jax
+
+    from repro.kernels import default_backend
+
     tiny = os.environ.get("REPRO_BENCH_TINY", "") not in ("", "0")
     print("name,us_per_call,derived")
     failures = 0
-    for name, mod in mods:
+    for name in MODULES:
         if names and name not in names:
             continue
+        mod = importlib.import_module(f".{name}", __package__)
+        kwargs = getattr(mod, "TINY_KWARGS", {}) if tiny else {}
+        meta = {
+            "module": name,
+            "backend": default_backend(),
+            "platform": jax.default_backend(),
+            "tiny": tiny,
+            "kwargs": kwargs,
+        }
         t0 = time.monotonic()
         try:
-            kwargs = getattr(mod, "TINY_KWARGS", {}) if tiny else {}
             rows = mod.run(**kwargs)
         except Exception as e:  # keep the harness running; report the failure
-            print(f"{name},0,FAILED: {type(e).__name__}: {e}")
+            msg = f"FAILED: {type(e).__name__}: {e}"
+            print(f"{name},0,{msg}")
             failures += 1
+            if emit_json:
+                _write_json(name, {
+                    **meta,
+                    "wall_s": round(time.monotonic() - t0, 3),
+                    "failed": msg,
+                    "rows": [],
+                })
             continue
+        dt = time.monotonic() - t0
         for rname, us, derived in rows:
             print(f'{rname},{us:.2f},"{derived}"')
-        print(f"# {name} done in {time.monotonic() - t0:.1f}s", file=sys.stderr)
+        if emit_json:
+            _write_json(name, {
+                **meta,
+                "wall_s": round(dt, 3),
+                "rows": [
+                    {"name": r, "us_per_call": round(us, 2), "derived": d}
+                    for r, us, d in rows
+                ],
+            })
+        print(f"# {name} done in {dt:.1f}s", file=sys.stderr)
     if failures:
         raise SystemExit(f"{failures} benchmark modules failed")
 

@@ -93,6 +93,8 @@ def compare_streams(
     workload: str = "stream",
     block_packets: int = 64,
     interpret: bool | None = None,
+    backend: str | None = None,
+    chunk_packets: int | None = None,
 ) -> tuple[ComparisonRow, ...]:
     """Score every (ordering, codec) pair on the same packet streams.
 
@@ -110,7 +112,10 @@ def compare_streams(
       uncoded baseline (always measured, prepended if absent) has
       ``bt_reduction == 0`` and everything else is relative to it, *net*
       of invert-line overhead.  All pairs are measured by ONE
-      ``bt_count_codecs`` launch per stream.
+      ``bt_count_codecs`` launch per stream.  ``backend`` selects the
+      kernel execution path (pallas | compiled | interpret, DESIGN.md
+      §13); ``chunk_packets`` streams each measurement in fixed-size
+      packet chunks.
     """
     power = power if power is not None else LinkPowerModel()
     pairs = [(_as_variant(o), c) for o in orderings for c in codecs]
@@ -145,6 +150,8 @@ def compare_streams(
                 input_lanes=lanes,
                 block_packets=block_packets,
                 interpret=interpret,
+                backend=backend,
+                chunk_packets=chunk_packets,
             ),
             dtype=np.int64,
         )

@@ -218,6 +218,8 @@ def _measure_grid(
     *,
     interpret: bool | None,
     block_packets: int,
+    backend: str | None = None,
+    chunk_packets: int | None = None,
 ) -> tuple[
     dict[tuple[int, CodecVariant], tuple[int, int]],
     dict[tuple[int, str, CodecVariant], int],
@@ -247,6 +249,8 @@ def _measure_grid(
                 input_lanes=workload.lanes,
                 block_packets=block_packets,
                 interpret=interpret,
+                backend=backend,
+                chunk_packets=chunk_packets,
             ),
             dtype=np.int64,
         )  # (L, C, 3)
@@ -311,6 +315,8 @@ def evaluate_grid(
     power: LinkPowerModel | None = None,
     interpret: bool | None = None,
     block_packets: int = 64,
+    backend: str | None = None,
+    chunk_packets: int | None = None,
 ) -> tuple[Evaluation, ...]:
     """Evaluate every design point of a grid against one workload.
 
@@ -319,6 +325,11 @@ def evaluate_grid(
     links and (ordering, codec) configs ride ONE multi-axis launch, with
     distinct key widths split into one launch per width (the popcount
     mask is per width).
+
+    ``backend`` selects the kernel execution path (pallas | compiled |
+    interpret, DESIGN.md §13) and ``chunk_packets`` streams the packet
+    axis in fixed-size chunks (``repro.kernels.bt_count_axes``) — both
+    default to the session/platform resolution.
     """
     points = tuple(points)
     if not points:
@@ -328,7 +339,12 @@ def evaluate_grid(
     lanes = workload.lanes
 
     bt_tab, noc_tab, topo_links = _measure_grid(
-        points, workload, interpret=interpret, block_packets=block_packets
+        points,
+        workload,
+        interpret=interpret,
+        block_packets=block_packets,
+        backend=backend,
+        chunk_packets=chunk_packets,
     )
     num_flits = workload.num_flits
 

@@ -11,23 +11,31 @@
 #                 of this kernel.
 #   btcount.py  - bit-transition counting over one flit stream (the metric)
 #   quantize.py - int8 egress quantizer for the compressed all-reduce path
-# ops.py holds the jit'd wrappers (padding, inter-block fold, interpret
-# switch), ref.py the pure-jnp oracles.
+# backend.py holds the three-way backend dispatch (pallas | compiled |
+# interpret, DESIGN.md §13), ops.py the public wrappers (padding,
+# inter-block fold, chunked streaming, link-axis sharding), ref.py the
+# pure-jnp oracles.
 from .ops import (
+    BACKEND_ENV_VAR,
+    BACKENDS,
     CodecVariant,
     PsuStreamResult,
     Variant,
     bt_count,
     bt_count_axes,
+    bt_count_axes_sharded,
     bt_count_codecs,
     bt_count_links,
     bt_count_variants,
+    default_backend,
     default_interpret,
+    force_default_backend,
     pallas_launch_count,
     psu_reorder,
     psu_sort,
     psu_stream,
     quantize_egress,
+    resolve_backend,
 )
 
 __all__ = [
@@ -37,6 +45,7 @@ __all__ = [
     "PsuStreamResult",
     "bt_count",
     "bt_count_axes",
+    "bt_count_axes_sharded",
     "bt_count_links",
     "bt_count_variants",
     "bt_count_codecs",
@@ -44,5 +53,10 @@ __all__ = [
     "CodecVariant",
     "quantize_egress",
     "default_interpret",
+    "default_backend",
+    "resolve_backend",
+    "force_default_backend",
+    "BACKENDS",
+    "BACKEND_ENV_VAR",
     "pallas_launch_count",
 ]

@@ -55,6 +55,7 @@ from repro.core.coding import (
     sign_magnitude_encode_bytes,
 )
 
+from .backend import default_backend
 from .psu import _popcount_bits, _rank_from_keys
 
 __all__ = [
@@ -66,6 +67,7 @@ __all__ = [
     "validate_codec_variants",
     "max_partitions",
     "bt_axes_pallas",
+    "bt_axes_compiled",
 ]
 
 VARIANT_KEYS = ("none", "column_major", "acc", "app")
@@ -201,16 +203,10 @@ def _bus_invert_bits(hd: jax.Array, lbits: int) -> tuple[jax.Array, jax.Array]:
     return v0, v0 ^ notie
 
 
-def _bt_axes_kernel(
-    x_ref,
-    w_ref,
-    valid_ref,
-    bt_ref,
-    edge_ref,
-    inv_edge_ref,
-    order_ref=None,
-    rank_ref=None,
-    stream_ref=None,
+def _axes_block(
+    x,
+    w,
+    remaining_rows,
     *,
     configs: tuple[CodecVariant, ...],
     width: int,
@@ -221,20 +217,32 @@ def _bt_axes_kernel(
     pmax: int,
     emit_stream: bool,
 ):
-    """Measure one (link, packet-block) cell under every static config."""
-    x = x_ref[0].astype(jnp.int32)  # (BP, N)
-    w = w_ref[0].astype(jnp.int32)
+    """Measure one (link, packet-block) cell under every static config.
+
+    The backend-shared block math (DESIGN.md §13): the Pallas kernel calls
+    this from its grid body, the compiled jnp backend ``vmap``s it over the
+    link axis and ``lax.map``s it over packet blocks — the two paths run
+    the SAME traced operations, so they are bit-exact by construction.
+
+    Args:
+      x / w: (BP, N) int32 packet payloads of this block.
+      remaining_rows: int32 scalar — this link's valid flit rows minus the
+        rows consumed by earlier blocks (may be <= 0: fully-padded block).
+
+    Returns:
+      (bt (C, 2, PMAX, 3), edge (C, 2, 2, lanes), inv (C, 2, 2, PMAX))
+      int32 partials, plus (order, rank, stream) with ``emit_stream``.
+    """
+    x = x.astype(jnp.int32)  # (BP, N)
+    w = w.astype(jnp.int32)
     bp, n = x.shape
     flits = n // input_lanes
     lanes = input_lanes + weight_lanes
     rows = bp * flits
-    g = pl.program_id(1)
 
     # --- the ONE masking convention: rows at or past this link's valid
     # count contribute nothing (data BT, aux BT, edge flits alike) ---
-    valid = jnp.minimum(
-        jnp.int32(rows), valid_ref[0, 0] * flits - g * jnp.int32(rows)
-    )
+    valid = jnp.minimum(jnp.int32(rows), remaining_rows)
     row_idx = lax.broadcasted_iota(jnp.int32, (rows, 1), 0)
     bmask = (row_idx[1:] < valid).astype(jnp.int32)  # (rows-1, 1) boundaries
 
@@ -253,6 +261,7 @@ def _bt_axes_kernel(
 
     # --- one reordered + packed stream per unique ordering ---
     streams: dict[Variant, jax.Array] = {}
+    emitted = None  # (order, rank, stream) of configs[0] in emit_stream mode
     for cfg in configs:
         if cfg.ordering in streams:
             continue
@@ -306,12 +315,11 @@ def _bt_axes_kernel(
         stream = flit_block.reshape(rows, lanes)
         streams[cfg.ordering] = stream
         if emit_stream and cfg.ordering == configs[0].ordering:
-            order_ref[0] = order
-            rank_ref[0] = rank
-            stream_ref[0] = stream
+            emitted = (order, rank, stream)
 
     # --- codec + BT-accumulate per config on the shared streams ---
-    for ci, cfg in enumerate(configs):
+    bts, edge_rows, inv_rows = [], [], []
+    for cfg in configs:
         stream = streams[cfg.ordering]
         zero_inv = jnp.zeros((2, 2, pmax), jnp.int32)
 
@@ -334,9 +342,9 @@ def _bt_axes_kernel(
             )
             part = jnp.broadcast_to(row, (2, 1, 3))
             edge = jnp.stack([wire[0], _last_valid(wire)])  # (2, lanes)
-            bt_ref[0, 0, ci] = jnp.pad(part, ((0, 0), (0, pmax - 1), (0, 0)))
-            edge_ref[0, 0, ci] = jnp.broadcast_to(edge, (2, 2, lanes))
-            inv_edge_ref[0, 0, ci] = zero_inv
+            bts.append(jnp.pad(part, ((0, 0), (0, pmax - 1), (0, 0))))
+            edge_rows.append(jnp.broadcast_to(edge, (2, 2, lanes)))
+            inv_rows.append(zero_inv)
 
         elif cfg.codec == "transition":
             # wire_t ^ wire_{t-1} == data_t: boundary flips = data popcount
@@ -354,9 +362,9 @@ def _bt_axes_kernel(
             part = jnp.broadcast_to(row, (2, 1, 3))
             # edges carry DATA flits (the wrapper adds first-flit popcounts)
             edge = jnp.stack([stream[0], _last_valid(stream)])
-            bt_ref[0, 0, ci] = jnp.pad(part, ((0, 0), (0, pmax - 1), (0, 0)))
-            edge_ref[0, 0, ci] = jnp.broadcast_to(edge, (2, 2, lanes))
-            inv_edge_ref[0, 0, ci] = zero_inv
+            bts.append(jnp.pad(part, ((0, 0), (0, pmax - 1), (0, 0))))
+            edge_rows.append(jnp.broadcast_to(edge, (2, 2, lanes)))
+            inv_rows.append(zero_inv)
 
         else:  # bus_invert
             npart, pw = _partitions(lanes, cfg.partition)
@@ -382,13 +390,41 @@ def _bt_axes_kernel(
                 wire = (d ^ (v[:, :, None] * 0xFF)).reshape(rows, lanes)
                 edges.append(jnp.stack([wire[0], _last_valid(wire)]))
                 inv_edges.append(jnp.stack([v[0], _last_valid(v)]))
-            bt_ref[0, 0, ci] = jnp.pad(
+            bts.append(jnp.pad(
                 jnp.stack(parts), ((0, 0), (0, pmax - npart), (0, 0))
-            )
-            edge_ref[0, 0, ci] = jnp.stack(edges)
-            inv_edge_ref[0, 0, ci] = jnp.pad(
+            ))
+            edge_rows.append(jnp.stack(edges))
+            inv_rows.append(jnp.pad(
                 jnp.stack(inv_edges), ((0, 0), (0, 0), (0, pmax - npart))
-            )
+            ))
+
+    out = (jnp.stack(bts), jnp.stack(edge_rows), jnp.stack(inv_rows))
+    return out + emitted if emit_stream else out
+
+
+def _bt_axes_kernel(
+    x_ref,
+    w_ref,
+    valid_ref,
+    bt_ref,
+    edge_ref,
+    inv_edge_ref,
+    order_ref=None,
+    rank_ref=None,
+    stream_ref=None,
+    **static,
+):
+    """Pallas grid body: one (link, packet-block) cell via ``_axes_block``."""
+    bp, n = x_ref.shape[1:]
+    flits = n // static["input_lanes"]
+    rows = jnp.int32(bp * flits)
+    remaining = valid_ref[0, 0] * flits - pl.program_id(1) * rows
+    out = _axes_block(x_ref[0], w_ref[0], remaining, **static)
+    bt_ref[0, 0] = out[0]
+    edge_ref[0, 0] = out[1]
+    inv_edge_ref[0, 0] = out[2]
+    if static["emit_stream"]:
+        order_ref[0], rank_ref[0], stream_ref[0] = out[3:]
 
 
 def bt_axes_pallas(
@@ -404,7 +440,7 @@ def bt_axes_pallas(
     pack: str = "lane",
     block_packets: int = 64,
     emit_stream: bool = False,
-    interpret: bool = False,
+    interpret: bool | None = None,
 ):
     """Per-(link, config) coded BT partials of a (L, P, N) batch, ONE launch.
 
@@ -437,37 +473,15 @@ def bt_axes_pallas(
         * with ``emit_stream``: int32 (L, P, N) order, (L, P, N) rank and
           (L, P*F, lanes) packed stream.
     """
+    configs, split_lanes = _validate_axes_call(
+        inputs, valid, configs=configs, width=width, input_lanes=input_lanes,
+        weight_lanes=weight_lanes, split_lanes=split_lanes, pack=pack,
+        block_packets=block_packets, emit_stream=emit_stream,
+    )
+    if interpret is None:
+        interpret = default_backend() != "pallas"
     links, p, n = inputs.shape
     lanes = input_lanes + weight_lanes
-    configs = validate_codec_variants(configs, width, lanes)
-    if p % block_packets != 0:
-        raise ValueError(f"P={p} not a multiple of block_packets={block_packets}")
-    if n % input_lanes != 0:
-        raise ValueError(f"packet size {n} not divisible by input_lanes={input_lanes}")
-    if weight_lanes not in (0, input_lanes):
-        raise ValueError(
-            "the multi-axis kernel needs a symmetric (or absent) weight "
-            f"side: weight_lanes={weight_lanes} vs input_lanes={input_lanes}"
-        )
-    if pack not in ("lane", "row"):
-        raise ValueError(f"multi-axis kernel supports pack 'lane'|'row', got {pack!r}")
-    if split_lanes is None:
-        split_lanes = input_lanes
-    if not 0 <= split_lanes <= lanes:
-        raise ValueError(f"split_lanes={split_lanes} outside the {lanes}-lane flit")
-    if emit_stream:
-        if len(configs) != 1 or configs[0].codec != "none":
-            raise ValueError(
-                "emit_stream needs exactly one uncoded config, got "
-                f"{configs}"
-            )
-        if configs[0].key not in ("acc", "app"):
-            raise ValueError(
-                "emit_stream needs an 'acc'/'app' ordering (the fused TX "
-                f"pipeline), got {configs[0].key!r}"
-            )
-    if valid.shape != (links,):
-        raise ValueError(f"valid must be ({links},), got {tuple(valid.shape)}")
     nc = len(configs)
     flits = n // input_lanes
     pmax = max_partitions(configs, lanes)
@@ -523,4 +537,124 @@ def bt_axes_pallas(
         inputs.astype(jnp.int32),
         weights.astype(jnp.int32),
         valid.astype(jnp.int32).reshape(links, 1),
+    )
+
+
+def _validate_axes_call(
+    inputs,
+    valid,
+    *,
+    configs,
+    width,
+    input_lanes,
+    weight_lanes,
+    split_lanes,
+    pack,
+    block_packets,
+    emit_stream,
+):
+    """The multi-axis launch contract, shared by every backend."""
+    links, p, n = inputs.shape
+    lanes = input_lanes + weight_lanes
+    configs = validate_codec_variants(configs, width, lanes)
+    if p % block_packets != 0:
+        raise ValueError(f"P={p} not a multiple of block_packets={block_packets}")
+    if n % input_lanes != 0:
+        raise ValueError(f"packet size {n} not divisible by input_lanes={input_lanes}")
+    if weight_lanes not in (0, input_lanes):
+        raise ValueError(
+            "the multi-axis kernel needs a symmetric (or absent) weight "
+            f"side: weight_lanes={weight_lanes} vs input_lanes={input_lanes}"
+        )
+    if pack not in ("lane", "row"):
+        raise ValueError(f"multi-axis kernel supports pack 'lane'|'row', got {pack!r}")
+    if split_lanes is None:
+        split_lanes = input_lanes
+    if not 0 <= split_lanes <= lanes:
+        raise ValueError(f"split_lanes={split_lanes} outside the {lanes}-lane flit")
+    if emit_stream:
+        if len(configs) != 1 or configs[0].codec != "none":
+            raise ValueError(
+                "emit_stream needs exactly one uncoded config, got "
+                f"{configs}"
+            )
+        if configs[0].key not in ("acc", "app"):
+            raise ValueError(
+                "emit_stream needs an 'acc'/'app' ordering (the fused TX "
+                f"pipeline), got {configs[0].key!r}"
+            )
+    if valid.shape != (links,):
+        raise ValueError(f"valid must be ({links},), got {tuple(valid.shape)}")
+    return configs, split_lanes
+
+
+def bt_axes_compiled(
+    inputs: jax.Array,
+    weights: jax.Array,
+    valid: jax.Array,
+    *,
+    configs: tuple[CodecVariant, ...],
+    width: int = 8,
+    input_lanes: int = 8,
+    weight_lanes: int = 0,
+    split_lanes: int | None = None,
+    pack: str = "lane",
+    block_packets: int = 64,
+    emit_stream: bool = False,
+):
+    """The compiled (pure-jnp) backend of the multi-axis measurement.
+
+    Same contract, arguments and outputs as :func:`bt_axes_pallas`, but the
+    block math runs as ordinary XLA: ``vmap`` over the link axis,
+    ``lax.map`` over packet blocks (sequential, so the per-block
+    permutation/one-hot intermediates never materialize for more than one
+    block — the same VMEM discipline the kernel's grid gives for free).
+    Because both backends execute the SAME ``_axes_block`` trace, they are
+    bit-exact; ``tests/test_backends.py`` pins it per entry point.
+    """
+    configs, split_lanes = _validate_axes_call(
+        inputs, valid, configs=configs, width=width, input_lanes=input_lanes,
+        weight_lanes=weight_lanes, split_lanes=split_lanes, pack=pack,
+        block_packets=block_packets, emit_stream=emit_stream,
+    )
+    links, p, n = inputs.shape
+    lanes = input_lanes + weight_lanes
+    flits = n // input_lanes
+    pmax = max_partitions(configs, lanes)
+    gblocks = p // block_packets
+    rows = block_packets * flits
+    block = functools.partial(
+        _axes_block,
+        configs=configs,
+        width=width,
+        input_lanes=input_lanes,
+        weight_lanes=weight_lanes,
+        split_lanes=split_lanes,
+        pack=pack,
+        pmax=pmax,
+        emit_stream=emit_stream,
+    )
+    xb = jnp.moveaxis(
+        inputs.astype(jnp.int32).reshape(links, gblocks, block_packets, n), 1, 0
+    )
+    wb = jnp.moveaxis(
+        weights.astype(jnp.int32).reshape(links, gblocks, block_packets, n), 1, 0
+    )
+    remaining = (
+        valid.astype(jnp.int32)[None, :] * flits
+        - jnp.arange(gblocks, dtype=jnp.int32)[:, None] * rows
+    )  # (G, L)
+    per_block = jax.vmap(block)  # over the link axis
+    outs = lax.map(lambda args: per_block(*args), (xb, wb, remaining))
+    bt, edge, inv = (jnp.moveaxis(o, 1, 0) for o in outs[:3])  # (L, G, ...)
+    if not emit_stream:
+        return bt, edge, inv
+    order, rank, stream = (jnp.moveaxis(o, 1, 0) for o in outs[3:])
+    return (
+        bt,
+        edge,
+        inv,
+        order.reshape(links, p, n),
+        rank.reshape(links, p, n),
+        stream.reshape(links, p * flits, lanes),
     )

@@ -1,0 +1,105 @@
+"""Backend dispatch for the kernel entry points (DESIGN.md §13).
+
+Every BT entry point in ``ops.py`` executes on one of three backends:
+
+  * ``"pallas"``    — the real compiled Pallas kernel.  Only meaningful on
+    TPU; on CPU/GPU lowering the TPU kernel fails, which is exactly the
+    accident this module exists to prevent.
+  * ``"compiled"``  — a jit-compiled pure-``jnp`` implementation that runs
+    the SAME block math as the kernel (``axes.py`` factors the body into a
+    backend-shared function), vectorized over the link axis and scanned
+    over packet blocks.  Bit-exact with the kernel by construction; the
+    production path on CPU/GPU.
+  * ``"interpret"`` — the Pallas interpreter (kernel body executed step by
+    step off-TPU).  Kept ONLY as an explicit validation switch; the entry
+    points run it eagerly (un-jitted) so per-op execution and debug prints
+    stay observable, which makes it orders of magnitude slower than
+    ``"compiled"`` — every wall-clock number it produces is a measurement
+    of the interpreter, not the code.
+
+Resolution order for every entry point:
+
+  1. an explicit ``backend=`` keyword,
+  2. the legacy ``interpret=`` bool (True -> "interpret", False -> "pallas"),
+  3. a :func:`force_default_backend` context (``pallas_launch_count`` pins
+     "interpret" while tracing so launch counts stay the cross-backend
+     invariant),
+  4. the ``REPRO_KERNEL_BACKEND`` environment variable,
+  5. platform default: "pallas" on TPU, "compiled" everywhere else.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import os
+
+import jax
+
+__all__ = [
+    "BACKENDS",
+    "BACKEND_ENV_VAR",
+    "default_backend",
+    "resolve_backend",
+    "force_default_backend",
+]
+
+BACKENDS = ("pallas", "compiled", "interpret")
+
+BACKEND_ENV_VAR = "REPRO_KERNEL_BACKEND"
+
+_FORCED: list[str] = []  # innermost force_default_backend context, if any
+
+
+def _check(name: str, source: str) -> str:
+    if name not in BACKENDS:
+        raise ValueError(
+            f"unknown kernel backend {name!r} (from {source}); "
+            f"choose from {BACKENDS}"
+        )
+    return name
+
+
+def default_backend() -> str:
+    """The backend an entry point uses when none is requested.
+
+    A :func:`force_default_backend` context wins, then the
+    ``REPRO_KERNEL_BACKEND`` environment variable, then the platform
+    default ("pallas" on TPU, "compiled" on CPU/GPU).  Read at call time,
+    so tests and harnesses can flip the environment per call.
+    """
+    if _FORCED:
+        return _FORCED[-1]
+    env = os.environ.get(BACKEND_ENV_VAR, "")
+    if env:
+        return _check(env, f"${BACKEND_ENV_VAR}")
+    return "pallas" if jax.default_backend() == "tpu" else "compiled"
+
+
+def resolve_backend(backend: str | None, interpret: bool | None) -> str:
+    """One resolution rule for every entry point's (backend, interpret) pair.
+
+    ``backend`` wins when given; otherwise the legacy ``interpret`` bool
+    maps onto the pallas path (True -> the interpreter, False -> the real
+    kernel); otherwise :func:`default_backend`.
+    """
+    if backend is not None:
+        return _check(backend, "backend=")
+    if interpret is not None:
+        return "interpret" if interpret else "pallas"
+    return default_backend()
+
+
+@contextlib.contextmanager
+def force_default_backend(name: str):
+    """Pin the *default* backend inside the context (explicit ``backend=``
+    / ``interpret=`` arguments still win).
+
+    ``pallas_launch_count`` traces under ``force_default_backend
+    ("interpret")`` so the 1-launch claims keep measuring the pallas path
+    even where the session default is "compiled".
+    """
+    _FORCED.append(_check(name, "force_default_backend"))
+    try:
+        yield
+    finally:
+        _FORCED.pop()

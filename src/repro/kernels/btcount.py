@@ -17,9 +17,10 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .backend import default_backend
 from .psu import _popcount_bits
 
-__all__ = ["bt_count_pallas"]
+__all__ = ["bt_count_pallas", "bt_count_compiled"]
 
 
 def _bt_kernel(a_ref, b_ref, out_ref, *, width: int):
@@ -34,7 +35,7 @@ def bt_count_pallas(
     *,
     width: int = 8,
     block_rows: int = 512,
-    interpret: bool = False,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """Total bit transitions of a (T, L) flit stream (int32 scalar).
 
@@ -42,6 +43,8 @@ def bt_count_pallas(
     rows are padded (with zeros on *both* shifted views, so pads contribute
     zero) to a multiple of ``block_rows``.
     """
+    if interpret is None:
+        interpret = default_backend() != "pallas"
     t, lanes = stream.shape
     if t < 2:
         return jnp.int32(0)
@@ -64,3 +67,16 @@ def bt_count_pallas(
         interpret=interpret,
     )(a, b)
     return partials.sum()
+
+
+def bt_count_compiled(stream: jax.Array, *, width: int = 8) -> jax.Array:
+    """The compiled (pure-jnp) backend: one XOR-popcount reduction.
+
+    Same contract and result as :func:`bt_count_pallas` (exact — integer
+    popcount sums have one value).
+    """
+    t = stream.shape[0]
+    if t < 2:
+        return jnp.int32(0)
+    x = stream.astype(jnp.int32)
+    return _popcount_bits(x[1:] ^ x[:-1], width).sum().astype(jnp.int32)

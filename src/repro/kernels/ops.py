@@ -1,17 +1,28 @@
-"""Jit'd public wrappers around the Pallas kernels.
+"""Public wrappers around the kernel entry points, with backend dispatch.
 
-These handle padding/trimming, static-arg plumbing and the CPU-validation
-(interpret) switch.  ``interpret`` defaults to True when no TPU is present so
-the whole framework runs (slowly but correctly) on CPU; on TPU the compiled
-kernels are used.
-
-All four BT entry points — ``psu_stream`` (fused TX pipeline),
+Every BT entry point — ``psu_stream`` (fused TX pipeline),
 ``bt_count_links`` (per-link NoC batch), ``bt_count_variants`` (design-grid
-batch) and ``bt_count_codecs`` (codec x ordering batch) — are thin
-configurations of the ONE multi-axis kernel (``axes.py``, DESIGN.md §12):
-link axis on the grid, variant x codec axes static inside the launch, one
-in-kernel masking convention for padded rows, and one shared inter-block
-fold (:func:`_fold_axes`) for the O(G) boundary carry.
+batch), ``bt_count_codecs`` (codec x ordering batch) and the underlying
+``bt_count_axes`` — is a thin configuration of the ONE multi-axis
+measurement (``axes.py``, DESIGN.md §12) and executes on one of three
+backends (``backend.py``, DESIGN.md §13):
+
+  * ``"pallas"``    — the compiled Pallas TPU kernel (platform default on
+    TPU only);
+  * ``"compiled"``  — a jit-compiled pure-jnp path running the SAME block
+    math (``axes._axes_block``), bit-exact with the kernel and the
+    production path on CPU/GPU;
+  * ``"interpret"`` — the Pallas interpreter, kept only as an explicit
+    validation switch.
+
+Resolution: explicit ``backend=`` > legacy ``interpret=`` bool >
+``force_default_backend`` context > ``$REPRO_KERNEL_BACKEND`` > platform.
+
+The wrappers also handle padding/trimming, the shared inter-block fold
+(:func:`_fold_axes`), chunked streaming (``chunk_packets=``: a ``lax.scan``
+over fixed-size packet chunks threading the fold carry across chunk
+boundaries — O(chunk) live memory, bit-exact with the one-shot path) and a
+``shard_map``-sharded link axis (:func:`bt_count_axes_sharded`).
 """
 
 from __future__ import annotations
@@ -21,6 +32,7 @@ from typing import NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 
 from repro.core.coding import bus_invert_partitions as _partitions
@@ -28,12 +40,21 @@ from repro.core.coding import bus_invert_partitions as _partitions
 from .axes import (
     CodecVariant,
     Variant,
+    bt_axes_compiled,
     bt_axes_pallas,
+    max_partitions,
     validate_variants,
 )
-from .btcount import bt_count_pallas
-from .psu import _popcount_bits, psu_sort_pallas
-from .quantize import quantize_egress_pallas
+from .backend import (
+    BACKENDS,
+    BACKEND_ENV_VAR,
+    default_backend,
+    force_default_backend,
+    resolve_backend,
+)
+from .btcount import bt_count_compiled, bt_count_pallas
+from .psu import _popcount_bits, psu_sort_compiled, psu_sort_pallas
+from .quantize import quantize_egress_compiled, quantize_egress_pallas
 
 __all__ = [
     "psu_sort",
@@ -42,6 +63,7 @@ __all__ = [
     "PsuStreamResult",
     "bt_count",
     "bt_count_axes",
+    "bt_count_axes_sharded",
     "bt_count_links",
     "bt_count_variants",
     "bt_count_codecs",
@@ -49,19 +71,44 @@ __all__ = [
     "CodecVariant",
     "quantize_egress",
     "default_interpret",
+    "default_backend",
+    "resolve_backend",
+    "force_default_backend",
+    "BACKENDS",
+    "BACKEND_ENV_VAR",
     "pallas_launch_count",
 ]
 
 
 def default_interpret() -> bool:
-    """Interpret kernels unless running on real TPU hardware."""
-    return jax.default_backend() != "tpu"
+    """Legacy switch: True when the default backend is not the real
+    compiled Pallas kernel (i.e. anywhere off-TPU).  Kept for callers that
+    predate the three-way backend dispatch."""
+    return default_backend() != "pallas"
+
+
+def _entry(jitted, backend: str):
+    """The jit-compiled impl for the perf backends ("pallas"/"compiled");
+    the UN-jitted original for "interpret".  The Pallas interpreter is the
+    step-by-step validation path (per-op execution, debug prints); jitting
+    it would fuse the emulation into one XLA program — fast enough to pass
+    for a perf path, and hiding exactly the per-op execution it exists to
+    expose.  Inside an outer ``jax.jit`` it is traced like any eager code.
+    """
+    return jitted.__wrapped__ if backend == "interpret" else jitted
 
 
 def pallas_launch_count(fn, *args) -> int:
     """Number of ``pallas_call`` equations in the traced jaxpr of ``fn``
     (recursing through pjit/scan/etc. sub-jaxprs) — the measurement behind
-    every 1-launch claim in this repo (benchmarks and tests alike)."""
+    every 1-launch claim in this repo (benchmarks and tests alike).
+
+    Tracing runs under ``force_default_backend("interpret")`` so the
+    *pallas* path is what gets counted even where the session default is
+    "compiled" (launch counts are the cross-backend grid invariant; the
+    compiled backend would trivially trace to zero).  An explicit
+    ``backend=``/``interpret=`` inside ``fn`` still wins.
+    """
     try:  # jaxpr types' public home since jax 0.4.33
         from jax.extend import core as jcore
     except ImportError:  # older releases
@@ -86,13 +133,44 @@ def pallas_launch_count(fn, *args) -> int:
             for item in v:
                 yield from _subjaxprs(item)
 
-    return walk(jax.make_jaxpr(fn)(*args).jaxpr)
+    with force_default_backend("interpret"):
+        jaxpr = jax.make_jaxpr(fn)(*args).jaxpr
+    return walk(jaxpr)
 
 
 @partial(
     jax.jit,
-    static_argnames=("width", "k", "descending", "block_packets", "interpret"),
+    static_argnames=("width", "k", "descending", "block_packets", "backend"),
 )
+def _psu_sort(
+    packets: jax.Array,
+    *,
+    width: int,
+    k: int | None,
+    descending: bool,
+    block_packets: int,
+    backend: str,
+) -> tuple[jax.Array, jax.Array]:
+    p, n = packets.shape
+    bp = min(block_packets, max(1, p))
+    pad = (-p) % bp
+    x = jnp.pad(packets.astype(jnp.int32), ((0, pad), (0, 0)))
+    if backend == "compiled":
+        order, rank = psu_sort_compiled(
+            x, width=width, k=k, descending=descending
+        )
+    else:
+        order, rank = psu_sort_pallas(
+            x,
+            width=width,
+            k=k,
+            descending=descending,
+            block_packets=bp,
+            interpret=backend == "interpret",
+        )
+    return order[:p], rank[:p]
+
+
 def psu_sort(
     packets: jax.Array,
     width: int = 8,
@@ -100,27 +178,22 @@ def psu_sort(
     descending: bool = False,
     block_packets: int = 64,
     interpret: bool | None = None,
+    backend: str | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """(order, rank) of each packet by (approximate) popcount.
 
     Accepts any (P, N) integer array; P is padded to the kernel block size
     and trimmed on return.
     """
-    if interpret is None:
-        interpret = default_interpret()
-    p, n = packets.shape
-    bp = min(block_packets, max(1, p))
-    pad = (-p) % bp
-    x = jnp.pad(packets.astype(jnp.int32), ((0, pad), (0, 0)))
-    order, rank = psu_sort_pallas(
-        x,
+    resolved = resolve_backend(backend, interpret)
+    return _entry(_psu_sort, resolved)(
+        packets,
         width=width,
         k=k,
         descending=descending,
-        block_packets=bp,
-        interpret=interpret,
+        block_packets=block_packets,
+        backend=resolved,
     )
-    return order[:p], rank[:p]
 
 
 def psu_reorder(
@@ -129,16 +202,40 @@ def psu_reorder(
     k: int | None = None,
     descending: bool = False,
     interpret: bool | None = None,
+    backend: str | None = None,
 ) -> jax.Array:
     """Packets with elements transmitted in PSU order (gather by ``order``)."""
     order, _ = psu_sort(
-        packets, width=width, k=k, descending=descending, interpret=interpret
+        packets,
+        width=width,
+        k=k,
+        descending=descending,
+        interpret=interpret,
+        backend=backend,
     )
     return jnp.take_along_axis(packets, order, axis=-1)
 
 
 # --------------------------------------------------------------------------
-# the shared inter-block fold of the multi-axis kernel (DESIGN.md §12)
+# the shared launch + inter-block fold of the multi-axis measurement
+# (DESIGN.md §12/§13)
+
+
+def _launch_axes(x, w, valid, *, backend, **kw):
+    """One (L, P, N) multi-axis launch on the resolved backend."""
+    if backend == "compiled":
+        return bt_axes_compiled(x, w, valid, **kw)
+    return bt_axes_pallas(x, w, valid, interpret=backend == "interpret", **kw)
+
+
+def _axes_carry(nl: int, configs, lanes: int):
+    """The zero inter-chunk fold carry: nothing transmitted yet."""
+    pmax = max_partitions(configs, lanes)
+    return {
+        "started": jnp.zeros((nl,), jnp.int32),
+        "wire": jnp.zeros((len(configs), nl, lanes), jnp.int32),
+        "inv": jnp.zeros((len(configs), nl, pmax), jnp.int32),
+    }
 
 
 def _fold_axes(
@@ -146,27 +243,43 @@ def _fold_axes(
     edges: jax.Array,  # (L, G, C, 2, 2, lanes)
     inv_edges: jax.Array,  # (L, G, C, 2, 2, PMAX)
     configs: tuple[CodecVariant, ...],
-    valid_rows: jax.Array,  # (L,) real flit rows per link
+    valid_rows: jax.Array,  # (L,) real flit rows per link (this chunk)
     rows: int,  # flit rows per block
     split_lanes: int,
-) -> jax.Array:
+    carry=None,
+    return_carry: bool = False,
+):
     """Fold per-(link, block) kernel partials into (L, C, 3) totals.
 
     Block-internal boundaries are already masked in-kernel; this patches
-    the G-1 inter-block boundaries per link in O(G) jnp — stateless codecs
-    XOR adjacent edge flits, transition signaling adds each block's
-    first-flit popcount, and bus-invert carries each block's entry branch
-    from the previous block's last wire flit (``lax.scan``).  Boundaries
-    into fully-padded blocks are masked by each link's ``valid_rows``.
+    the inter-block boundaries per link in O(G) jnp — stateless codecs XOR
+    adjacent edge flits, transition signaling adds each block's first-flit
+    popcount, and bus-invert carries each block's entry branch from the
+    previous block's last wire flit (``lax.scan``).  Boundaries into
+    fully-padded blocks are masked by each link's ``valid_rows``.
+
+    ``carry`` / ``return_carry`` extend the same fold across *chunk*
+    boundaries (the ``chunk_packets`` streaming mode): the carry pytree
+    holds, per link, whether anything was transmitted yet ("started"), the
+    last wire flit per config ("wire") and the last invert-line states
+    ("inv").  With ``carry=None`` the stream starts cold — block 0 enters
+    uninverted and its first flit pays no boundary — which reproduces the
+    single-shot fold exactly.
     """
     nl, gblocks = partials.shape[:2]
     lanes = edges.shape[-1]
-    if gblocks > 1:
-        # boundary (g-1 -> g) is real iff block g has any valid row
-        bnd_mask = (
-            jnp.arange(1, gblocks, dtype=jnp.int32)[None, :] * rows
-            < valid_rows[:, None]
-        ).astype(jnp.int32)  # (L, G-1)
+    pmax = partials.shape[-2]
+    if carry is None:
+        carry = _axes_carry(nl, configs, lanes)
+    started0 = carry["started"]
+    has = (valid_rows > 0).astype(jnp.int32)
+    # block g holds >= 1 valid row of this link
+    gmask = (
+        jnp.arange(gblocks, dtype=jnp.int32)[None, :] * rows
+        < valid_rows[:, None]
+    ).astype(jnp.int32)  # (L, G)
+    # the last block holding valid rows (0 when the chunk is empty)
+    glast = jnp.clip((valid_rows + rows - 1) // rows - 1, 0, gblocks - 1)
 
     def _sides(flips):  # (..., lanes) -> (..., 2) per-side sums
         in_side = flips[..., :split_lanes].sum(-1)
@@ -177,7 +290,7 @@ def _fold_axes(
         )
         return jnp.stack([in_side, w_side], axis=-1)
 
-    totals = []
+    totals, wire_out, inv_out = [], [], []
     for ci, cfg in enumerate(configs):
         if cfg.codec == "bus_invert":
             npart, pw = _partitions(lanes, cfg.partition)
@@ -185,75 +298,179 @@ def _fold_axes(
             in_mask = (
                 jnp.arange(lanes, dtype=jnp.int32) < split_lanes
             ).astype(jnp.int32).reshape(npart, pw)
-            # block 0 enters uninverted: branch 0
-            total = partials[:, 0, ci, 0, :npart]  # (L, npart, 3)
-            if gblocks > 1:
 
-                def fold(carry, blk):
-                    carry_wire, carry_inv = carry  # (L, npart, pw), (L, npart)
-                    part_g, edge_g, inv_g, m = blk
-                    # branch-0 first wire IS the block's first data flit
-                    d_first = edge_g[:, 0, 0].reshape(nl, npart, pw)
-                    hd = _popcount_bits(d_first ^ carry_wire, 8).sum(-1)
-                    b = (2 * hd > lbits).astype(jnp.int32)  # (L, npart)
-                    first_wire = d_first ^ (b[..., None] * 0xFF)
-                    flips = _popcount_bits(carry_wire ^ first_wire, 8)
-                    bnd = jnp.stack(
-                        [
-                            (flips * in_mask).sum(-1),
-                            (flips * (1 - in_mask)).sum(-1),
-                            (carry_inv != b).astype(jnp.int32),
-                        ],
-                        axis=-1,
-                    )  # (L, npart, 3): the inter-block boundary itself
-                    sel = jnp.where(b[..., None] == 1, part_g[:, 1], part_g[:, 0])
-                    ew = edge_g[:, :, 1].reshape(nl, 2, npart, pw)
-                    new_wire = jnp.where(b[..., None] == 1, ew[:, 1], ew[:, 0])
-                    iv = inv_g[:, :, 1]  # (L, 2, npart)
-                    new_inv = jnp.where(b == 1, iv[:, 1], iv[:, 0])
-                    # links whose valid rows end before this block keep
-                    # their carry and contribute nothing
-                    m3 = m[:, None, None]
-                    new_wire = jnp.where(m3 == 1, new_wire, carry_wire)
-                    new_inv = jnp.where(m[:, None] == 1, new_inv, carry_inv)
-                    return (new_wire, new_inv), (bnd + sel) * m3
+            def fold(state, blk):
+                cw, civ, st = state  # (L,npart,pw), (L,npart), (L,)
+                part_g, edge_g, inv_g, m = blk
+                # branch-0 first wire IS the block's first data flit
+                d_first = edge_g[:, 0, 0].reshape(nl, npart, pw)
+                hd = _popcount_bits(d_first ^ cw, 8).sum(-1)
+                # entry branch; forced 0 before anything was transmitted
+                b = (2 * hd > lbits).astype(jnp.int32) * st[:, None]
+                first_wire = d_first ^ (b[..., None] * 0xFF)
+                flips = _popcount_bits(cw ^ first_wire, 8)
+                bnd = jnp.stack(
+                    [
+                        (flips * in_mask).sum(-1),
+                        (flips * (1 - in_mask)).sum(-1),
+                        (civ != b).astype(jnp.int32),
+                    ],
+                    axis=-1,
+                ) * st[:, None, None]  # no boundary into the first flit ever
+                sel = jnp.where(b[..., None] == 1, part_g[:, 1], part_g[:, 0])
+                ew = edge_g[:, :, 1].reshape(nl, 2, npart, pw)
+                new_wire = jnp.where(b[..., None] == 1, ew[:, 1], ew[:, 0])
+                iv = inv_g[:, :, 1]  # (L, 2, npart)
+                new_inv = jnp.where(b == 1, iv[:, 1], iv[:, 0])
+                # links whose valid rows end before this block keep their
+                # carry and contribute nothing
+                m3 = m[:, None, None]
+                new_wire = jnp.where(m3 == 1, new_wire, cw)
+                new_inv = jnp.where(m[:, None] == 1, new_inv, civ)
+                return (new_wire, new_inv, jnp.maximum(st, m)), (bnd + sel) * m3
 
-                carry0 = (
-                    edges[:, 0, ci, 0, 1].reshape(nl, npart, pw),
-                    inv_edges[:, 0, ci, 0, 1, :npart],
-                )
-                _, contribs = lax.scan(
-                    fold,
-                    carry0,
-                    (
-                        jnp.moveaxis(partials[:, 1:, ci, :, :npart], 1, 0),
-                        jnp.moveaxis(edges[:, 1:, ci], 1, 0),
-                        jnp.moveaxis(inv_edges[:, 1:, ci, :, :, :npart], 1, 0),
-                        jnp.moveaxis(bnd_mask, 1, 0),
-                    ),
-                )
-                total = total + contribs.sum(axis=0)
-            totals.append(total.sum(axis=1))  # (L, 3)
+            carry0 = (
+                carry["wire"][ci].reshape(nl, npart, pw),
+                carry["inv"][ci, :, :npart],
+                started0,
+            )
+            (cw, civ, _), contribs = lax.scan(
+                fold,
+                carry0,
+                (
+                    jnp.moveaxis(partials[:, :, ci, :, :npart], 1, 0),
+                    jnp.moveaxis(edges[:, :, ci], 1, 0),
+                    jnp.moveaxis(inv_edges[:, :, ci, :, :, :npart], 1, 0),
+                    jnp.moveaxis(gmask, 1, 0),
+                ),
+            )
+            totals.append(contribs.sum(axis=0).sum(axis=1))  # (L, 3)
+            wire_out.append(cw.reshape(nl, lanes))
+            inv_out.append(jnp.pad(civ, ((0, 0), (0, pmax - npart))))
         else:
             # branch 0 carries every stateless codec; padded slots are zero
             total = partials[:, :, ci, 0].sum(axis=(1, 2))  # (L, 3)
-            if gblocks > 1:
-                if cfg.codec == "transition":
-                    # boundary flips = the next block's first DATA flit bits
-                    flips = _popcount_bits(edges[:, 1:, ci, 0, 0, :], 8)
-                else:
-                    flips = _popcount_bits(
-                        jnp.bitwise_xor(
-                            edges[:, :-1, ci, 0, 1, :], edges[:, 1:, ci, 0, 0, :]
-                        ),
-                        8,
-                    )
-                bnd = (_sides(flips) * bnd_mask[..., None]).sum(axis=1)  # (L, 2)
-                total = total + jnp.concatenate(
-                    [bnd, jnp.zeros((nl, 1), jnp.int32)], axis=-1
+            first = edges[:, :, ci, 0, 0, :]  # (L, G, lanes)
+            last = edges[:, :, ci, 0, 1, :]
+            if cfg.codec == "transition":
+                # boundary flips = each block's first DATA flit bits
+                flips = _popcount_bits(first, 8)
+            else:
+                prev = jnp.concatenate(
+                    [carry["wire"][ci][:, None], last[:, :-1]], axis=1
                 )
-            totals.append(total)
-    return jnp.stack(totals, axis=1).astype(jnp.int32)  # (L, C, 3)
+                flips = _popcount_bits(prev ^ first, 8)
+            # boundary into block g counts iff block g is real AND there is
+            # a previous flit (g > 0, or the stream already started)
+            entry = jnp.concatenate(
+                [started0[:, None], jnp.ones((nl, gblocks - 1), jnp.int32)],
+                axis=1,
+            )
+            bnd = (_sides(flips) * (gmask * entry)[..., None]).sum(axis=1)
+            totals.append(
+                total
+                + jnp.concatenate([bnd, jnp.zeros((nl, 1), jnp.int32)], axis=-1)
+            )
+            lastw = jnp.take_along_axis(last, glast[:, None, None], axis=1)[:, 0]
+            wire_out.append(
+                jnp.where(has[:, None] == 1, lastw, carry["wire"][ci])
+            )
+            inv_out.append(carry["inv"][ci])
+    out = jnp.stack(totals, axis=1).astype(jnp.int32)  # (L, C, 3)
+    if not return_carry:
+        return out
+    return out, {
+        "started": jnp.maximum(started0, has),
+        "wire": jnp.stack(wire_out),
+        "inv": jnp.stack(inv_out),
+    }
+
+
+def _dispatch_axes(
+    inputs,
+    weights,
+    valid,
+    *,
+    configs,
+    width,
+    input_lanes,
+    weight_lanes,
+    split_lanes,
+    pack,
+    block_packets,
+    backend,
+    chunk_packets=None,
+):
+    """Pad, launch (on the resolved backend) and fold — optionally chunked.
+
+    The one driver every BT entry point reduces to.  With ``chunk_packets``
+    the packet axis becomes a ``lax.scan`` over fixed-size chunks threading
+    the :func:`_fold_axes` carry (bus-invert wire/invert-line state,
+    stateless-codec edge flits) across chunk boundaries — bit-exact with
+    the single-launch path while bounding live intermediates to one chunk.
+    """
+    links, p, n = inputs.shape
+    flits = n // input_lanes
+    sl = input_lanes if split_lanes is None else split_lanes
+    bp = min(block_packets, max(1, p))
+    kw = dict(
+        configs=configs,
+        width=width,
+        input_lanes=input_lanes,
+        weight_lanes=weight_lanes,
+        split_lanes=split_lanes,
+        pack=pack,
+        block_packets=bp,
+    )
+    x = inputs.astype(jnp.int32)
+    w = weights.astype(jnp.int32)
+    if chunk_packets is None:
+        pad = (-p) % bp
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0)))
+        partials, edges, inv_edges = _launch_axes(
+            x, w, valid, backend=backend, **kw
+        )
+        return _fold_axes(
+            partials, edges, inv_edges, configs, valid * flits, bp * flits, sl
+        )
+    # chunked streaming: the chunk is rounded up to a whole block count
+    cp = -(-chunk_packets // bp) * bp
+    pad = (-p) % cp
+    x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    w = jnp.pad(w, ((0, 0), (0, pad), (0, 0)))
+    nchunks = (p + pad) // cp
+    xb = jnp.moveaxis(x.reshape(links, nchunks, cp, n), 1, 0)
+    wb = jnp.moveaxis(w.reshape(links, nchunks, cp, n), 1, 0)
+    cvalid = jnp.clip(
+        valid[None, :] - jnp.arange(nchunks, dtype=jnp.int32)[:, None] * cp,
+        0,
+        cp,
+    )  # (nchunks, L) valid packets per chunk
+
+    def step(state, blk):
+        fold_carry, total = state
+        xc, wc, vc = blk
+        partials, edges, inv_edges = _launch_axes(
+            xc, wc, vc, backend=backend, **kw
+        )
+        bt, fold_carry = _fold_axes(
+            partials,
+            edges,
+            inv_edges,
+            configs,
+            vc * flits,
+            bp * flits,
+            sl,
+            carry=fold_carry,
+            return_carry=True,
+        )
+        return (fold_carry, total + bt), None
+
+    carry0 = _axes_carry(links, configs, input_lanes + weight_lanes)
+    total0 = jnp.zeros((links, len(configs), 3), jnp.int32)
+    (_, total), _ = lax.scan(step, (carry0, total0), (xb, wb, cvalid))
+    return total
 
 
 def _paired(inputs, weights, weight_lanes, input_lanes):
@@ -288,32 +505,22 @@ class PsuStreamResult(NamedTuple):
         "weight_lanes",
         "pack",
         "block_packets",
-        "interpret",
+        "backend",
     ),
 )
-def psu_stream(
+def _psu_stream(
     inputs: jax.Array,
-    weights: jax.Array | None = None,
-    width: int = 8,
-    k: int | None = None,
-    descending: bool = False,
-    input_lanes: int = 8,
-    weight_lanes: int | None = None,
-    pack: str = "lane",
-    block_packets: int = 64,
-    interpret: bool | None = None,
+    weights: jax.Array | None,
+    *,
+    width: int,
+    k: int | None,
+    descending: bool,
+    input_lanes: int,
+    weight_lanes: int | None,
+    pack: str,
+    block_packets: int,
+    backend: str,
 ) -> PsuStreamResult:
-    """Fused popcount-sort -> reorder -> flit-pack -> BT-count, one launch.
-
-    The multi-axis kernel in ``emit_stream`` mode: one link, one uncoded
-    'acc'/'app' config, with the permutation-matrix contraction also
-    yielding ``order``/``rank`` and the packed wire stream.  Accepts any
-    (P, N) integer packets; P is padded to the kernel block size and the
-    padded tail is masked in-kernel (the unified convention) — the wrapper
-    only folds the G-1 inter-block flit boundaries.
-    """
-    if interpret is None:
-        interpret = default_interpret()
     weights, weight_lanes = _paired(inputs, weights, weight_lanes, input_lanes)
     p, n = inputs.shape
     flits = n // input_lanes
@@ -323,10 +530,11 @@ def psu_stream(
     w = jnp.pad(weights.astype(jnp.int32), ((0, pad), (0, 0)))
     cfg = CodecVariant("acc" if k is None else "app", k, descending)
     valid = jnp.full((1,), p, jnp.int32)
-    partials, edges, inv_edges, order, rank, stream = bt_axes_pallas(
+    partials, edges, inv_edges, order, rank, stream = _launch_axes(
         x[None],
         w[None],
         valid,
+        backend=backend,
         configs=(cfg,),
         width=width,
         input_lanes=input_lanes,
@@ -334,7 +542,6 @@ def psu_stream(
         pack=pack,
         block_packets=bp,
         emit_stream=True,
-        interpret=interpret,
     )
     bt = _fold_axes(
         partials, edges, inv_edges, (cfg,), valid * flits, bp * flits,
@@ -349,18 +556,69 @@ def psu_stream(
     )
 
 
-@partial(jax.jit, static_argnames=("width", "block_rows", "interpret"))
+def psu_stream(
+    inputs: jax.Array,
+    weights: jax.Array | None = None,
+    width: int = 8,
+    k: int | None = None,
+    descending: bool = False,
+    input_lanes: int = 8,
+    weight_lanes: int | None = None,
+    pack: str = "lane",
+    block_packets: int = 64,
+    interpret: bool | None = None,
+    backend: str | None = None,
+) -> PsuStreamResult:
+    """Fused popcount-sort -> reorder -> flit-pack -> BT-count, one launch.
+
+    The multi-axis measurement in ``emit_stream`` mode: one link, one
+    uncoded 'acc'/'app' config, with the permutation-matrix contraction
+    also yielding ``order``/``rank`` and the packed wire stream.  Accepts
+    any (P, N) integer packets; P is padded to the kernel block size and
+    the padded tail is masked inside the launch (the unified convention) —
+    the wrapper only folds the G-1 inter-block flit boundaries.
+    """
+    resolved = resolve_backend(backend, interpret)
+    return _entry(_psu_stream, resolved)(
+        inputs,
+        weights,
+        width=width,
+        k=k,
+        descending=descending,
+        input_lanes=input_lanes,
+        weight_lanes=weight_lanes,
+        pack=pack,
+        block_packets=block_packets,
+        backend=resolved,
+    )
+
+
+@partial(jax.jit, static_argnames=("width", "block_rows", "backend"))
+def _bt_count(
+    stream: jax.Array, *, width: int, block_rows: int, backend: str
+) -> jax.Array:
+    if backend == "compiled":
+        return bt_count_compiled(stream, width=width)
+    return bt_count_pallas(
+        stream, width=width, block_rows=block_rows,
+        interpret=backend == "interpret",
+    )
+
+
 def bt_count(
     stream: jax.Array,
     width: int = 8,
     block_rows: int = 512,
     interpret: bool | None = None,
+    backend: str | None = None,
 ) -> jax.Array:
     """Total bit transitions of a (T, L) flit stream."""
-    if interpret is None:
-        interpret = default_interpret()
-    return bt_count_pallas(
-        stream, width=width, block_rows=block_rows, interpret=interpret
+    resolved = resolve_backend(backend, interpret)
+    return _entry(_bt_count, resolved)(
+        stream,
+        width=width,
+        block_rows=block_rows,
+        backend=resolved,
     )
 
 
@@ -374,9 +632,52 @@ def bt_count(
         "split_lanes",
         "pack",
         "block_packets",
-        "interpret",
+        "backend",
+        "chunk_packets",
     ),
 )
+def _bt_count_axes(
+    inputs: jax.Array,
+    weights: jax.Array | None,
+    valid,
+    *,
+    configs: tuple[CodecVariant, ...],
+    width: int,
+    input_lanes: int,
+    weight_lanes: int | None,
+    split_lanes: int | None,
+    pack: str,
+    block_packets: int,
+    backend: str,
+    chunk_packets: int | None,
+) -> jax.Array:
+    weights, weight_lanes = _paired(inputs, weights, weight_lanes, input_lanes)
+    links, p, n = inputs.shape
+    nc = len(configs)
+    if links == 0 or p == 0:
+        return jnp.zeros((links, nc, 3), jnp.int32)
+    if valid is None:
+        valid = jnp.full((links,), p, jnp.int32)
+    else:
+        # clamp to the packets actually present: a valid count past P would
+        # silently count the last-real -> zero-pad boundary as real
+        valid = jnp.minimum(jnp.asarray(valid, jnp.int32), p)
+    return _dispatch_axes(
+        inputs,
+        weights,
+        valid,
+        configs=configs,
+        width=width,
+        input_lanes=input_lanes,
+        weight_lanes=weight_lanes,
+        split_lanes=split_lanes,
+        pack=pack,
+        block_packets=block_packets,
+        backend=backend,
+        chunk_packets=chunk_packets,
+    )
+
+
 def bt_count_axes(
     inputs: jax.Array,
     weights: jax.Array | None = None,
@@ -389,6 +690,8 @@ def bt_count_axes(
     pack: str = "lane",
     block_packets: int = 64,
     interpret: bool | None = None,
+    backend: str | None = None,
+    chunk_packets: int | None = None,
 ) -> jax.Array:
     """The full multi-axis measurement: per-LINK, per-(ordering, codec)
     config BT of a (L, P, N) packet batch in ONE kernel launch.
@@ -407,34 +710,23 @@ def bt_count_axes(
       split_lanes: lane where the input side ends for per-side accounting
         (default ``input_lanes``; the NoC path feeds pre-assembled flit
         rows as N = lanes packets and splits at the spec's input_lanes).
+      backend / interpret: backend selection (DESIGN.md §13); default
+        resolves platform/env via :func:`repro.kernels.default_backend`.
+      chunk_packets: process the packet axis as a scan over chunks of this
+        many packets (rounded up to a block multiple), threading the
+        inter-block fold carry across chunk edges — bit-exact, O(chunk)
+        live memory.
 
     Returns:
       int32 (L, C, 3): per-link, per-config (input-side BT, weight-side
       BT, invert-line BT) totals.
     """
-    if interpret is None:
-        interpret = default_interpret()
     if inputs.ndim != 3:
         raise ValueError(f"expected (L, P, N) packets, got {inputs.shape}")
-    weights, weight_lanes = _paired(inputs, weights, weight_lanes, input_lanes)
-    links, p, n = inputs.shape
-    flits = n // input_lanes
-    nc = len(configs)
-    if links == 0 or p == 0:
-        return jnp.zeros((links, nc, 3), jnp.int32)
-    if valid is None:
-        valid = jnp.full((links,), p, jnp.int32)
-    else:
-        # clamp to the packets actually present: a valid count past P would
-        # silently count the last-real -> zero-pad boundary as real
-        valid = jnp.minimum(jnp.asarray(valid, jnp.int32), p)
-    bp = min(block_packets, max(1, p))
-    pad = (-p) % bp
-    x = jnp.pad(inputs.astype(jnp.int32), ((0, 0), (0, pad), (0, 0)))
-    w = jnp.pad(weights.astype(jnp.int32), ((0, 0), (0, pad), (0, 0)))
-    partials, edges, inv_edges = bt_axes_pallas(
-        x,
-        w,
+    resolved = resolve_backend(backend, interpret)
+    return _entry(_bt_count_axes, resolved)(
+        inputs,
+        weights,
         valid,
         configs=tuple(configs),
         width=width,
@@ -442,24 +734,135 @@ def bt_count_axes(
         weight_lanes=weight_lanes,
         split_lanes=split_lanes,
         pack=pack,
-        block_packets=bp,
-        interpret=interpret,
+        block_packets=block_packets,
+        backend=resolved,
+        chunk_packets=chunk_packets,
     )
-    return _fold_axes(
-        partials,
-        edges,
-        inv_edges,
-        tuple(configs),
-        valid * flits,
-        bp * flits,
-        input_lanes if split_lanes is None else split_lanes,
-    )
+
+
+def bt_count_axes_sharded(
+    inputs: jax.Array,
+    weights: jax.Array | None = None,
+    valid: jax.Array | Sequence[int] | None = None,
+    configs: tuple[CodecVariant, ...] = (CodecVariant(),),
+    width: int = 8,
+    input_lanes: int = 8,
+    weight_lanes: int | None = None,
+    split_lanes: int | None = None,
+    pack: str = "lane",
+    block_packets: int = 64,
+    interpret: bool | None = None,
+    backend: str | None = None,
+    chunk_packets: int | None = None,
+    devices: Sequence[jax.Device] | None = None,
+) -> jax.Array:
+    """:func:`bt_count_axes` with the LINK axis sharded across devices.
+
+    ``shard_map`` (via ``repro.compat``) splits the links of a NoC grid
+    over a 1-D device mesh; each device measures its shard with the same
+    launch + fold as the unsharded path, scatters it into the full-table
+    layout and a ``psum`` assembles the replicated (L, C, 3) BT table.
+    Links are padded to a device multiple with ``valid = 0`` links, whose
+    rows the unified masking convention zeroes — so the padding is exact,
+    not approximate.  Per-link results are bit-identical to the unsharded
+    entry point (each link's fold never crosses the shard boundary).
+    """
+    if inputs.ndim != 3:
+        raise ValueError(f"expected (L, P, N) packets, got {inputs.shape}")
+    from jax.sharding import Mesh, PartitionSpec
+
+    from repro.compat import shard_map
+
+    backend = resolve_backend(backend, interpret)
+    devices = list(jax.devices() if devices is None else devices)
+    nd = len(devices)
+    weights, weight_lanes = _paired(inputs, weights, weight_lanes, input_lanes)
+    links, p, n = inputs.shape
+    nc = len(configs := tuple(configs))
+    if links == 0 or p == 0:
+        return jnp.zeros((links, nc, 3), jnp.int32)
+    if valid is None:
+        valid = jnp.full((links,), p, jnp.int32)
+    else:
+        valid = jnp.minimum(jnp.asarray(valid, jnp.int32), p)
+    lpad = (-links) % nd
+    x = jnp.pad(inputs.astype(jnp.int32), ((0, lpad), (0, 0), (0, 0)))
+    w = jnp.pad(weights.astype(jnp.int32), ((0, lpad), (0, 0), (0, 0)))
+    v = jnp.pad(valid, (0, lpad))
+    ltot = links + lpad
+    shard = ltot // nd
+    mesh = Mesh(np.asarray(devices), ("links",))
+
+    def local(xs, ws, vs):
+        bt = _dispatch_axes(
+            xs,
+            ws,
+            vs,
+            configs=configs,
+            width=width,
+            input_lanes=input_lanes,
+            weight_lanes=weight_lanes,
+            split_lanes=split_lanes,
+            pack=pack,
+            block_packets=block_packets,
+            backend=backend,
+            chunk_packets=chunk_packets,
+        )
+        full = jnp.zeros((ltot, nc, 3), jnp.int32)
+        full = lax.dynamic_update_slice(
+            full, bt, (lax.axis_index("links") * shard, 0, 0)
+        )
+        return lax.psum(full, "links")
+
+    spec = PartitionSpec("links")
+    out = shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(spec, spec, spec),
+        out_specs=PartitionSpec(),
+    )(x, w, v)
+    return out[:links]
 
 
 @partial(
     jax.jit,
-    static_argnames=("input_lanes", "width", "block_links", "block_rows", "interpret"),
+    static_argnames=(
+        "input_lanes", "width", "block_rows", "backend", "chunk_rows"
+    ),
 )
+def _bt_count_links(
+    streams: jax.Array,
+    lengths,
+    *,
+    input_lanes: int,
+    width: int,
+    block_rows: int,
+    backend: str,
+    chunk_rows: int | None,
+) -> jax.Array:
+    links, t, lanes = streams.shape
+    valid = (
+        jnp.full((links,), t, jnp.int32)
+        if lengths is None
+        else jnp.minimum(jnp.asarray(lengths, jnp.int32), t)
+    )
+    bt = _dispatch_axes(
+        streams,
+        jnp.zeros_like(streams),
+        valid,
+        configs=(CodecVariant("none"),),
+        width=width,
+        input_lanes=lanes,
+        weight_lanes=0,
+        split_lanes=input_lanes,
+        pack="row",
+        block_packets=block_rows,
+        backend=backend,
+        chunk_packets=chunk_rows,
+    )
+    return bt[:, 0, :2]
+
+
 def bt_count_links(
     streams: jax.Array,
     input_lanes: int | None = None,
@@ -468,15 +871,17 @@ def bt_count_links(
     block_links: int = 8,
     block_rows: int = 512,
     interpret: bool | None = None,
+    backend: str | None = None,
+    chunk_rows: int | None = None,
 ) -> jax.Array:
     """Per-link BT of a (L, T, lanes) stream batch in ONE kernel launch.
 
     The batched replacement for looping ``bt_count`` over the links of a
     NoC: each pre-assembled flit row is one N = lanes "packet" of the
-    multi-axis kernel with the identity ordering, so the link axis rides
-    the kernel grid.  Jagged links pass their real flit counts via
-    ``lengths`` and the kernel masks everything past them (the unified
-    convention) — any padding value is neutral, including the
+    multi-axis measurement with the identity ordering, so the link axis
+    rides the kernel grid.  Jagged links pass their real flit counts via
+    ``lengths`` and everything past them is masked inside the launch (the
+    unified convention) — any padding value is neutral, including the
     repeated-last-flit rows ``repro.noc.simulate.stack_link_streams``
     emits (which are also zero-BT on their own).
 
@@ -489,13 +894,13 @@ def bt_count_links(
       block_links: unused (one grid row per link); kept for call
         compatibility with the pre-unification kernel.
       block_rows: flit rows per grid step.
+      backend / chunk_rows: backend selection and chunked streaming over
+        the flit-row axis (see :func:`bt_count_axes`).
 
     Returns:
       int32 (L, 2): per-link (input-side, weight-side) bit transitions.
     """
     del block_links  # the link axis is unblocked on the unified grid
-    if interpret is None:
-        interpret = default_interpret()
     links, t, lanes = streams.shape
     if input_lanes is None:
         input_lanes = lanes
@@ -505,44 +910,18 @@ def bt_count_links(
         )
     if links == 0 or t < 2:
         return jnp.zeros((links, 2), jnp.int32)
-    valid = (
-        jnp.full((links,), t, jnp.int32)
-        if lengths is None
-        else jnp.minimum(jnp.asarray(lengths, jnp.int32), t)
-    )
-    bp = min(block_rows, max(1, t))
-    pad = (-t) % bp
-    x = jnp.pad(streams.astype(jnp.int32), ((0, 0), (0, pad), (0, 0)))
-    cfg = (CodecVariant("none"),)
-    partials, edges, inv_edges = bt_axes_pallas(
-        x,
-        jnp.zeros_like(x),
-        valid,
-        configs=cfg,
+    resolved = resolve_backend(backend, interpret)
+    return _entry(_bt_count_links, resolved)(
+        streams,
+        lengths,
+        input_lanes=input_lanes,
         width=width,
-        input_lanes=lanes,
-        weight_lanes=0,
-        split_lanes=input_lanes,
-        pack="row",
-        block_packets=bp,
-        interpret=interpret,
+        block_rows=block_rows,
+        backend=resolved,
+        chunk_rows=chunk_rows,
     )
-    bt = _fold_axes(partials, edges, inv_edges, cfg, valid, bp, input_lanes)
-    return bt[:, 0, :2]
 
 
-@partial(
-    jax.jit,
-    static_argnames=(
-        "variants",
-        "width",
-        "input_lanes",
-        "weight_lanes",
-        "pack",
-        "block_packets",
-        "interpret",
-    ),
-)
 def bt_count_variants(
     inputs: jax.Array,
     weights: jax.Array | None = None,
@@ -553,11 +932,13 @@ def bt_count_variants(
     pack: str = "lane",
     block_packets: int = 64,
     interpret: bool | None = None,
+    backend: str | None = None,
+    chunk_packets: int | None = None,
 ) -> jax.Array:
     """Ordered BT of (P, N) packets under MANY variants in ONE kernel launch.
 
-    The multi-axis kernel restricted to one link and uncoded configs: the
-    variant axis lives inside the single launch (one popcount pass per
+    The multi-axis measurement restricted to one link and uncoded configs:
+    the variant axis lives inside the single launch (one popcount pass per
     block shared by every bucketing), which is what makes a whole
     ``repro.dse`` grid one launch per measured stream.
 
@@ -578,22 +959,12 @@ def bt_count_variants(
         pack=pack,
         block_packets=block_packets,
         interpret=interpret,
+        backend=backend,
+        chunk_packets=chunk_packets,
     )
     return out[0, :, :2]
 
 
-@partial(
-    jax.jit,
-    static_argnames=(
-        "configs",
-        "width",
-        "input_lanes",
-        "weight_lanes",
-        "pack",
-        "block_packets",
-        "interpret",
-    ),
-)
 def bt_count_codecs(
     inputs: jax.Array,
     weights: jax.Array | None = None,
@@ -604,11 +975,13 @@ def bt_count_codecs(
     pack: str = "lane",
     block_packets: int = 64,
     interpret: bool | None = None,
+    backend: str | None = None,
+    chunk_packets: int | None = None,
 ) -> jax.Array:
     """Coded + ordered BT of (P, N) packets under MANY (ordering, codec)
     configurations in ONE kernel launch.
 
-    The multi-axis kernel restricted to one link: the whole codec x
+    The multi-axis measurement restricted to one link: the whole codec x
     ordering grid lives inside the launch (one popcount pass, one reorder
     per distinct ordering, stateful codecs as vectorized per-block prefix
     scans with the wrapper folding the O(G) inter-block carry).
@@ -631,23 +1004,38 @@ def bt_count_codecs(
         pack=pack,
         block_packets=block_packets,
         interpret=interpret,
+        backend=backend,
+        chunk_packets=chunk_packets,
     )
     return out[0]
 
 
-@partial(jax.jit, static_argnames=("block", "interpret"))
+@partial(jax.jit, static_argnames=("block", "backend"))
+def _quantize_egress(
+    x: jax.Array, *, block: int, backend: str
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    m = x.shape[0]
+    pad = (-m) % block
+    xp = jnp.pad(x.astype(jnp.float32), (0, pad))
+    if backend == "compiled":
+        q, s = quantize_egress_compiled(xp, block=block)
+    else:
+        q, s = quantize_egress_pallas(
+            xp, block=block, interpret=backend == "interpret"
+        )
+    return q, s, jnp.int32(m + pad)
+
+
 def quantize_egress(
-    x: jax.Array, block: int = 256, interpret: bool | None = None
+    x: jax.Array,
+    block: int = 256,
+    interpret: bool | None = None,
+    backend: str | None = None,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Blockwise int8 quantization of a flat vector (pads internally).
 
     Returns (q, scales, padded_size) where q/scales cover the padded vector;
     callers keep ``padded_size`` to dequantize and trim.
     """
-    if interpret is None:
-        interpret = default_interpret()
-    m = x.shape[0]
-    pad = (-m) % block
-    xp = jnp.pad(x.astype(jnp.float32), (0, pad))
-    q, s = quantize_egress_pallas(xp, block=block, interpret=interpret)
-    return q, s, jnp.int32(m + pad)
+    resolved = resolve_backend(backend, interpret)
+    return _entry(_quantize_egress, resolved)(x, block=block, backend=resolved)

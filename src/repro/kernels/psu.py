@@ -31,7 +31,9 @@ import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
 
-__all__ = ["psu_sort_pallas"]
+from .backend import default_backend
+
+__all__ = ["psu_sort_pallas", "psu_sort_compiled"]
 
 
 def _popcount_bits(x: jax.Array, width: int) -> jax.Array:
@@ -119,7 +121,7 @@ def psu_sort_pallas(
     k: int | None = None,
     descending: bool = False,
     block_packets: int = 64,
-    interpret: bool = False,
+    interpret: bool | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Sort indices for a batch of packets with the PSU kernel.
 
@@ -136,6 +138,8 @@ def psu_sort_pallas(
     Returns:
       (order, rank) int32 arrays of shape (P, N).
     """
+    if interpret is None:
+        interpret = default_backend() != "pallas"
     p, n = packets.shape
     if p % block_packets != 0:
         raise ValueError(f"P={p} not a multiple of block_packets={block_packets}")
@@ -154,3 +158,25 @@ def psu_sort_pallas(
         out_shape=out_shape,
         interpret=interpret,
     )(packets.astype(jnp.int32))
+
+
+def psu_sort_compiled(
+    packets: jax.Array,
+    *,
+    width: int = 8,
+    k: int | None = None,
+    descending: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """The compiled (pure-jnp) backend of the PSU sort.
+
+    Runs the SAME rank derivation as the kernel (:func:`_rank_block`) on
+    the whole (P, N) batch at once — every stage is per-packet, so block
+    granularity cannot change results — and inverts the rank permutation
+    with an argsort instead of the kernel's one-hot scatter (identical
+    output on a permutation).  Bit-exact with the kernel.
+    """
+    rank = _rank_block(
+        packets.astype(jnp.int32), width=width, k=k, descending=descending
+    )
+    order = jnp.argsort(rank, axis=-1).astype(jnp.int32)
+    return order, rank

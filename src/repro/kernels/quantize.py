@@ -13,7 +13,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["quantize_egress_pallas"]
+from .backend import default_backend
+
+__all__ = ["quantize_egress_pallas", "quantize_egress_compiled"]
 
 
 def _quant_kernel(x_ref, q_ref, s_ref):
@@ -31,7 +33,7 @@ def quantize_egress_pallas(
     *,
     block: int = 256,
     rows_per_step: int = 256,
-    interpret: bool = False,
+    interpret: bool | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Quantize a flat float32 vector to blockwise-symmetric int8.
 
@@ -41,6 +43,8 @@ def quantize_egress_pallas(
     Returns:
       (q, scales): int8 (M,), float32 (M / block,).
     """
+    if interpret is None:
+        interpret = default_backend() != "pallas"
     m = x.shape[0]
     if m % block != 0:
         raise ValueError(f"size {m} not divisible by block {block}")
@@ -64,3 +68,21 @@ def quantize_egress_pallas(
         interpret=interpret,
     )(x.reshape(rows, block).astype(jnp.float32))
     return q.reshape(m), s
+
+
+def quantize_egress_compiled(
+    x: jax.Array, *, block: int = 256
+) -> tuple[jax.Array, jax.Array]:
+    """The compiled (pure-jnp) backend: the kernel's abs-max / scale /
+    round math as one reshaped pass — same primitives and dtypes, so the
+    int8 codes and float32 scales are bit-identical."""
+    m = x.shape[0]
+    if m % block != 0:
+        raise ValueError(f"size {m} not divisible by block {block}")
+    rows = m // block
+    xr = x.reshape(rows, block).astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xr), axis=1)
+    scale = amax / 127.0
+    safe = jnp.where(scale > 0, scale, 1.0)
+    q = jnp.clip(jnp.round(xr / safe[:, None]), -127, 127).astype(jnp.int8)
+    return q.reshape(m), scale

@@ -116,6 +116,8 @@ class TxPipeline:
         whenever the spec allows.
       interpret: Pallas interpret-mode override (None = auto: interpret off
         TPU).
+      backend: kernel backend override ('pallas' | 'compiled' |
+        'interpret', DESIGN.md §13); wins over ``interpret``.
       block_packets: packets per fused-kernel grid step.
     """
 
@@ -126,12 +128,14 @@ class TxPipeline:
         power: LinkPowerModel | None = None,
         fused: bool | None = None,
         interpret: bool | None = None,
+        backend: str | None = None,
         block_packets: int = 64,
     ) -> None:
         self.spec = spec
         self.power = power if power is not None else LinkPowerModel()
         self._fused = fused
         self._interpret = interpret
+        self._backend = backend
         self._block_packets = block_packets
 
     # ---------------------------------------------------------------- stages
@@ -213,6 +217,7 @@ class TxPipeline:
                 pack=s.pack,
                 block_packets=self._block_packets,
                 interpret=self._interpret,
+                backend=self._backend,
             )
             return TxResult(
                 res.order, res.rank, res.stream, res.bt_input, res.bt_weight, True
@@ -225,9 +230,15 @@ class TxPipeline:
         invert, bt_aux = None, jnp.int32(0)
         if s.codec != "none":
             stream, invert, bt_aux = self._code_wire(stream)
-        bt_i = bt_count(stream[:, : s.input_lanes], interpret=self._interpret)
+        bt_i = bt_count(
+            stream[:, : s.input_lanes], interpret=self._interpret,
+            backend=self._backend,
+        )
         if wi is not None and s.weight_lanes:
-            bt_w = bt_count(stream[:, s.input_lanes :], interpret=self._interpret)
+            bt_w = bt_count(
+                stream[:, s.input_lanes :], interpret=self._interpret,
+                backend=self._backend,
+            )
         else:
             bt_w = jnp.int32(0)
         return TxResult(order, None, stream, bt_i, bt_w, False, invert, bt_aux)
@@ -315,7 +326,9 @@ class TxPipeline:
         """BT / energy report for streaming ``rows`` under this spec."""
         stream, bt_aux = self._row_wire(rows)
         aux = int(bt_aux)
-        bt = int(bt_count(stream, interpret=self._interpret))
+        bt = int(
+            bt_count(stream, interpret=self._interpret, backend=self._backend)
+        )
         num_flits, lanes = (int(d) for d in stream.shape)
         wires = self._extra_wires(lanes)
         return LinkReport(

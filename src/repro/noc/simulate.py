@@ -335,13 +335,18 @@ def simulate_noc(
     sort_at: str = "source",
     power: NocPowerModel | None = None,
     interpret: bool | None = None,
+    backend: str | None = None,
+    chunk_rows: int | None = None,
     name: str = "noc",
 ) -> NocReport:
     """Run the fabric: expand flows to link streams, measure every link.
 
     All links are measured by one ``bt_count_links`` launch; per-link
     energies roll up through ``NocPowerModel`` (wire switching + router
-    flit overhead per hop).
+    flit overhead per hop).  ``backend`` selects the kernel execution path
+    (pallas | compiled | interpret, DESIGN.md §13); ``chunk_rows`` streams
+    the flit-row axis in fixed-size chunks for fabrics whose stacked link
+    tensor would not fit in memory at once.
     """
     power = power if power is not None else NocPowerModel()
     ls = expand_link_streams(topo, flows, spec, sort_at=sort_at)
@@ -358,6 +363,8 @@ def simulate_noc(
                 input_lanes=spec.input_lanes,
                 lengths=ls.lengths,
                 interpret=interpret,
+                backend=backend,
+                chunk_rows=chunk_rows,
             )
         )
         for (lid, length, aux, (bi, bw)) in zip(
