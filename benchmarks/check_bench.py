@@ -1,34 +1,95 @@
 """Gate on the bench trajectory (the CI bench-smoke check step).
 
-After ``python -m benchmarks.run --json``, every module in
-``benchmarks.run.MODULES`` must have written a ``BENCH_<module>.json``
-with at least one row and no recorded failure — a module that silently
-produced nothing is as much a regression as one that raised.
+After ``python -m benchmarks.run --json``, three checks run against the
+``BENCH_<module>.json`` artifacts:
 
-Usage: ``python -m benchmarks.check_bench [dir]`` (default: cwd, the
-directory the JSONs were written to).  Exits non-zero listing every
-missing/failed module.
+  1. **presence** — every module in ``benchmarks.run.MODULES`` wrote a
+     JSON with at least one row and no recorded failure; a module that
+     silently produced nothing is as much a regression as one that
+     raised.
+  2. **registry coverage** — every module of the committed baseline
+     trajectory still exists in ``MODULES``.  A module silently dropped
+     from the registry used to pass the gate (the loop only walked
+     ``MODULES``); now it exits 1 with the named diff.
+  3. **wall regression** — each module's ``wall_s`` against the committed
+     baseline (matched on the ``tiny`` smoke flag): fail when it exceeds
+     both {FAIL_RATIO}x the baseline and +{FAIL_DELTA_S}s absolute, warn
+     beyond {WARN_RATIO}x and +{WARN_DELTA_S}s.  The paired ratio+delta
+     thresholds keep sub-second smoke modules from tripping on scheduler
+     noise.
+
+Usage::
+
+    python -m benchmarks.check_bench [dir] [--baseline DIR]
+
+``dir`` (default cwd) holds the fresh artifacts; ``--baseline`` overrides
+the committed trajectory directory, which otherwise resolves to
+``benchmarks/trajectory/tiny`` or ``.../full`` to match the run's
+``tiny`` flag.  With no baseline committed yet, checks 2-3 are skipped
+with a warning.
 """
 
 from __future__ import annotations
 
+import argparse
 import json
 import os
-import sys
 
 from .run import MODULES
 
+# fail/warn when wall exceeds BOTH the ratio and the absolute delta —
+# ratio alone trips on sub-second smoke modules, delta alone never trips
+# for them
+FAIL_RATIO, FAIL_DELTA_S = 2.0, 1.0
+WARN_RATIO, WARN_DELTA_S = 1.25, 0.25
 
-def check(root: str = ".") -> list[str]:
-    """Problem strings for the trajectory under ``root`` (empty = clean)."""
-    problems = []
+TRAJECTORY_DIR = os.path.join(
+    os.path.dirname(os.path.abspath(__file__)), "trajectory"
+)
+
+
+def _load(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def _baseline_dir(root: str, baseline: str | None) -> str | None:
+    """The committed-baseline directory for the run under ``root``."""
+    if baseline is not None:
+        return baseline if os.path.isdir(baseline) else None
+    for name in MODULES:  # match tiny/ vs full/ on the first present run
+        path = os.path.join(root, f"BENCH_{name}.json")
+        if os.path.exists(path):
+            sub = "tiny" if _load(path).get("tiny") else "full"
+            cand = os.path.join(TRAJECTORY_DIR, sub)
+            return cand if os.path.isdir(cand) else None
+    return None
+
+
+def _baseline_payloads(bdir: str) -> dict[str, dict]:
+    out: dict[str, dict] = {}
+    for fn in sorted(os.listdir(bdir)):
+        if fn.startswith("BENCH_") and fn.endswith(".json"):
+            out[fn[len("BENCH_"):-len(".json")]] = _load(
+                os.path.join(bdir, fn)
+            )
+    return out
+
+
+def check(
+    root: str = ".", baseline: str | None = None
+) -> tuple[list[str], list[str]]:
+    """(problems, warnings) for the artifacts under ``root``."""
+    problems: list[str] = []
+    warnings: list[str] = []
+    payloads: dict[str, dict] = {}
     for name in MODULES:
         path = os.path.join(root, f"BENCH_{name}.json")
         if not os.path.exists(path):
             problems.append(f"{name}: missing {path} (module produced no JSON)")
             continue
-        with open(path) as f:
-            payload = json.load(f)
+        payload = _load(path)
+        payloads[name] = payload
         if payload.get("failed"):
             problems.append(f"{name}: {payload['failed']}")
             continue
@@ -43,12 +104,66 @@ def check(root: str = ".") -> list[str]:
         ]
         if bad:
             problems.append(f"{name}: FAILED rows: {', '.join(bad)}")
-    return problems
+
+    bdir = _baseline_dir(root, baseline)
+    if bdir is None:
+        warnings.append(
+            "no committed baseline trajectory found — registry-coverage "
+            "and wall-regression gates skipped"
+        )
+        return problems, warnings
+
+    base = _baseline_payloads(bdir)
+    dropped = sorted(set(base) - set(MODULES))
+    if dropped:
+        problems.append(
+            "modules in the committed baseline but gone from run.MODULES "
+            f"(silently dropped from the registry): {', '.join(dropped)}"
+        )
+    for name, payload in payloads.items():
+        b = base.get(name)
+        if b is None or b.get("failed") or payload.get("failed"):
+            continue
+        if bool(payload.get("tiny")) != bool(b.get("tiny")):
+            warnings.append(
+                f"{name}: tiny flag differs from baseline — wall gate skipped"
+            )
+            continue
+        wall = float(payload.get("wall_s") or 0.0)
+        bwall = float(b.get("wall_s") or 0.0)
+        if bwall <= 0.0:
+            continue
+        ratio, delta = wall / bwall, wall - bwall
+        line = (
+            f"{name}: wall {wall:.2f}s vs baseline {bwall:.2f}s "
+            f"({ratio:.2f}x, +{delta:.2f}s)"
+        )
+        if ratio > FAIL_RATIO and delta > FAIL_DELTA_S:
+            problems.append(f"{line} — regression")
+        elif ratio > WARN_RATIO and delta > WARN_DELTA_S:
+            warnings.append(line)
+    return problems, warnings
 
 
-def main() -> None:
-    root = sys.argv[1] if len(sys.argv) > 1 else "."
-    problems = check(root)
+def main(argv: list[str] | None = None) -> None:
+    parser = argparse.ArgumentParser(
+        prog="benchmarks.check_bench",
+        description="gate fresh BENCH_*.json artifacts on the committed "
+        "bench trajectory",
+    )
+    parser.add_argument(
+        "root", nargs="?", default=".",
+        help="directory holding the fresh BENCH_*.json artifacts",
+    )
+    parser.add_argument(
+        "--baseline", default=None,
+        help="committed baseline directory (default: benchmarks/trajectory/"
+        "{tiny|full} matched to the run's tiny flag)",
+    )
+    args = parser.parse_args(argv)
+    problems, warnings = check(args.root, args.baseline)
+    for w in warnings:
+        print(f"WARNING: {w}")
     if problems:
         raise SystemExit(
             "bench trajectory check failed:\n  " + "\n  ".join(problems)

@@ -32,6 +32,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.codec import codec_by_name, compare_streams, demo_workloads
 from repro.kernels import (
     CodecVariant,
@@ -121,21 +122,33 @@ def run(
     }
 
     all_rows = []
-    for name, streams in workloads.items():
-        t0 = time.monotonic()
-        table = compare_streams(
-            streams, _LANES, orderings=_ORDERINGS, codecs=codecs, workload=name
-        )
-        us = (time.monotonic() - t0) * 1e6 / len(table)
-        all_rows.extend(table)
-        for r in table:
-            rows.append((
-                f"codec/{name}/{r.label}",
-                us,
-                f"data_bt={r.data_bt} aux_bt={r.aux_bt} "
-                f"wires=+{r.extra_wires} net_red={100 * r.bt_reduction:.2f}% "
-                f"power_red={100 * r.power_reduction:.2f}%",
-            ))
+    with obs.collect() as reg:  # codec.stream probe: per-stream baselines
+        for name, streams in workloads.items():
+            t0 = time.monotonic()
+            table = compare_streams(
+                streams, _LANES, orderings=_ORDERINGS, codecs=codecs,
+                workload=name,
+            )
+            us = (time.monotonic() - t0) * 1e6 / len(table)
+            all_rows.extend(table)
+            for r in table:
+                rows.append((
+                    f"codec/{name}/{r.label}",
+                    us,
+                    f"data_bt={r.data_bt} aux_bt={r.aux_bt} "
+                    f"wires=+{r.extra_wires} "
+                    f"net_red={100 * r.bt_reduction:.2f}% "
+                    f"power_red={100 * r.power_reduction:.2f}%",
+                ))
+
+    # --- obs telemetry: per-stream baseline breakdown of each workload ---
+    for s in reg.series("codec.stream.bt"):
+        lab = dict(s.labels)
+        rows.append((
+            f"codec/obs/stream/{lab['stream']}", 0.0,
+            f"baseline_bt={int(s.value)} (unordered uncoded wire, "
+            f"one bt_count_codecs launch per stream)",
+        ))
 
     # --- fused vs per-config: 1 launch vs one chain per config ---
     configs = tuple(

@@ -47,6 +47,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.dse import (
     AREA_BT_OBJECTIVES,
     DesignPoint,
@@ -109,9 +110,11 @@ def run(
     )
     points = _grid(tuple(ks), tuple(ns))
 
-    # --- evaluate the whole grid (one variant launch per stream) ---
+    # --- evaluate the whole grid (one variant launch per stream),
+    # collecting the repro.obs dse.* / kernel.* telemetry alongside ---
     t0 = time.monotonic()
-    evals = evaluate_grid(points, workload)
+    with obs.collect() as reg:
+        evals = evaluate_grid(points, workload)
     us = (time.monotonic() - t0) * 1e6
     front = pareto_front(evals)
     for e in evals:
@@ -122,6 +125,28 @@ def run(
             f"bt_red={e.bt_reduction * 100:.2f}% lat={e.latency_ns:.0f}ns "
             f"front={int(e in front)}",
         ))
+
+    # --- obs telemetry: per-link baseline BT + launch accounting ---
+    for s in reg.series("dse.link.bt"):
+        lab = dict(s.labels)
+        packets = reg.value("dse.link.packets", **lab)
+        rows.append((
+            f"dse/obs/link/{lab['link']}/w{lab['width']}", 0.0,
+            f"baseline_bt={int(s.value)} packets={int(packets)}",
+        ))
+    n_points = sum(int(s.value) for s in reg.series("dse.points"))
+    dispatches = sum(
+        int(s.value) for s in reg.series("kernel.dispatch.calls")
+    )
+    launches = sum(
+        int(s.value) for s in reg.series("kernel.pallas_launches")
+    )
+    rows.append((
+        "dse/obs/points", 0.0,
+        f"{n_points} design points measured by {dispatches} kernel "
+        f"dispatch(es) ({launches} pallas launches) — the grid collapse, "
+        f"read from live telemetry",
+    ))
 
     # --- the paper's area x BT plane: front + knee ---
     n0 = ns[0]

@@ -1,10 +1,14 @@
 """NoC BT benchmark: the sorting unit inside a multi-router fabric.
 
-Three report groups (DESIGN.md §9):
+Four report groups (DESIGN.md §9, §14):
 
   * **topology x ordering** — fabric-total BT / energy for conv-platform
     traffic on a mesh and a ring, under sort-at-source and sort-at-every-
     hop, precise (ACC) vs approximate (APP) vs unsorted.
+  * **hottest links** — per-link BT telemetry of the mesh acc/source
+    fabric via the ``repro.obs`` ``noc.link`` probe: the top-3 links by
+    gross BT as report rows, and (with ``REPRO_NOC_LINKS_ARTIFACT=path``)
+    the full per-link heatmap CSV.
   * **hop sweep** — one unicast flow at increasing XY distance: with
     sort-at-source, every extra hop retransmits the *already ordered*
     stream, so the absolute BT saving scales linearly with hop count and
@@ -22,13 +26,16 @@ Three report groups (DESIGN.md §9):
 
 from __future__ import annotations
 
+import os
 import sys
 import time
+from contextlib import nullcontext
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.kernels import bt_count, bt_count_links
 from repro.link import LinkSpec
 from repro.noc import (
@@ -80,6 +87,7 @@ def run(n_images: int = 3, max_hops: int = 6) -> list[tuple[str, float, str]]:
         (ring(8), 0, list(range(1, 8))),
     ]
     conv_flows = {}  # flows depend only on the framing, not the key/sort_at
+    hot_reg = None  # per-link telemetry of the mesh acc/source fabric
     for topo, src, pes in fabrics:
         tname = f"{topo.kind}{topo.rows}x{topo.cols}"
         conv_flows[tname] = _conv_flows(topo, src, pes, LinkSpec(), n_images)
@@ -87,9 +95,17 @@ def run(n_images: int = 3, max_hops: int = 6) -> list[tuple[str, float, str]]:
         for key, sort_at in DESIGNS:
             spec = LinkSpec(key=key)
             flows = conv_flows[tname]
+            # collect per-link telemetry on the paper-default mesh fabric
+            # (the repro.obs noc.link probe feeds the hottest-link rows)
+            watch = tname.startswith("mesh") and (key, sort_at) == (
+                "acc", "source",
+            )
             t0 = time.monotonic()
-            rep = simulate_noc(topo, flows, spec, sort_at=sort_at)
+            with obs.collect() if watch else nullcontext() as reg:
+                rep = simulate_noc(topo, flows, spec, sort_at=sort_at)
             us = (time.monotonic() - t0) * 1e6
+            if watch:
+                hot_reg = reg
             if base is None:
                 base = rep
             rows.append((
@@ -99,6 +115,21 @@ def run(n_images: int = 3, max_hops: int = 6) -> list[tuple[str, float, str]]:
                 f"links={rep.active_links}/{rep.total_links} "
                 f"flit_hops={rep.total_flit_hops} E={rep.energy_pj / 1e3:.1f}nJ",
             ))
+
+    # --- hottest links: per-link BT telemetry of the mesh acc/source run ---
+    if hot_reg is not None:
+        for rank, r in enumerate(obs.top_links(hot_reg, 3), 1):
+            rows.append((
+                f"noc/hot_link/{rank}",
+                0.0,
+                f"link={r['link']} route={r['src']}->{r['dst']} "
+                f"gross_bt={r['gross_bt']} flits={r['num_flits']} "
+                f"bt_per_flit={r['bt_per_flit']:.2f} "
+                f"E={r['energy_pj']:.1f}pJ",
+            ))
+        artifact = os.environ.get("REPRO_NOC_LINKS_ARTIFACT")
+        if artifact:  # the per-link heatmap CSV (README quickstart)
+            obs.write_links_csv(artifact, hot_reg)
 
     # --- hop sweep: source-sorted advantage is preserved across hops ---
     topo = mesh(4, 4)

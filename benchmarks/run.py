@@ -13,23 +13,35 @@ derived`` CSV (the harness contract).
   kernel_bench     -> kernel microbenchmarks (per-backend wall rows)
   roofline_report  -> deliverable (g) tables from the dry-run records
 
-Usage: ``python -m benchmarks.run [--json] [module ...]`` runs the named
-modules in registry order (no names = all); ``--list`` prints the valid
-names.  Set REPRO_BENCH_TINY=1 to run each module at its smoke-test shape
-(a module's optional ``TINY_KWARGS`` dict) — the CI benchmark smoke step.
+Usage: ``python -m benchmarks.run [--json] [--trace] [module ...]`` runs
+the named modules in registry order (no names = all); ``--list`` prints
+the valid names.  Set REPRO_BENCH_TINY=1 to run each module at its
+smoke-test shape (a module's optional ``TINY_KWARGS`` dict) — the CI
+benchmark smoke step.
 
 ``--json`` additionally writes one ``BENCH_<module>.json`` per module run
 to the current directory: the CSV rows plus the resolved kernel backend
-(DESIGN.md §13), the jax platform, the run kwargs (the shapes) and the
-module wall time.  CI uploads these as the persistent wall-clock
-trajectory and ``benchmarks.check_bench`` gates on them.
+(DESIGN.md §13), the jax platform, the run kwargs (the shapes), the
+module wall time, and run provenance (git SHA, ISO timestamp, jax
+version).  CI uploads these as the persistent wall-clock trajectory and
+``benchmarks.check_bench`` gates on them against the committed baseline
+under ``benchmarks/trajectory/``.
+
+``--trace`` activates ``repro.obs`` around each module and writes a
+Chrome/Perfetto-loadable ``TRACE_<module>.json`` next to the bench JSON:
+one top-level ``bench.module`` span per run with every probe span
+(kernel dispatches, link stages, NoC/DSE launches) nested inside by
+timestamp, plus the trace's span coverage of the module wall time in its
+``metadata``.  Load it at https://ui.perfetto.dev or chrome://tracing.
 """
 
 from __future__ import annotations
 
+import datetime
 import importlib
 import json
 import os
+import subprocess
 import sys
 import time
 
@@ -55,10 +67,26 @@ def _write_json(name: str, payload: dict) -> None:
         f.write("\n")
 
 
+def _git_sha() -> str:
+    """The repo HEAD the numbers were measured at ('unknown' off-git)."""
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+        )
+        if out.returncode == 0 and out.stdout.strip():
+            return out.stdout.strip()
+    except (OSError, subprocess.SubprocessError):
+        pass
+    return "unknown"
+
+
 def main() -> None:
     args = sys.argv[1:]
     emit_json = "--json" in args
-    args = [a for a in args if a != "--json"]
+    emit_trace = "--trace" in args
+    args = [a for a in args if a not in ("--json", "--trace")]
     if "--list" in args:
         for name in MODULES:
             print(name)
@@ -77,6 +105,7 @@ def main() -> None:
     from repro.kernels import default_backend
 
     tiny = os.environ.get("REPRO_BENCH_TINY", "") not in ("", "0")
+    git_sha = _git_sha()
     print("name,us_per_call,derived")
     failures = 0
     for name in MODULES:
@@ -90,10 +119,24 @@ def main() -> None:
             "platform": jax.default_backend(),
             "tiny": tiny,
             "kwargs": kwargs,
+            "git_sha": git_sha,
+            "timestamp": datetime.datetime.now(
+                datetime.timezone.utc
+            ).isoformat(timespec="seconds"),
+            "jax_version": jax.__version__,
         }
+        tracer = None
         t0 = time.monotonic()
         try:
-            rows = mod.run(**kwargs)
+            if emit_trace:
+                from repro import _obs_hooks, obs
+
+                tracer = obs.Tracer(process_name=f"bench.{name}")
+                with obs.tracing(tracer), obs.collect():
+                    with _obs_hooks.span("bench.module", module=name):
+                        rows = mod.run(**kwargs)
+            else:
+                rows = mod.run(**kwargs)
         except Exception as e:  # keep the harness running; report the failure
             msg = f"FAILED: {type(e).__name__}: {e}"
             print(f"{name},0,{msg}")
@@ -117,6 +160,18 @@ def main() -> None:
                     {"name": r, "us_per_call": round(us, 2), "derived": d}
                     for r, us, d in rows
                 ],
+            })
+        if tracer is not None:
+            # the bench.module span wraps the whole run, so its duration
+            # over the module wall time is the trace's span coverage (the
+            # DESIGN.md §14 >=95% target; the remainder is harness I/O)
+            coverage = min(
+                1.0, tracer.span_seconds("bench.module") / max(dt, 1e-9)
+            )
+            tracer.write(f"TRACE_{name}.json", metadata={
+                **meta,
+                "wall_s": round(dt, 3),
+                "span_coverage": round(coverage, 4),
             })
         print(f"# {name} done in {dt:.1f}s", file=sys.stderr)
     if failures:

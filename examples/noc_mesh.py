@@ -7,7 +7,12 @@ compares the unsorted fabric against sort-at-source and sort-at-every-hop,
 with every link measured by ONE batched Pallas launch.
 
     PYTHONPATH=src python examples/noc_mesh.py
+
+REPRO_BENCH_TINY=1 (the CI examples-smoke contract) shrinks the injected
+payloads.
 """
+
+import os
 
 import jax.numpy as jnp
 import numpy as np
@@ -32,10 +37,16 @@ def main() -> None:
     spec = LinkSpec(width_bits=128, flits_per_packet=4,
                     input_lanes=16, weight_lanes=0)
 
-    patches = jnp.asarray(rng.integers(0, 256, (784, 25), dtype=np.uint8))
+    tiny = os.environ.get("REPRO_BENCH_TINY", "") not in ("", "0")
+    n_patches, n_out, grad_len = (128, 16, 1 << 12) if tiny else (
+        784, 64, 1 << 15
+    )
+    patches = jnp.asarray(
+        rng.integers(0, 256, (n_patches, 25), dtype=np.uint8)
+    )
     kernel = jnp.asarray(rng.integers(0, 256, (25,), dtype=np.uint8))
-    weight = jnp.asarray(rng.normal(size=(256, 64)), jnp.float32)
-    grad = jnp.asarray(rng.normal(size=(1 << 15,)), jnp.float32)
+    weight = jnp.asarray(rng.normal(size=(256, n_out)), jnp.float32)
+    grad = jnp.asarray(rng.normal(size=(grad_len,)), jnp.float32)
 
     flows = (
         conv_platform_flows(patches, kernel, topo, 0, pes[:6], spec)

@@ -8,10 +8,14 @@ via the ``repro.link`` row-stream TX pipeline, with sign-magnitude recoding
 (the beyond-paper encoding win).
 
     PYTHONPATH=src python examples/serve_decode.py
+
+REPRO_BENCH_TINY=1 (the CI examples-smoke contract) caps the batch and
+token counts and keeps the smoke config regardless of --full.
 """
 
 import argparse
 import dataclasses
+import os
 
 import jax
 import numpy as np
@@ -31,6 +35,12 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="serve a ~100M config instead of the smoke config")
     args = ap.parse_args()
+
+    if os.environ.get("REPRO_BENCH_TINY", "") not in ("", "0"):
+        args.full = False
+        args.batch = min(args.batch, 2)
+        args.prompt_len = min(args.prompt_len, 8)
+        args.new_tokens = min(args.new_tokens, 4)
 
     if args.full:
         cfg = get_config("internlm2-1.8b", n_layers=8, d_model=512, n_heads=8,

@@ -10,9 +10,14 @@ The default config is an internlm2-family decoder (~95M params: 12 layers,
 d_model 512, GQA 8/4, d_ff 2048, 92544 vocab tied).  A few hundred steps on
 the affine-recurrence corpus drop loss from ~11.5 toward the corpus entropy
 floor (CPU: ~30 s/step at this scale; on TPU this config is minutes).
+
+REPRO_BENCH_TINY=1 (the CI examples-smoke contract shared with
+``benchmarks/run.py``) forces the --tiny config at a few short steps,
+whatever the flags say.
 """
 
 import argparse
+import os
 
 from repro.configs import get_config
 from repro.data import DataConfig
@@ -28,6 +33,11 @@ def main() -> None:
     ap.add_argument("--ckpt", default="/tmp/repro_train_lm")
     ap.add_argument("--tiny", action="store_true", help="toy width (CI smoke)")
     args = ap.parse_args()
+
+    if os.environ.get("REPRO_BENCH_TINY", "") not in ("", "0"):
+        args.tiny = True
+        args.steps = min(args.steps, 3)
+        args.seq, args.batch = 64, 2
 
     if args.tiny:
         cfg = get_config(

@@ -1,0 +1,61 @@
+"""Zero-cost observability hook slots (DESIGN.md §14).
+
+This module is the ONLY thing production code imports for telemetry.  It
+holds one mutable slot, ``SINK`` — ``None`` by default — that
+``repro.obs`` installs a collector into while a ``collect()`` /
+``tracing()`` context is active.  With the slot empty every probe is a
+single attribute test against ``None`` executed in Python OUTSIDE any
+traced computation, so the traced jaxpr of every kernel entry point is
+byte-identical whether ``repro.obs`` is imported, active, or absent
+(asserted in ``tests/test_obs.py``).
+
+Deliberately dependency-free: importing this module never imports
+``repro.obs`` (nor jax), so the hot path carries no observability code
+until someone actually turns it on.
+"""
+
+from __future__ import annotations
+
+__all__ = ["SINK", "active", "event", "span"]
+
+# The installed sink (repro.obs.probes._Sink) or None.  Probes read this
+# once per call; repro.obs flips it when the first collector activates.
+SINK = None
+
+
+class _NullSpan:
+    """No-op context manager returned while no sink is installed."""
+
+    __slots__ = ()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+
+_NULL_SPAN = _NullSpan()
+
+
+def active() -> bool:
+    """True while at least one collector (registry or tracer) is active."""
+    return SINK is not None
+
+
+def span(kind: str, **data):
+    """A context manager timing one probe span (no-op when inactive).
+
+    ``kind`` names the probe point (e.g. ``"kernel.dispatch"``); ``data``
+    carries JSON-safe scalars only — probe sites fire during jax tracing
+    too, so values must never be traced arrays.
+    """
+    s = SINK
+    return _NULL_SPAN if s is None else s.span(kind, data)
+
+
+def event(kind: str, **data) -> None:
+    """Fire one instant probe event (no-op when inactive)."""
+    s = SINK
+    if s is not None:
+        s.event(kind, data)

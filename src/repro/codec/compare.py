@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import _obs_hooks as _obs
 from repro.kernels import CodecVariant, Variant, bt_count_codecs
 from repro.link import LinkPowerModel
 
@@ -134,14 +135,14 @@ def compare_streams(
 
     totals = np.zeros((len(configs), 3), dtype=np.int64)
     num_flits = 0
-    for s in streams:
+    for si, s in enumerate(streams):
         s = jnp.asarray(s)
         if s.ndim != 2 or s.shape[-1] % lanes != 0:
             raise ValueError(
                 f"streams must be (P, elems) with elems divisible by "
                 f"lanes={lanes}, got {tuple(s.shape)}"
             )
-        totals += np.asarray(
+        per_stream = np.asarray(
             bt_count_codecs(
                 s,
                 None,
@@ -155,6 +156,16 @@ def compare_streams(
             ),
             dtype=np.int64,
         )
+        totals += per_stream
+        if _obs.active():
+            # baseline (unordered, uncoded) data BT of this one stream
+            bi = pairs.index((_BASELINE, "none"))
+            _obs.event(
+                "codec.stream", workload=workload,
+                stream=f"{workload}[{si}]",
+                bt=int(per_stream[bi][:2].sum()),
+                packets=int(s.shape[0]),
+            )
         num_flits += int(s.shape[0]) * (int(s.shape[-1]) // lanes)
 
     base = int(totals[pairs.index((_BASELINE, "none"))][:2].sum())

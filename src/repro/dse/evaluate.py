@@ -46,6 +46,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import _obs_hooks as _obs
 from repro.core.area import PSUArea, PSUTiming, codec_area, psu_area
 from repro.kernels import (
     CodecVariant,
@@ -237,23 +238,38 @@ def _measure_grid(
     n_p2p = len(workload.streams)
     bt_tab: dict[tuple[int, CodecVariant], tuple[int, int]] = {}
     noc_tab: dict[tuple[int, str, CodecVariant], int] = {}
+    link_names = [
+        f"{workload.name}[{i}]" for i in range(n_p2p)
+    ] + [name for name in topo_rows]
     for width in sorted(configs_by_width):
         vs = configs_by_width[width]
-        out = np.asarray(
-            bt_count_axes(
-                stacked,
-                None,
-                valid=valid,
-                configs=vs,
-                width=width,
-                input_lanes=workload.lanes,
-                block_packets=block_packets,
-                interpret=interpret,
-                backend=backend,
-                chunk_packets=chunk_packets,
-            ),
-            dtype=np.int64,
-        )  # (L, C, 3)
+        with _obs.span(
+            "dse.measure", width=width, links=len(payloads),
+            configs=len(vs), workload=workload.name,
+        ):
+            out = np.asarray(
+                bt_count_axes(
+                    stacked,
+                    None,
+                    valid=valid,
+                    configs=vs,
+                    width=width,
+                    input_lanes=workload.lanes,
+                    block_packets=block_packets,
+                    interpret=interpret,
+                    backend=backend,
+                    chunk_packets=chunk_packets,
+                ),
+                dtype=np.int64,
+            )  # (L, C, 3)
+        if _obs.active():
+            # per-link baseline BT of this width's launch (config 0 is
+            # always the unsorted/uncoded baseline)
+            for li, lname in enumerate(link_names):
+                _obs.event(
+                    "dse.link", link=lname, width=width,
+                    bt=int(out[li, 0, :2].sum()), packets=int(valid[li]),
+                )
         for ci, v in enumerate(vs):
             p2p = out[:n_p2p, ci]
             bt_tab[(width, v)] = (
@@ -392,5 +408,9 @@ def evaluate_grid(
                 aux_bt=aux_bt,
                 extra_wires=extra_wires,
             )
+        )
+        _obs.event(
+            "dse.point", label=pt.label, width=pt.width,
+            bt_reduction=bt_red, area_um2=float(area.total),
         )
     return tuple(evals)

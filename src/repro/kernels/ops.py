@@ -35,6 +35,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from repro import _obs_hooks as _obs
 from repro.core.coding import bus_invert_partitions as _partitions
 
 from .axes import (
@@ -85,6 +86,23 @@ def default_interpret() -> bool:
     compiled Pallas kernel (i.e. anywhere off-TPU).  Kept for callers that
     predate the three-way backend dispatch."""
     return default_backend() != "pallas"
+
+
+def _probe(entry: str, resolved: str, **data):
+    """One ``kernel.dispatch`` probe span per public entry point call
+    (DESIGN.md §14).  Fires in Python OUTSIDE the jitted computation, so
+    the traced jaxpr is byte-identical with observability off, on, or
+    absent; a no-op ``None`` test when nothing collects.
+    ``pallas_launches`` records what this dispatch costs on the pallas
+    path (the cross-backend invariant is 1 per entry; the compiled jnp
+    backend launches no kernel)."""
+    return _obs.span(
+        "kernel.dispatch",
+        entry=entry,
+        backend=resolved,
+        pallas_launches=0 if resolved == "compiled" else 1,
+        **data,
+    )
 
 
 def _entry(jitted, backend: str):
@@ -186,14 +204,16 @@ def psu_sort(
     and trimmed on return.
     """
     resolved = resolve_backend(backend, interpret)
-    return _entry(_psu_sort, resolved)(
-        packets,
-        width=width,
-        k=k,
-        descending=descending,
-        block_packets=block_packets,
-        backend=resolved,
-    )
+    with _probe("psu_sort", resolved, shape=tuple(map(int, packets.shape)),
+                width=width, k=k):
+        return _entry(_psu_sort, resolved)(
+            packets,
+            width=width,
+            k=k,
+            descending=descending,
+            block_packets=block_packets,
+            backend=resolved,
+        )
 
 
 def psu_reorder(
@@ -579,18 +599,21 @@ def psu_stream(
     the wrapper only folds the G-1 inter-block flit boundaries.
     """
     resolved = resolve_backend(backend, interpret)
-    return _entry(_psu_stream, resolved)(
-        inputs,
-        weights,
-        width=width,
-        k=k,
-        descending=descending,
-        input_lanes=input_lanes,
-        weight_lanes=weight_lanes,
-        pack=pack,
-        block_packets=block_packets,
-        backend=resolved,
-    )
+    with _probe("psu_stream", resolved, shape=tuple(map(int, inputs.shape)),
+                width=width, k=k, pack=pack,
+                blocks=-(-int(inputs.shape[0]) // max(1, block_packets))):
+        return _entry(_psu_stream, resolved)(
+            inputs,
+            weights,
+            width=width,
+            k=k,
+            descending=descending,
+            input_lanes=input_lanes,
+            weight_lanes=weight_lanes,
+            pack=pack,
+            block_packets=block_packets,
+            backend=resolved,
+        )
 
 
 @partial(jax.jit, static_argnames=("width", "block_rows", "backend"))
@@ -614,12 +637,14 @@ def bt_count(
 ) -> jax.Array:
     """Total bit transitions of a (T, L) flit stream."""
     resolved = resolve_backend(backend, interpret)
-    return _entry(_bt_count, resolved)(
-        stream,
-        width=width,
-        block_rows=block_rows,
-        backend=resolved,
-    )
+    with _probe("bt_count", resolved, shape=tuple(map(int, stream.shape)),
+                width=width):
+        return _entry(_bt_count, resolved)(
+            stream,
+            width=width,
+            block_rows=block_rows,
+            backend=resolved,
+        )
 
 
 @partial(
@@ -724,20 +749,26 @@ def bt_count_axes(
     if inputs.ndim != 3:
         raise ValueError(f"expected (L, P, N) packets, got {inputs.shape}")
     resolved = resolve_backend(backend, interpret)
-    return _entry(_bt_count_axes, resolved)(
-        inputs,
-        weights,
-        valid,
-        configs=tuple(configs),
-        width=width,
-        input_lanes=input_lanes,
-        weight_lanes=weight_lanes,
-        split_lanes=split_lanes,
-        pack=pack,
-        block_packets=block_packets,
-        backend=resolved,
-        chunk_packets=chunk_packets,
-    )
+    links, p, _ = (int(d) for d in inputs.shape)
+    with _probe("bt_count_axes", resolved,
+                shape=tuple(map(int, inputs.shape)),
+                configs=len(tuple(configs)), width=width,
+                blocks=links * -(-p // max(1, min(block_packets, max(1, p)))),
+                chunked=chunk_packets is not None):
+        return _entry(_bt_count_axes, resolved)(
+            inputs,
+            weights,
+            valid,
+            configs=tuple(configs),
+            width=width,
+            input_lanes=input_lanes,
+            weight_lanes=weight_lanes,
+            split_lanes=split_lanes,
+            pack=pack,
+            block_packets=block_packets,
+            backend=resolved,
+            chunk_packets=chunk_packets,
+        )
 
 
 def bt_count_axes_sharded(
@@ -815,12 +846,15 @@ def bt_count_axes_sharded(
         return lax.psum(full, "links")
 
     spec = PartitionSpec("links")
-    out = shard_map(
-        local,
-        mesh=mesh,
-        in_specs=(spec, spec, spec),
-        out_specs=PartitionSpec(),
-    )(x, w, v)
+    with _probe("bt_count_axes_sharded", backend,
+                shape=(ltot, int(p), int(n)), configs=nc, width=width,
+                devices=nd):
+        out = shard_map(
+            local,
+            mesh=mesh,
+            in_specs=(spec, spec, spec),
+            out_specs=PartitionSpec(),
+        )(x, w, v)
     return out[:links]
 
 
@@ -911,15 +945,18 @@ def bt_count_links(
     if links == 0 or t < 2:
         return jnp.zeros((links, 2), jnp.int32)
     resolved = resolve_backend(backend, interpret)
-    return _entry(_bt_count_links, resolved)(
-        streams,
-        lengths,
-        input_lanes=input_lanes,
-        width=width,
-        block_rows=block_rows,
-        backend=resolved,
-        chunk_rows=chunk_rows,
-    )
+    with _probe("bt_count_links", resolved,
+                shape=(int(links), int(t), int(lanes)), width=width,
+                chunked=chunk_rows is not None):
+        return _entry(_bt_count_links, resolved)(
+            streams,
+            lengths,
+            input_lanes=input_lanes,
+            width=width,
+            block_rows=block_rows,
+            backend=resolved,
+            chunk_rows=chunk_rows,
+        )
 
 
 def bt_count_variants(
@@ -1038,4 +1075,8 @@ def quantize_egress(
     callers keep ``padded_size`` to dequantize and trim.
     """
     resolved = resolve_backend(backend, interpret)
-    return _entry(_quantize_egress, resolved)(x, block=block, backend=resolved)
+    with _probe("quantize_egress", resolved, elems=int(x.shape[0]),
+                block=block):
+        return _entry(_quantize_egress, resolved)(
+            x, block=block, backend=resolved
+        )

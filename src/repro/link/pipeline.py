@@ -28,6 +28,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro import _obs_hooks as _obs
 from repro.core.bt import BTReport
 from repro.kernels import bt_count, psu_stream
 
@@ -197,51 +198,62 @@ class TxPipeline:
                 f"packet payload {inputs.shape[-1]} != "
                 f"flits*input_lanes = {s.elems_per_packet}"
             )
-        xi = self.encode(inputs)
-        wi = self.encode(weights) if weights is not None else None
         fused = self._fused if self._fused is not None else self._fusable(weights)
         if fused and not self._fusable(weights):
             raise ValueError(
                 f"spec (key={s.key!r}, pack={s.pack!r}, codec={s.codec!r}, "
                 f"symmetric={s.symmetric}) cannot run fused"
             )
-        if fused:
-            res = psu_stream(
-                xi,
-                wi,
-                width=s.width,
-                k=None if s.key == "acc" else s.k,
-                descending=s.descending,
-                input_lanes=s.input_lanes,
-                weight_lanes=s.weight_lanes if wi is not None else None,
-                pack=s.pack,
-                block_packets=self._block_packets,
-                interpret=self._interpret,
-                backend=self._backend,
-            )
+        with _obs.span(
+            "link.tx", path="fused" if fused else "staged", key=s.key,
+            codec=s.codec, packets=int(inputs.shape[0]),
+        ):
+            xi = self.encode(inputs)
+            wi = self.encode(weights) if weights is not None else None
+            if fused:
+                res = psu_stream(
+                    xi,
+                    wi,
+                    width=s.width,
+                    k=None if s.key == "acc" else s.k,
+                    descending=s.descending,
+                    input_lanes=s.input_lanes,
+                    weight_lanes=s.weight_lanes if wi is not None else None,
+                    pack=s.pack,
+                    block_packets=self._block_packets,
+                    interpret=self._interpret,
+                    backend=self._backend,
+                )
+                return TxResult(
+                    res.order, res.rank, res.stream, res.bt_input,
+                    res.bt_weight, True,
+                )
+            with _obs.span("link.stage", stage="order"):
+                order = make_order(
+                    s.key, xi, lanes=s.input_lanes, width=s.width, k=s.k,
+                    descending=s.descending,
+                )
+            with _obs.span("link.stage", stage="assemble"):
+                stream = assemble_stream(xi, wi, s, order, s.pack)
+            invert, bt_aux = None, jnp.int32(0)
+            if s.codec != "none":
+                with _obs.span("link.stage", stage="codec"):
+                    stream, invert, bt_aux = self._code_wire(stream)
+            with _obs.span("link.stage", stage="bt"):
+                bt_i = bt_count(
+                    stream[:, : s.input_lanes], interpret=self._interpret,
+                    backend=self._backend,
+                )
+                if wi is not None and s.weight_lanes:
+                    bt_w = bt_count(
+                        stream[:, s.input_lanes :], interpret=self._interpret,
+                        backend=self._backend,
+                    )
+                else:
+                    bt_w = jnp.int32(0)
             return TxResult(
-                res.order, res.rank, res.stream, res.bt_input, res.bt_weight, True
+                order, None, stream, bt_i, bt_w, False, invert, bt_aux
             )
-        order = make_order(
-            s.key, xi, lanes=s.input_lanes, width=s.width, k=s.k,
-            descending=s.descending,
-        )
-        stream = assemble_stream(xi, wi, s, order, s.pack)
-        invert, bt_aux = None, jnp.int32(0)
-        if s.codec != "none":
-            stream, invert, bt_aux = self._code_wire(stream)
-        bt_i = bt_count(
-            stream[:, : s.input_lanes], interpret=self._interpret,
-            backend=self._backend,
-        )
-        if wi is not None and s.weight_lanes:
-            bt_w = bt_count(
-                stream[:, s.input_lanes :], interpret=self._interpret,
-                backend=self._backend,
-            )
-        else:
-            bt_w = jnp.int32(0)
-        return TxResult(order, None, stream, bt_i, bt_w, False, invert, bt_aux)
 
     def transmit(
         self, inputs: jax.Array, weights: jax.Array | None = None
@@ -264,15 +276,20 @@ class TxPipeline:
         num_flits, lanes = (int(d) for d in res.stream.shape)
         bt_i, bt_w = int(res.bt_input), int(res.bt_weight)
         aux, wires = int(res.bt_aux), self._extra_wires(lanes)
+        energy = self.power.coded_link_energy_pj(
+            bt_i + bt_w, aux, num_flits, 8 * lanes, wires
+        )
+        _obs.event(
+            "link.report", name=name, bt_input=bt_i, bt_weight=bt_w,
+            aux_bt=aux, num_flits=num_flits, energy_pj=energy,
+        )
         return LinkReport(
             name,
             num_flits,
             bt_i,
             bt_w,
             fused=res.fused,
-            energy_pj=self.power.coded_link_energy_pj(
-                bt_i + bt_w, aux, num_flits, 8 * lanes, wires
-            ),
+            energy_pj=energy,
             aux_bt=aux,
             extra_wires=wires,
         )
@@ -331,15 +348,20 @@ class TxPipeline:
         )
         num_flits, lanes = (int(d) for d in stream.shape)
         wires = self._extra_wires(lanes)
+        energy = self.power.coded_link_energy_pj(
+            bt, aux, num_flits, 8 * lanes, wires
+        )
+        _obs.event(
+            "link.report", name=name, bt_input=bt, bt_weight=0,
+            aux_bt=aux, num_flits=num_flits, energy_pj=energy,
+        )
         return LinkReport(
             name,
             num_flits,
             bt,
             0,
             fused=False,
-            energy_pj=self.power.coded_link_energy_pj(
-                bt, aux, num_flits, 8 * lanes, wires
-            ),
+            energy_pj=energy,
             aux_bt=aux,
             extra_wires=wires,
         )

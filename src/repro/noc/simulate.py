@@ -41,6 +41,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import _obs_hooks as _obs
 from repro.kernels import bt_count_links
 from repro.link import ENCODE_STAGES, LinkSpec, make_order, row_bucket_order
 from repro.link.framing import assemble_stream
@@ -235,6 +236,21 @@ def expand_link_streams(
             "stages ('none', 'column_major', 'acc', 'app'); 'row_bucket' is "
             "a row-stream stage (TxPipeline.measure_rows)"
         )
+    with _obs.span(
+        "noc.expand",
+        topology=f"{topo.kind}{topo.rows}x{topo.cols}",
+        sort_at=sort_at, flows=len(flows),
+    ):
+        return _expand_link_streams(topo, flows, spec, sort_at=sort_at)
+
+
+def _expand_link_streams(
+    topo: Topology,
+    flows: Sequence[TrafficFlow],
+    spec: LinkSpec,
+    *,
+    sort_at: str,
+) -> LinkStreams:
     encode = ENCODE_STAGES[spec.encode]
     # per-flow: encoded payloads + element order, computed ONCE at the source
     per_flow = []
@@ -349,6 +365,40 @@ def simulate_noc(
     tensor would not fit in memory at once.
     """
     power = power if power is not None else NocPowerModel()
+    with _obs.span(
+        "noc.simulate",
+        topology=f"{topo.kind}{topo.rows}x{topo.cols}",
+        sort_at=sort_at, key=spec.key, flows=len(flows), name=name,
+    ):
+        report = _simulate_noc(
+            topo, flows, spec, sort_at=sort_at, power=power,
+            interpret=interpret, backend=backend, chunk_rows=chunk_rows,
+            name=name,
+        )
+    if _obs.active():
+        # per-link egress telemetry (the rows behind repro.obs.report)
+        for s in report.links:
+            _obs.event(
+                "noc.link", link=s.link, src=s.src, dst=s.dst,
+                num_flits=s.num_flits, bt_input=s.bt_input,
+                bt_weight=s.bt_weight, bt_aux=s.bt_aux,
+                energy_pj=s.energy_pj,
+            )
+    return report
+
+
+def _simulate_noc(
+    topo: Topology,
+    flows: Sequence[TrafficFlow],
+    spec: LinkSpec,
+    *,
+    sort_at: str,
+    power: NocPowerModel,
+    interpret: bool | None,
+    backend: str | None,
+    chunk_rows: int | None,
+    name: str,
+) -> NocReport:
     ls = expand_link_streams(topo, flows, spec, sort_at=sort_at)
     extra_wires = 0
     if spec.codec != "none":

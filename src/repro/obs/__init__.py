@@ -1,0 +1,44 @@
+# repro.obs — observability for the kernel/link/NoC/DSE stack
+# (DESIGN.md §14):
+#   metrics.py - counter/gauge/histogram registry + scoped collect()
+#   trace.py   - span API emitting Chrome/Perfetto trace-event JSON
+#   probes.py  - the sink behind repro._obs_hooks: probe vocabulary,
+#                collect()/tracing() activation
+#   report.py  - per-link BT tables, top-N hottest links, CSV/JSON dumps
+#
+# Disabled by default with provably zero cost: production modules import
+# only repro._obs_hooks (a None-test per probe, fired OUTSIDE any traced
+# computation), so importing or activating this package leaves every
+# kernel entry point's traced jaxpr byte-identical (tests/test_obs.py).
+from .metrics import Counter, Gauge, Histogram, Registry, registry_from_dict
+from .probes import active_registries, active_tracers, collect, tracing
+from .report import (
+    format_links,
+    link_table,
+    metrics_dict,
+    read_metrics_json,
+    top_links,
+    write_links_csv,
+    write_metrics_json,
+)
+from .trace import Tracer
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "Registry",
+    "registry_from_dict",
+    "Tracer",
+    "collect",
+    "tracing",
+    "active_registries",
+    "active_tracers",
+    "link_table",
+    "top_links",
+    "format_links",
+    "write_links_csv",
+    "metrics_dict",
+    "write_metrics_json",
+    "read_metrics_json",
+]

@@ -1,0 +1,200 @@
+"""The probe layer: routes hook firings into registries and tracers
+(DESIGN.md §14).
+
+Production modules call ``repro._obs_hooks.span/event`` at fixed probe
+points; while at least one :func:`collect` or :func:`tracing` context is
+active this module's sink is installed into the hook slot and every firing
+fans out to all active collectors.  The probe vocabulary:
+
+  =================  =====  ==============================================
+  kind               form   fired by
+  =================  =====  ==============================================
+  kernel.dispatch    span   every public kernel entry point in
+                            ``repro.kernels.ops`` (resolved backend,
+                            shapes, grid blocks, pallas launches)
+  link.tx            span   ``link.TxPipeline.run`` (fused or staged)
+  link.stage         span   each staged-path stage (order/assemble/codec/
+                            bt) inside ``TxPipeline.run``
+  link.report        event  ``TxPipeline.measure``/``measure_rows`` —
+                            per-stream BT/energy totals
+  noc.expand         span   ``noc.expand_link_streams``
+  noc.simulate       span   ``noc.simulate_noc``
+  noc.link           event  one per measured NoC link (the per-link BT
+                            telemetry behind ``repro.obs.report``)
+  dse.measure        span   each per-width multi-axis launch in
+                            ``dse.evaluate_grid``
+  dse.link           event  one per measurement link of a DSE grid launch
+  dse.point          event  one per evaluated design point
+  codec.stream       event  per-stream totals in ``codec.compare_streams``
+  bench.module       span   ``benchmarks/run.py --trace`` around each
+                            module run
+  =================  =====  ==============================================
+
+Span firings become Chrome trace spans on every active tracer plus a
+``<kind>.calls`` counter and ``<kind>.seconds`` histogram (labeled by the
+kind's identity keys) on every active registry; event firings become
+instant trace events plus the per-kind counters below.  Unknown kinds
+still count (``<kind>.calls``) so new probe points degrade gracefully.
+"""
+
+from __future__ import annotations
+
+import time
+from contextlib import contextmanager
+
+from repro import _obs_hooks
+
+from .metrics import Registry
+from .trace import Tracer
+
+__all__ = ["collect", "tracing", "active_registries", "active_tracers"]
+
+# label keys lifted from span payloads into metric series identity —
+# everything else stays trace-only (unbounded-cardinality values like
+# shapes must never become label sets)
+_SPAN_LABELS: dict[str, tuple[str, ...]] = {
+    "kernel.dispatch": ("entry", "backend"),
+    "link.tx": ("path", "key", "codec"),
+    "link.stage": ("stage",),
+    "noc.expand": ("topology", "sort_at"),
+    "noc.simulate": ("topology", "sort_at"),
+    "dse.measure": ("width",),
+    "bench.module": ("module",),
+}
+
+
+def _labels(kind: str, data: dict) -> dict:
+    keys = _SPAN_LABELS.get(kind, ())
+    return {k: data[k] for k in keys if k in data}
+
+
+def _record_span(reg: Registry, kind: str, data: dict, seconds: float) -> None:
+    labels = _labels(kind, data)
+    reg.counter(f"{kind}.calls", **labels).inc()
+    reg.histogram(f"{kind}.seconds", **labels).observe(seconds)
+    if kind == "kernel.dispatch":
+        reg.counter(
+            "kernel.pallas_launches", **_labels(kind, data)
+        ).inc(data.get("pallas_launches", 0))
+
+
+def _record_event(reg: Registry, kind: str, data: dict) -> None:
+    if kind == "noc.link":
+        lab = {
+            "link": data["link"], "src": data["src"], "dst": data["dst"],
+        }
+        reg.counter("noc.link.bt", side="input", **lab).inc(data["bt_input"])
+        reg.counter("noc.link.bt", side="weight", **lab).inc(data["bt_weight"])
+        reg.counter("noc.link.bt", side="aux", **lab).inc(data["bt_aux"])
+        reg.counter("noc.link.flits", **lab).inc(data["num_flits"])
+        reg.counter("noc.link.energy_pj", **lab).inc(data["energy_pj"])
+    elif kind == "link.report":
+        lab = {"stream": data["name"]}
+        reg.counter("link.bt", side="input", **lab).inc(data["bt_input"])
+        reg.counter("link.bt", side="weight", **lab).inc(data["bt_weight"])
+        reg.counter("link.bt", side="aux", **lab).inc(data["aux_bt"])
+        reg.counter("link.flits", **lab).inc(data["num_flits"])
+        reg.counter("link.energy_pj", **lab).inc(data["energy_pj"])
+    elif kind == "dse.link":
+        lab = {"link": data["link"], "width": data["width"]}
+        reg.counter("dse.link.bt", **lab).inc(data["bt"])
+        reg.counter("dse.link.packets", **lab).inc(data["packets"])
+    elif kind == "dse.point":
+        reg.counter("dse.points", width=data["width"]).inc()
+        reg.histogram("dse.point.bt_reduction").observe(data["bt_reduction"])
+    elif kind == "codec.stream":
+        reg.counter(
+            "codec.stream.bt", workload=data["workload"],
+            stream=data["stream"],
+        ).inc(data["bt"])
+    else:  # unknown kinds still count — new probes degrade gracefully
+        reg.counter(f"{kind}.calls", **_labels(kind, data)).inc()
+
+
+class _SpanCtx:
+    """One probe span fanned out to every active tracer + registry."""
+
+    __slots__ = ("_sink", "_kind", "_data", "_ends", "_t0")
+
+    def __init__(self, sink: "_Sink", kind: str, data: dict) -> None:
+        self._sink, self._kind, self._data = sink, kind, data
+
+    def __enter__(self):
+        self._ends = [
+            t.begin(self._kind, args=self._data) for t in self._sink.tracers
+        ]
+        self._t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        seconds = time.perf_counter() - self._t0
+        for end in self._ends:
+            end()
+        for reg in self._sink.registries:
+            _record_span(reg, self._kind, self._data, seconds)
+        return False
+
+
+class _Sink:
+    """The multiplexer installed into ``repro._obs_hooks.SINK``."""
+
+    def __init__(self) -> None:
+        self.registries: list[Registry] = []
+        self.tracers: list[Tracer] = []
+
+    def span(self, kind: str, data: dict) -> _SpanCtx:
+        return _SpanCtx(self, kind, data)
+
+    def event(self, kind: str, data: dict) -> None:
+        for t in self.tracers:
+            t.instant(kind, args=data)
+        for reg in self.registries:
+            _record_event(reg, kind, data)
+
+
+_SINK = _Sink()
+
+
+def _refresh() -> None:
+    _obs_hooks.SINK = (
+        _SINK if (_SINK.registries or _SINK.tracers) else None
+    )
+
+
+def active_registries() -> tuple[Registry, ...]:
+    return tuple(_SINK.registries)
+
+
+def active_tracers() -> tuple[Tracer, ...]:
+    return tuple(_SINK.tracers)
+
+
+@contextmanager
+def collect(registry: Registry | None = None):
+    """Activate metrics collection for the with-body; yields the registry.
+
+    Nested ``collect()`` scopes all receive every probe firing (each scope
+    sees its own totals).  Entering the first scope is what installs the
+    sink — before that, probes are a ``None`` test and nothing else.
+    """
+    reg = Registry() if registry is None else registry
+    _SINK.registries.append(reg)
+    _refresh()
+    try:
+        yield reg
+    finally:
+        _SINK.registries.remove(reg)
+        _refresh()
+
+
+@contextmanager
+def tracing(tracer: Tracer | None = None):
+    """Activate span tracing for the with-body; yields the tracer."""
+    tr = Tracer() if tracer is None else tracer
+    _SINK.tracers.append(tr)
+    _refresh()
+    try:
+        yield tr
+    finally:
+        _SINK.tracers.remove(tr)
+        _refresh()

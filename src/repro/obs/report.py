@@ -1,0 +1,148 @@
+"""Reports over collected telemetry: per-link BT tables, top-N hottest
+links, CSV/JSON heatmap dumps (DESIGN.md §14).
+
+Everything here reads a :class:`~repro.obs.metrics.Registry` populated by
+the ``noc.link`` / ``link.report`` / ``dse.link`` probes and emits the
+same flat-scalar record style as ``repro.dse.report`` — one dict per link
+with JSON-safe values — so the artifacts diff cleanly and slot next to
+the DSE front JSON/CSV in the bench trajectory.
+"""
+
+from __future__ import annotations
+
+import csv
+import json
+import os
+from typing import Sequence
+
+from .metrics import Registry, registry_from_dict
+
+__all__ = [
+    "link_table",
+    "top_links",
+    "format_links",
+    "write_links_csv",
+    "metrics_dict",
+    "write_metrics_json",
+    "read_metrics_json",
+]
+
+LINK_FIELDS = (
+    "link",
+    "src",
+    "dst",
+    "bt_input",
+    "bt_weight",
+    "aux_bt",
+    "gross_bt",
+    "num_flits",
+    "bt_per_flit",
+    "energy_pj",
+)
+
+
+def link_table(registry: Registry) -> list[dict]:
+    """One flat record per NoC link seen by the ``noc.link`` probe.
+
+    Values accumulate across every ``simulate_noc`` run inside the
+    ``collect()`` scope — a link traversed by several fabric runs reports
+    its total traffic.
+    """
+    rows: dict[tuple[int, int, int], dict] = {}
+    for series in registry.series("noc.link.bt"):
+        lab = series.labels
+        key = (int(lab["link"]), int(lab["src"]), int(lab["dst"]))
+        row = rows.setdefault(
+            key,
+            {
+                "link": key[0],
+                "src": key[1],
+                "dst": key[2],
+                "bt_input": 0,
+                "bt_weight": 0,
+                "aux_bt": 0,
+            },
+        )
+        row[f"bt_{lab['side']}" if lab["side"] != "aux" else "aux_bt"] = int(
+            series.value
+        )
+    for key, row in rows.items():
+        lab = {"link": key[0], "src": key[1], "dst": key[2]}
+        flits = int(registry.value("noc.link.flits", **lab))
+        gross = row["bt_input"] + row["bt_weight"] + row["aux_bt"]
+        row["gross_bt"] = gross
+        row["num_flits"] = flits
+        row["bt_per_flit"] = round(gross / max(flits, 1), 6)
+        row["energy_pj"] = round(
+            registry.value("noc.link.energy_pj", **lab), 3
+        )
+    return [rows[k] for k in sorted(rows)]
+
+
+def top_links(registry: Registry, n: int = 5) -> list[dict]:
+    """The n hottest links by gross BT (data + invert-line), descending."""
+    table = link_table(registry)
+    table.sort(key=lambda r: (-r["gross_bt"], r["link"]))
+    return table[:n]
+
+
+def format_links(rows: Sequence[dict]) -> str:
+    """Aligned text table of link records (the bench / example view)."""
+    head = (
+        f"{'link':>4s} {'route':>9s} {'input BT':>10s} {'weight BT':>10s} "
+        f"{'aux BT':>8s} {'gross BT':>10s} {'flits':>8s} {'BT/flit':>8s} "
+        f"{'energy pJ':>11s}"
+    )
+    lines = [head, "-" * len(head)]
+    for r in rows:
+        lines.append(
+            f"{r['link']:4d} {r['src']:>4d}->{r['dst']:<4d} "
+            f"{r['bt_input']:10d} {r['bt_weight']:10d} {r['aux_bt']:8d} "
+            f"{r['gross_bt']:10d} {r['num_flits']:8d} "
+            f"{r['bt_per_flit']:8.2f} {r['energy_pj']:11.1f}"
+        )
+    return "\n".join(lines)
+
+
+def _ensure_parent(path: str) -> None:
+    parent = os.path.dirname(path)
+    if parent:
+        os.makedirs(parent, exist_ok=True)
+
+
+def write_links_csv(path: str, registry: Registry) -> list[dict]:
+    """Write (and return) the per-link heatmap CSV — one row per directed
+    link with its accumulated BT/energy, the ``(src, dst)`` pair being the
+    heatmap coordinate (README: "reading a per-link heatmap CSV")."""
+    rows = link_table(registry)
+    _ensure_parent(path)
+    with open(path, "w", newline="") as f:
+        writer = csv.DictWriter(f, fieldnames=LINK_FIELDS)
+        writer.writeheader()
+        writer.writerows(rows)
+    return rows
+
+
+def metrics_dict(registry: Registry) -> dict:
+    """The registry as one JSON-safe document (counters/gauges/histograms
+    plus the derived per-link table)."""
+    doc = registry.to_dict()
+    doc["links"] = link_table(registry)
+    return doc
+
+
+def write_metrics_json(path: str, registry: Registry) -> dict:
+    """Write (and return) the full metrics report as JSON."""
+    doc = metrics_dict(registry)
+    _ensure_parent(path)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=False)
+        f.write("\n")
+    return doc
+
+
+def read_metrics_json(path: str) -> Registry:
+    """Rebuild a registry from a :func:`write_metrics_json` artifact (the
+    round-trip pinned in ``tests/test_obs.py``)."""
+    with open(path) as f:
+        return registry_from_dict(json.load(f))

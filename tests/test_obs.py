@@ -1,0 +1,407 @@
+"""The repro.obs observability subsystem (DESIGN.md §14).
+
+The load-bearing claim is ZERO cost when disabled: production modules
+import only ``repro._obs_hooks`` (a None test per probe, fired outside
+any traced computation), so every kernel entry point's traced jaxpr is
+byte-identical whether ``repro.obs`` is absent from the process, imported
+but inactive, or actively collecting.  The rest pins the probe
+vocabulary, the metrics JSON round-trip, the per-link report against
+``NocReport``, the Chrome trace schema, and the ``check_bench``
+regression gate.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import _obs_hooks, obs
+from repro.kernels import CodecVariant, bt_count, bt_count_axes
+from repro.link import LinkSpec, TxPipeline
+from repro.noc import TrafficFlow, simulate_noc
+from repro.noc.topology import mesh
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+_CFG = (CodecVariant("none", None, False, "none", None),
+        CodecVariant("acc", None, False, "bus_invert", 4))
+
+
+def _packets(p=8, elems=32, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(0, 255, (p, elems), dtype=np.uint8))
+
+
+def _input_spec():
+    return LinkSpec(width_bits=64, input_lanes=8, weight_lanes=0)
+
+
+def _jaxprs():
+    """Traced-jaxpr strings of the probed public entry points."""
+    x = _packets()
+    pipe = TxPipeline(_input_spec(), interpret=True)
+    return {
+        "bt_count": str(jax.make_jaxpr(
+            lambda a: bt_count(a, interpret=True))(x)),
+        "bt_count_axes": str(jax.make_jaxpr(
+            lambda a: bt_count_axes(
+                a[None], None, configs=_CFG, width=8, input_lanes=8,
+                interpret=True,
+            ))(x)),
+        "tx_run": str(jax.make_jaxpr(
+            lambda a: pipe.run(a).bt_input)(x)),
+    }
+
+
+# --------------------------------------------- zero cost when disabled
+
+
+def test_jaxpr_identical_with_obs_absent_vs_imported():
+    """In a fresh process: production imports never pull in repro.obs,
+    and importing + activating it leaves every traced jaxpr
+    byte-identical (the tentpole claim)."""
+    script = """
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import CodecVariant, bt_count, bt_count_axes
+from repro.link import LinkSpec, TxPipeline
+
+assert "repro.obs" not in sys.modules, "production code imported repro.obs"
+
+x = jnp.asarray(
+    np.random.default_rng(0).integers(0, 255, (8, 32), dtype=np.uint8)
+)
+cfg = (CodecVariant("none", None, False, "none", None),
+       CodecVariant("acc", None, False, "bus_invert", 4))
+pipe = TxPipeline(
+    LinkSpec(width_bits=64, input_lanes=8, weight_lanes=0), interpret=True
+)
+
+def jaxprs():
+    return {
+        "bt_count": str(jax.make_jaxpr(
+            lambda a: bt_count(a, interpret=True))(x)),
+        "bt_count_axes": str(jax.make_jaxpr(
+            lambda a: bt_count_axes(
+                a[None], None, configs=cfg, width=8, input_lanes=8,
+                interpret=True,
+            ))(x)),
+        "tx_run": str(jax.make_jaxpr(lambda a: pipe.run(a).bt_input)(x)),
+    }
+
+before = jaxprs()
+assert "repro.obs" not in sys.modules, "tracing imported repro.obs"
+from repro import obs
+mid = jaxprs()
+with obs.collect(), obs.tracing():
+    after = jaxprs()
+assert before == mid, "importing repro.obs changed a jaxpr"
+assert before == after, "activating repro.obs changed a jaxpr"
+print("JAXPR-IDENTITY-OK")
+"""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(_REPO, "src"), _REPO]
+        + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else [])
+    )
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    out = subprocess.run(
+        [sys.executable, "-c", script], capture_output=True, text=True,
+        env=env, cwd=_REPO, timeout=600,
+    )
+    assert out.returncode == 0, out.stderr
+    assert "JAXPR-IDENTITY-OK" in out.stdout
+
+
+def test_jaxpr_identical_inactive_vs_collecting():
+    before = _jaxprs()
+    with obs.collect(), obs.tracing():
+        during = _jaxprs()
+    after = _jaxprs()
+    assert before == during == after
+
+
+def test_hooks_inactive_by_default():
+    assert _obs_hooks.SINK is None or obs.active_registries()
+    with obs.collect():
+        assert _obs_hooks.active()
+        assert _obs_hooks.SINK is not None
+    assert not _obs_hooks.active()
+    # the null span is a no-op context manager
+    with _obs_hooks.span("kernel.dispatch", entry="x"):
+        pass
+    _obs_hooks.event("noc.link", link=0)  # swallowed
+
+
+# --------------------------------------------------- probe vocabulary
+
+
+def test_kernel_dispatch_counters():
+    x = _packets()
+    with obs.collect() as reg:
+        bt_count(x, backend="interpret")
+        bt_count(x, backend="interpret")
+        bt_count(x, backend="compiled")
+    assert reg.value(
+        "kernel.dispatch.calls", entry="bt_count", backend="interpret") == 2
+    assert reg.value(
+        "kernel.dispatch.calls", entry="bt_count", backend="compiled") == 1
+    # pallas launch accounting: interpret dispatches launch, compiled don't
+    assert reg.value(
+        "kernel.pallas_launches", entry="bt_count", backend="interpret") == 2
+    assert reg.value(
+        "kernel.pallas_launches", entry="bt_count", backend="compiled") == 0
+
+
+def test_link_pipeline_probes_and_report_counters():
+    x = _packets()
+    pipe = TxPipeline(_input_spec(), interpret=True)
+    with obs.collect() as reg:
+        rep = pipe.measure(x, name="s0")
+    assert reg.value("link.tx.calls", path="fused", key="acc",
+                     codec="none") == 1
+    assert reg.value("link.bt", side="input", stream="s0") == rep.input_bt
+    assert reg.value("link.flits", stream="s0") == rep.num_flits
+    # staged path fires the stage spans
+    staged = TxPipeline(
+        LinkSpec(width_bits=64, input_lanes=8, weight_lanes=0,
+                 key="column_major"),
+        interpret=True,
+    )
+    with obs.collect() as reg2:
+        staged.measure(x, name="s1")
+    assert reg2.value("link.tx.calls", path="staged", key="column_major",
+                      codec="none") == 1
+    for stage in ("order", "assemble", "bt"):
+        assert reg2.value("link.stage.calls", stage=stage) == 1
+
+
+def test_nested_collect_scopes_both_see_firings():
+    x = _packets()
+    with obs.collect() as outer:
+        bt_count(x, backend="interpret")
+        with obs.collect() as inner:
+            bt_count(x, backend="interpret")
+    assert outer.value("kernel.dispatch.calls", entry="bt_count",
+                       backend="interpret") == 2
+    assert inner.value("kernel.dispatch.calls", entry="bt_count",
+                       backend="interpret") == 1
+
+
+# ------------------------------------------- NoC per-link report layer
+
+
+def _noc_run():
+    x = _packets(elems=_input_spec().elems_per_packet, seed=3)
+    flows = [TrafficFlow("f0", 0, (3,), x), TrafficFlow("f1", 1, (2,), x)]
+    with obs.collect() as reg:
+        rep = simulate_noc(
+            mesh(2, 2), flows, _input_spec(), interpret=True
+        )
+    return reg, rep
+
+
+def test_noc_link_counters_match_report():
+    reg, rep = _noc_run()
+    table = obs.link_table(reg)
+    assert len(table) == rep.active_links
+    by_id = {s.link: s for s in rep.links}
+    for row in table:
+        s = by_id[row["link"]]
+        assert (row["src"], row["dst"]) == (s.src, s.dst)
+        assert row["bt_input"] == s.bt_input
+        assert row["bt_weight"] == s.bt_weight
+        assert row["aux_bt"] == s.bt_aux
+        assert row["gross_bt"] == s.gross_bt
+        assert row["num_flits"] == s.num_flits
+        assert row["energy_pj"] == pytest.approx(s.energy_pj, abs=0.01)
+    assert sum(r["gross_bt"] for r in table) == rep.gross_bt
+
+
+def test_top_links_ordering_and_format(tmp_path):
+    reg, rep = _noc_run()
+    top = obs.top_links(reg, 2)
+    assert len(top) == min(2, rep.active_links)
+    gross = [r["gross_bt"] for r in obs.link_table(reg)]
+    assert top[0]["gross_bt"] == max(gross)
+    assert [r["gross_bt"] for r in top] == sorted(
+        [r["gross_bt"] for r in top], reverse=True
+    )
+    text = obs.format_links(top)
+    assert "gross BT" in text and str(top[0]["gross_bt"]) in text
+    # heatmap CSV artifact: header + one row per link
+    path = tmp_path / "links.csv"
+    rows = obs.write_links_csv(str(path), reg)
+    lines = path.read_text().strip().splitlines()
+    assert lines[0].split(",") == list(obs.report.LINK_FIELDS)
+    assert len(lines) == 1 + len(rows)
+
+
+def test_metrics_json_round_trip(tmp_path):
+    reg, _ = _noc_run()
+    path = tmp_path / "metrics.json"
+    doc = obs.write_metrics_json(str(path), reg)
+    assert doc["links"] == obs.link_table(reg)
+    reg2 = obs.read_metrics_json(str(path))
+    assert reg2.to_dict() == reg.to_dict()
+    assert obs.link_table(reg2) == obs.link_table(reg)
+
+
+# ------------------------------------------------------- trace schema
+
+
+def test_tracer_chrome_schema(tmp_path):
+    x = _packets()
+    tracer = obs.Tracer()
+    with obs.tracing(tracer):
+        with _obs_hooks.span("bench.module", module="demo"):
+            bt_count(x, backend="interpret")
+        _obs_hooks.event("noc.link", link=0, shape=(2, 3))
+    doc = tracer.to_chrome(metadata={"git_sha": "abc"})
+    json.dumps(doc)  # JSON-safe throughout (tuples coerced)
+    assert doc["metadata"] == {"git_sha": "abc"}
+    spans = [e for e in doc["traceEvents"] if e["ph"] == "X"]
+    names = {e["name"] for e in spans}
+    assert {"bench.module", "kernel.dispatch"} <= names
+    for e in spans:
+        assert {"name", "cat", "ph", "ts", "dur", "pid", "tid",
+                "args"} <= set(e)
+        assert e["dur"] >= 0
+    outer = next(e for e in spans if e["name"] == "bench.module")
+    inner = next(e for e in spans if e["name"] == "kernel.dispatch")
+    # nested purely by timestamp containment
+    assert outer["ts"] <= inner["ts"]
+    assert inner["ts"] + inner["dur"] <= outer["ts"] + outer["dur"] + 1.0
+    assert tracer.span_seconds("bench.module") >= tracer.span_seconds(
+        "kernel.dispatch"
+    )
+    instants = [e for e in doc["traceEvents"] if e["ph"] == "i"]
+    assert instants and instants[0]["args"]["shape"] == [2, 3]
+    out = tracer.write(str(tmp_path / "t.json"))
+    assert json.load(open(tmp_path / "t.json")) == out
+
+
+# ------------------------------------------------- check_bench gating
+
+
+def _write_bench(dirpath, name, wall_s, tiny=True, failed=None):
+    payload = {
+        "module": name, "tiny": tiny, "wall_s": wall_s,
+        "rows": [] if failed else [
+            {"name": f"{name}/r0", "us_per_call": 1.0, "derived": "ok"}
+        ],
+    }
+    if failed:
+        payload["failed"] = failed
+    os.makedirs(dirpath, exist_ok=True)
+    with open(os.path.join(dirpath, f"BENCH_{name}.json"), "w") as f:
+        json.dump(payload, f)
+
+
+def test_check_bench_gates(tmp_path):
+    from benchmarks.check_bench import check
+    from benchmarks.run import MODULES
+
+    run_dir, base_dir = str(tmp_path / "run"), str(tmp_path / "base")
+    for name in MODULES:
+        _write_bench(run_dir, name, wall_s=1.0)
+        _write_bench(base_dir, name, wall_s=1.0)
+    problems, warnings = check(run_dir, base_dir)
+    assert problems == [] and warnings == []
+
+    # a registered module that wrote no JSON fails by name
+    os.remove(os.path.join(run_dir, f"BENCH_{MODULES[0]}.json"))
+    problems, _ = check(run_dir, base_dir)
+    assert len(problems) == 1 and MODULES[0] in problems[0]
+    _write_bench(run_dir, MODULES[0], wall_s=1.0)
+
+    # a module dropped from MODULES but still in the baseline fails by name
+    _write_bench(base_dir, "ghost_module", wall_s=1.0)
+    problems, _ = check(run_dir, base_dir)
+    assert len(problems) == 1
+    assert "ghost_module" in problems[0] and "dropped" in problems[0]
+    os.remove(os.path.join(base_dir, "BENCH_ghost_module.json"))
+
+    # wall regression: >2x AND >1s fails; >1.25x AND >0.25s warns
+    _write_bench(run_dir, MODULES[1], wall_s=4.0)
+    problems, _ = check(run_dir, base_dir)
+    assert len(problems) == 1 and "regression" in problems[0]
+    _write_bench(run_dir, MODULES[1], wall_s=1.6)
+    problems, warnings = check(run_dir, base_dir)
+    assert problems == []
+    assert len(warnings) == 1 and MODULES[1] in warnings[0]
+
+    # sub-second smoke noise never fails on ratio alone
+    _write_bench(run_dir, MODULES[1], wall_s=0.3)
+    _write_bench(base_dir, MODULES[1], wall_s=0.1)
+    problems, warnings = check(run_dir, base_dir)
+    assert problems == [] and warnings == []
+    _write_bench(run_dir, MODULES[1], wall_s=1.0)
+    _write_bench(base_dir, MODULES[1], wall_s=1.0)
+
+    # a failed module is reported once, not also wall-gated
+    _write_bench(run_dir, MODULES[2], wall_s=99.0, failed="FAILED: boom")
+    problems, _ = check(run_dir, base_dir)
+    assert len(problems) == 1 and "boom" in problems[0]
+    _write_bench(run_dir, MODULES[2], wall_s=1.0)
+
+    # tiny-flag mismatch skips the wall gate with a warning
+    _write_bench(run_dir, MODULES[3], wall_s=99.0, tiny=False)
+    problems, warnings = check(run_dir, base_dir)
+    assert problems == []
+    assert any("tiny" in w for w in warnings)
+
+    # no baseline at all: presence still gates, wall gate skipped
+    problems, warnings = check(run_dir, str(tmp_path / "nope"))
+    assert problems == []
+    assert any("skipped" in w for w in warnings)
+
+
+# ------------------------------------------- bench --trace end to end
+
+
+@pytest.mark.slow
+def test_bench_trace_artifact(tmp_path):
+    """One tiny dse_sweep run under --json --trace: the BENCH json carries
+    provenance, the TRACE json is Chrome-loadable with >=95% of the module
+    wall covered by spans (the DESIGN.md §14 acceptance bar)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join([os.path.join(_REPO, "src"), _REPO])
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    env["REPRO_BENCH_TINY"] = "1"
+    env["REPRO_DSE_ARTIFACT"] = str(tmp_path / "dse_front.json")
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--json", "--trace",
+         "dse_sweep"],
+        capture_output=True, text=True, env=env, cwd=str(tmp_path),
+        timeout=600,
+    )
+    assert out.returncode == 0, out.stderr
+
+    bench = json.load(open(tmp_path / "BENCH_dse_sweep.json"))
+    for field in ("git_sha", "timestamp", "jax_version"):
+        assert bench.get(field), f"missing provenance field {field!r}"
+    assert "T" in bench["timestamp"]  # ISO-8601
+    assert any("dse/obs/" in r["name"] for r in bench["rows"])
+
+    trace = json.load(open(tmp_path / "TRACE_dse_sweep.json"))
+    assert isinstance(trace["traceEvents"], list) and trace["traceEvents"]
+    meta = trace["metadata"]
+    assert meta["module"] == "dse_sweep"
+    assert meta["span_coverage"] >= 0.95
+    spans = [e for e in trace["traceEvents"] if e["ph"] == "X"]
+    assert {"bench.module", "kernel.dispatch", "dse.measure"} <= {
+        e["name"] for e in spans
+    }
+    outer = next(e for e in spans if e["name"] == "bench.module")
+    assert outer["dur"] / 1e6 >= 0.95 * sum(
+        e["dur"] for e in spans if e["name"] == "dse.measure"
+    ) / 1e6
