@@ -21,12 +21,21 @@ After ``python -m benchmarks.run --json``, three checks run against the
 Usage::
 
     python -m benchmarks.check_bench [dir] [--baseline DIR]
+    python -m benchmarks.check_bench [dir] --update-baseline
 
 ``dir`` (default cwd) holds the fresh artifacts; ``--baseline`` overrides
 the committed trajectory directory, which otherwise resolves to
 ``benchmarks/trajectory/tiny`` or ``.../full`` to match the run's
 ``tiny`` flag.  With no baseline committed yet, checks 2-3 are skipped
 with a warning.
+
+``--update-baseline`` regenerates the committed trajectory in place:
+after the presence check passes (a broken run must never become the
+baseline), every fresh ``BENCH_<module>.json`` is copied into
+``benchmarks/trajectory/{tiny|full}`` (matched to the run's ``tiny``
+flag) and baseline files for modules no longer in the registry are
+removed.  The README bench section documents the workflow: run
+``python -m benchmarks.run --json``, then this, then commit the diff.
 """
 
 from __future__ import annotations
@@ -145,6 +154,52 @@ def check(
     return problems, warnings
 
 
+def update_baseline(root: str = ".") -> str:
+    """Copy the fresh ``BENCH_*.json`` artifacts under ``root`` into the
+    committed trajectory directory (tiny/full matched to the run), after
+    gating on the presence check.  Returns the updated directory."""
+    problems: list[str] = []
+    payloads: dict[str, dict] = {}
+    for name in MODULES:
+        path = os.path.join(root, f"BENCH_{name}.json")
+        if not os.path.exists(path):
+            problems.append(f"{name}: missing {path}")
+            continue
+        payload = _load(path)
+        if payload.get("failed"):
+            problems.append(f"{name}: {payload['failed']}")
+        elif not payload.get("rows"):
+            problems.append(f"{name}: JSON has no rows")
+        else:
+            payloads[name] = payload
+    if problems:
+        raise SystemExit(
+            "refusing to update the baseline from a broken run:\n  "
+            + "\n  ".join(problems)
+        )
+    tiny = {bool(p.get("tiny")) for p in payloads.values()}
+    if len(tiny) != 1:
+        raise SystemExit(
+            "refusing to update the baseline: artifacts mix tiny and full "
+            "runs (rerun all modules with one REPRO_BENCH_TINY setting)"
+        )
+    bdir = os.path.join(TRAJECTORY_DIR, "tiny" if tiny.pop() else "full")
+    os.makedirs(bdir, exist_ok=True)
+    for name in payloads:
+        with open(os.path.join(bdir, f"BENCH_{name}.json"), "w") as f:
+            json.dump(payloads[name], f, indent=2, sort_keys=True)
+            f.write("\n")
+    stale = sorted(set(_baseline_payloads(bdir)) - set(MODULES))
+    for name in stale:
+        os.remove(os.path.join(bdir, f"BENCH_{name}.json"))
+        print(f"removed stale baseline BENCH_{name}.json")
+    print(
+        f"baseline updated: {len(payloads)} module JSONs -> {bdir}"
+        + (f" ({len(stale)} stale removed)" if stale else "")
+    )
+    return bdir
+
+
 def main(argv: list[str] | None = None) -> None:
     parser = argparse.ArgumentParser(
         prog="benchmarks.check_bench",
@@ -160,7 +215,15 @@ def main(argv: list[str] | None = None) -> None:
         help="committed baseline directory (default: benchmarks/trajectory/"
         "{tiny|full} matched to the run's tiny flag)",
     )
+    parser.add_argument(
+        "--update-baseline", action="store_true",
+        help="copy the fresh artifacts into the committed trajectory "
+        "(tiny/full matched to the run) instead of gating on it",
+    )
     args = parser.parse_args(argv)
+    if args.update_baseline:
+        update_baseline(args.root)
+        return
     problems, warnings = check(args.root, args.baseline)
     for w in warnings:
         print(f"WARNING: {w}")

@@ -20,6 +20,13 @@ are the claim, wall time is reference only, as in ``kernel_bench`` /
 
 Artifact: the full comparison table as CSV (``REPRO_CODEC_ARTIFACT``
 overrides the path; CI uploads it with the bench-smoke trajectory).
+
+With ``--activity`` (or REPRO_BENCH_ACTIVITY=1) the conv stream's full
+(ordering x codec) grid is additionally measured wire-resolved
+(``bt_count_codecs(..., activity_windows=)``, DESIGN.md §15): each
+config's hottest wire becomes a report row and all configs export as
+``ACTIVITY_codec_bt.saif`` + the ``ACTIVITY_codec_bt_wires.csv``
+per-wire heatmap.
 """
 
 from __future__ import annotations
@@ -163,6 +170,46 @@ def run(
         for c in codecs
     )
     x = workloads["conv"][0]
+
+    # --- wire-resolved activity of the conv grid (--activity, §15) ---
+    if os.environ.get("REPRO_BENCH_ACTIVITY", "") not in ("", "0"):
+        from repro.kernels import bt_count_codecs as _codecs_kernel
+
+        window = 32
+        act = _codecs_kernel(
+            x, None, configs=configs, input_lanes=_LANES,
+            activity_windows=window,
+        )
+        p, n = x.shape
+        duration = p * (n // _LANES)
+        bt = np.asarray(act.bt, dtype=np.int64)
+        profs = []
+        for ci, cfg in enumerate(configs):
+            label = f"{cfg.key}+{cfg.codec}" + (
+                f"{cfg.partition}" if cfg.partition else ""
+            )
+            prof = obs.profile_from_arrays(
+                label, act.toggles[ci], act.ones[ci],
+                window_flits=window, duration_flits=duration,
+                data_lanes=_LANES,
+            )
+            prof.check(int(bt[ci].sum()))  # per-wire sum == gross BT
+            profs.append(prof)
+            hot = prof.hottest_wires(1)[0]
+            rows.append((
+                f"codec/hot_wire/{label}", 0.0,
+                f"wire={hot[0]} toggles={hot[1]} "
+                f"rate={hot[1] / max(duration - 1, 1):.3f} "
+                f"tail={hot[1] / max(prof.per_wire.mean(), 1e-9):.2f}x_mean",
+            ))
+        obs.write_saif("ACTIVITY_codec_bt.saif", profs, design="codec_bt")
+        obs.write_wires_csv("ACTIVITY_codec_bt_wires.csv", profs)
+        rows.append((
+            "codec/activity/artifact", 0.0,
+            f"SAIF + wire heatmap for {len(profs)} configs x "
+            f"{profs[0].num_wires} wires (window={window} flits) -> "
+            "ACTIVITY_codec_bt.saif",
+        ))
 
     def fused(stream):
         return bt_count_codecs(stream, None, configs=configs, input_lanes=_LANES)

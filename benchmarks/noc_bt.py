@@ -8,7 +8,11 @@ Four report groups (DESIGN.md §9, §14):
   * **hottest links** — per-link BT telemetry of the mesh acc/source
     fabric via the ``repro.obs`` ``noc.link`` probe: the top-3 links by
     gross BT as report rows, and (with ``REPRO_NOC_LINKS_ARTIFACT=path``)
-    the full per-link heatmap CSV.
+    the full per-link heatmap CSV.  With ``--activity`` (or
+    REPRO_BENCH_ACTIVITY=1) the same run is measured wire-resolved
+    (DESIGN.md §15): top-3 hottest *wires* as report rows plus
+    ``ACTIVITY_noc_bt.saif`` and the ``ACTIVITY_noc_bt_wires.csv``
+    per-wire heatmap.
   * **hop sweep** — one unicast flow at increasing XY distance: with
     sort-at-source, every extra hop retransmits the *already ordered*
     stream, so the absolute BT saving scales linearly with hop count and
@@ -88,6 +92,8 @@ def run(n_images: int = 3, max_hops: int = 6) -> list[tuple[str, float, str]]:
     ]
     conv_flows = {}  # flows depend only on the framing, not the key/sort_at
     hot_reg = None  # per-link telemetry of the mesh acc/source fabric
+    hot_rep = None  # its report (carries wire activity under --activity)
+    activity = os.environ.get("REPRO_BENCH_ACTIVITY", "") not in ("", "0")
     for topo, src, pes in fabrics:
         tname = f"{topo.kind}{topo.rows}x{topo.cols}"
         conv_flows[tname] = _conv_flows(topo, src, pes, LinkSpec(), n_images)
@@ -102,10 +108,13 @@ def run(n_images: int = 3, max_hops: int = 6) -> list[tuple[str, float, str]]:
             )
             t0 = time.monotonic()
             with obs.collect() if watch else nullcontext() as reg:
-                rep = simulate_noc(topo, flows, spec, sort_at=sort_at)
+                rep = simulate_noc(
+                    topo, flows, spec, sort_at=sort_at,
+                    activity_windows=32 if watch and activity else None,
+                )
             us = (time.monotonic() - t0) * 1e6
             if watch:
-                hot_reg = reg
+                hot_reg, hot_rep = reg, rep
             if base is None:
                 base = rep
             rows.append((
@@ -130,6 +139,27 @@ def run(n_images: int = 3, max_hops: int = 6) -> list[tuple[str, float, str]]:
         artifact = os.environ.get("REPRO_NOC_LINKS_ARTIFACT")
         if artifact:  # the per-link heatmap CSV (README quickstart)
             obs.write_links_csv(artifact, hot_reg)
+
+    # --- hottest wires: wire-resolved telemetry of the same run (§15) ---
+    if activity and hot_rep is not None and hot_rep.activity_window:
+        profs = obs.profiles_from_noc(hot_rep)
+        for p, s in zip(profs, hot_rep.links):
+            p.check(s.gross_bt)  # sum(per-wire) == gross BT, every link
+        for rank, r in enumerate(obs.top_wires(hot_reg, 3), 1):
+            rows.append((
+                f"noc/hot_wire/{rank}",
+                0.0,
+                f"link={r['link']} route={r['src']}->{r['dst']} "
+                f"wire={r['wire']} toggles={r['toggles']}",
+            ))
+        obs.write_saif("ACTIVITY_noc_bt.saif", profs, design="noc_bt")
+        obs.write_wires_csv("ACTIVITY_noc_bt_wires.csv", profs)
+        rows.append((
+            "noc/activity/artifact", 0.0,
+            f"SAIF + wire heatmap for {len(profs)} links x "
+            f"{profs[0].num_wires} wires (window="
+            f"{hot_rep.activity_window} flits) -> ACTIVITY_noc_bt.saif",
+        ))
 
     # --- hop sweep: source-sorted advantage is preserved across hops ---
     topo = mesh(4, 4)

@@ -13,7 +13,8 @@ derived`` CSV (the harness contract).
   kernel_bench     -> kernel microbenchmarks (per-backend wall rows)
   roofline_report  -> deliverable (g) tables from the dry-run records
 
-Usage: ``python -m benchmarks.run [--json] [--trace] [module ...]`` runs
+Usage: ``python -m benchmarks.run [--json] [--trace] [--activity]
+[module ...]`` runs
 the named modules in registry order (no names = all); ``--list`` prints
 the valid names.  Set REPRO_BENCH_TINY=1 to run each module at its
 smoke-test shape (a module's optional ``TINY_KWARGS`` dict) — the CI
@@ -33,6 +34,13 @@ one top-level ``bench.module`` span per run with every probe span
 (kernel dispatches, link stages, NoC/DSE launches) nested inside by
 timestamp, plus the trace's span coverage of the module wall time in its
 ``metadata``.  Load it at https://ui.perfetto.dev or chrome://tracing.
+
+``--activity`` (or REPRO_BENCH_ACTIVITY=1) turns on wire-level
+switching-activity measurement in the modules that support it
+(``noc_bt``, ``codec_bt``, DESIGN.md §15): hottest-wire report rows plus
+an ``ACTIVITY_<module>.saif`` (standard backward SAIF for EDA power
+flows) and ``ACTIVITY_<module>_wires.csv`` per-wire heatmap next to the
+bench JSON.  CI's bench-smoke step uploads both with the trajectory.
 """
 
 from __future__ import annotations
@@ -86,7 +94,11 @@ def main() -> None:
     args = sys.argv[1:]
     emit_json = "--json" in args
     emit_trace = "--trace" in args
-    args = [a for a in args if a not in ("--json", "--trace")]
+    if "--activity" in args:
+        # modules read the env (same pattern as REPRO_BENCH_TINY), so the
+        # flag and the variable are interchangeable
+        os.environ["REPRO_BENCH_ACTIVITY"] = "1"
+    args = [a for a in args if a not in ("--json", "--trace", "--activity")]
     if "--list" in args:
         for name in MODULES:
             print(name)

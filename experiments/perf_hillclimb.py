@@ -2,75 +2,151 @@ import os
 
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
-"""§Perf hillclimb driver: run the three chosen cells' optimization
-iterations and record before/after JSONs under experiments/perf/.
+"""§Perf hillclimb driver — ALL rounds, one parameterized script.
 
-Cells (chosen per the assignment from the baseline roofline table):
+Each iteration reruns one (arch, shape) cell of the baseline roofline
+sweep with one config change and records the JSON under
+``experiments/perf/``; the hypotheses behind each tag live in
+EXPERIMENTS.md §Perf and the lever taxonomy in DESIGN.md §13
+("Roofline levers").  Cells:
+
   A. mamba2-370m    x train_4k    — most collective-bound cell
   B. codeqwen1.5-7b x prefill_32k — worst roofline fraction (+ over-memory)
   C. internlm2-1.8b x train_4k    — most representative of the paper's
-     technique (link/collective-traffic levers: remat policy that stops
-     re-running forward all-reduces; compressed wire)
+     technique (link/collective-traffic levers)
 
-Baselines are the untouched sweep records (experiments/dryrun/...); each
-iteration here reruns the cell with one config change.
+Usage::
 
-  PYTHONPATH=src python experiments/perf_hillclimb.py [tag ...]
+    PYTHONPATH=src python experiments/perf_hillclimb.py [tag ...]
+    PYTHONPATH=src python experiments/perf_hillclimb.py --list
+
+No tags = run every iteration (existing outputs are skipped, so the
+script is resumable).  Baseline sweep records are copied alongside for
+side-by-side reading.
 """
 
+import dataclasses  # noqa: E402
 import json  # noqa: E402
 import shutil  # noqa: E402
 import sys  # noqa: E402
 
+
+@dataclasses.dataclass(frozen=True)
+class Iteration:
+    arch: str
+    shape: str
+    tag: str
+    overrides: dict = dataclasses.field(default_factory=dict)
+    mesh_shape: tuple | None = None  # logical remesh (data, tensor)
+    microbatches: int | None = None  # TRAIN_MICROBATCHES override
+    ssm_chunk: int | None = None  # SSD chunk override (needs get_config)
+
+
 ITERS = [
-    # (arch, shape, tag, overrides)
-    ("mamba2-370m", "train_4k", "A1_pure_dp", {"pure_dp": True}),
-    ("mamba2-370m", "train_4k", "A2_pure_dp_mb4", {"pure_dp": True}),  # + mb=4
-    ("codeqwen1.5-7b", "prefill_32k", "B1_attn_chunk_2048", {"attn_chunk": 2048}),
-    ("codeqwen1.5-7b", "prefill_32k", "B2_attn_scan", {"attn_impl": "chunked"}),
-    ("codeqwen1.5-7b", "prefill_32k", "B3_scan_chunk4k",
-     {"attn_impl": "chunked", "attn_chunk": 4096}),
-    ("internlm2-1.8b", "train_4k", "C1_save_block_io",
-     {"remat_policy": "save_block_io"}),
-    ("internlm2-1.8b", "train_4k", "C2_save_block_io_mb4",
-     {"remat_policy": "save_block_io"}),  # + mb=4
+    # --- round 1: first levers per cell ---
+    Iteration("mamba2-370m", "train_4k", "A1_pure_dp", {"pure_dp": True}),
+    Iteration("mamba2-370m", "train_4k", "A2_pure_dp_mb4",
+              {"pure_dp": True}, microbatches=4),
+    Iteration("codeqwen1.5-7b", "prefill_32k", "B1_attn_chunk_2048",
+              {"attn_chunk": 2048}),
+    Iteration("codeqwen1.5-7b", "prefill_32k", "B2_attn_scan",
+              {"attn_impl": "chunked"}),
+    Iteration("codeqwen1.5-7b", "prefill_32k", "B3_scan_chunk4k",
+              {"attn_impl": "chunked", "attn_chunk": 4096}),
+    Iteration("internlm2-1.8b", "train_4k", "C1_save_block_io",
+              {"remat_policy": "save_block_io"}),
+    Iteration("internlm2-1.8b", "train_4k", "C2_save_block_io_mb4",
+              {"remat_policy": "save_block_io"}, microbatches=4),
+    # --- round 2: after round-1 measurement + parser fixes ---
+    Iteration("mamba2-370m", "train_4k", "A3_pure_dp_chunk128",
+              {"pure_dp": True}, ssm_chunk=128),
+    # scan-attention FLOPs are chunk-size-invariant (masked full-KV =
+    # S^2); chunk 4096 keeps the unrolled cost pass at 64 blocks/layer
+    Iteration("codeqwen1.5-7b", "prefill_32k", "B2b_attn_scan_remeasure",
+              {"attn_impl": "chunked", "attn_chunk": 4096}),
+    Iteration("codeqwen1.5-7b", "prefill_32k", "B4_mesh32x8",
+              mesh_shape=(32, 8)),
+    Iteration("codeqwen1.5-7b", "prefill_32k", "B5_scan_mesh32x8",
+              {"attn_impl": "chunked", "attn_chunk": 4096},
+              mesh_shape=(32, 8)),
+    Iteration("internlm2-1.8b", "train_4k", "C3_blockio_mesh64x4",
+              {"remat_policy": "save_block_io"}, mesh_shape=(64, 4)),
+    Iteration("mamba2-370m", "train_4k", "A1b_pure_dp_remeasure",
+              {"pure_dp": True}),
+    # --- round 3 ---
+    Iteration("mamba2-370m", "train_4k", "A4_pure_dp_chunk128_noremat",
+              {"pure_dp": True, "remat": False}, ssm_chunk=128),
+    Iteration("internlm2-1.8b", "train_4k", "C4_blockio_mesh128x2",
+              {"remat_policy": "save_block_io"}, mesh_shape=(128, 2)),
+    # --- rounds 4-5: C5 adds mb4 (C2's -23 % peak), C6 swaps in ZeRO-1
+    # (the C5 peak was params+opt; data-sharded Adam frees ~7.1 GiB) ---
+    Iteration("internlm2-1.8b", "train_4k", "C5_blockio_mesh128x2_mb4",
+              {"remat_policy": "save_block_io"}, mesh_shape=(128, 2),
+              microbatches=4),
+    Iteration("internlm2-1.8b", "train_4k", "C6_blockio_mesh128x2_zero1",
+              {"remat_policy": "save_block_io", "zero1": True},
+              mesh_shape=(128, 2)),
 ]
 
 
 def main() -> None:
-    from repro.launch.dryrun import run_cell
-    import repro.launch.specs as specs
+    args = sys.argv[1:]
+    if "--list" in args:
+        for it in ITERS:
+            print(f"{it.tag}  ({it.arch} x {it.shape})")
+        return
+    only = set(args)
+    unknown = only - {it.tag for it in ITERS}
+    if unknown:
+        raise SystemExit(f"unknown tags: {', '.join(sorted(unknown))}")
 
-    only = set(sys.argv[1:])
+    import repro.launch.specs as specs
+    from repro.configs import get_config
+    from repro.launch.dryrun import run_cell
+
     os.makedirs("experiments/perf", exist_ok=True)
     # copy sweep baselines for side-by-side reading
-    for arch, shape in {(a, s) for a, s, _, _ in ITERS}:
+    for arch, shape in {(it.arch, it.shape) for it in ITERS}:
         src = f"experiments/dryrun/{arch}__{shape}__16x16.json"
         dst = f"experiments/perf/{arch}__{shape}__baseline.json"
         if os.path.exists(src) and not os.path.exists(dst):
             shutil.copy(src, dst)
 
-    for arch, shape, tag, over in ITERS:
-        if only and tag not in only:
+    for it in ITERS:
+        if only and it.tag not in only:
             continue
-        out = f"experiments/perf/{arch}__{shape}__{tag}.json"
+        out = f"experiments/perf/{it.arch}__{it.shape}__{it.tag}.json"
         if os.path.exists(out):
-            print(f"skip existing {tag}")
+            print(f"skip existing {it.tag}")
             continue
-        mb_override = 4 if tag.endswith("_mb4") else None
+        over = dict(it.overrides)
+        if it.ssm_chunk is not None:
+            over["ssm"] = dataclasses.replace(
+                get_config(it.arch).ssm, chunk=it.ssm_chunk
+            )
         saved = dict(specs.TRAIN_MICROBATCHES)
         saved_default = specs.DEFAULT_TRAIN_MICROBATCHES
-        if mb_override:
-            specs.TRAIN_MICROBATCHES[arch] = mb_override
-            specs.DEFAULT_TRAIN_MICROBATCHES = mb_override
+        if it.microbatches is not None:
+            specs.TRAIN_MICROBATCHES[it.arch] = it.microbatches
+            specs.DEFAULT_TRAIN_MICROBATCHES = it.microbatches
         try:
-            rec = run_cell(arch, shape, multi_pod=False, cfg_overrides=over)
-            rec["perf_tag"] = tag
-            rec["overrides"] = {**over, **({"microbatches": mb_override} if mb_override else {})}
+            rec = run_cell(
+                it.arch, it.shape, multi_pod=False, cfg_overrides=over,
+                mesh_shape=it.mesh_shape,
+            )
+            rec["perf_tag"] = it.tag
+            rec["overrides"] = {
+                **it.overrides,
+                **({"microbatches": it.microbatches}
+                   if it.microbatches else {}),
+                **({"ssm_chunk": it.ssm_chunk} if it.ssm_chunk else {}),
+                **({"mesh_shape": list(it.mesh_shape)}
+                   if it.mesh_shape else {}),
+            }
             with open(out, "w") as f:
                 json.dump(rec, f, indent=1)
         except Exception as e:
-            print(f"{tag} FAILED: {type(e).__name__}: {e}")
+            print(f"{it.tag} FAILED: {type(e).__name__}: {e}")
         finally:
             specs.TRAIN_MICROBATCHES.clear()
             specs.TRAIN_MICROBATCHES.update(saved)

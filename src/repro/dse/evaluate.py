@@ -127,10 +127,39 @@ class Evaluation:
     noc_active_links: int | None = None
     aux_bt: int = 0  # invert-line transitions (wire-codec overhead)
     extra_wires: int = 0  # invert lines beside the data lanes
+    # per-wire BT over the workload streams (data wires then invert lines,
+    # DESIGN.md §15) — populated when evaluated with ``activity_windows=``
+    per_wire_bt: tuple[int, ...] | None = None
 
     @property
     def label(self) -> str:
         return self.point.label
+
+    @property
+    def hot_wire(self) -> int | None:
+        """Index of the busiest wire (first on ties), wire-resolved runs."""
+        if not self.per_wire_bt:
+            return None
+        return int(np.argmax(self.per_wire_bt))
+
+    @property
+    def hot_wire_bt(self) -> int | None:
+        return None if not self.per_wire_bt else int(max(self.per_wire_bt))
+
+    @property
+    def wire_bt_mean(self) -> float | None:
+        if not self.per_wire_bt:
+            return None
+        return sum(self.per_wire_bt) / len(self.per_wire_bt)
+
+    @property
+    def hot_wire_ratio(self) -> float | None:
+        """Hot-wire tail: busiest wire's BT over the mean (1.0 = perfectly
+        flat) — the figure of merit for orderings that flatten the tail."""
+        mean = self.wire_bt_mean
+        if mean is None:
+            return None
+        return self.hot_wire_bt / max(mean, 1e-12)
 
     @property
     def area_um2(self) -> float:
@@ -221,16 +250,20 @@ def _measure_grid(
     block_packets: int,
     backend: str | None = None,
     chunk_packets: int | None = None,
+    activity_windows: int | None = None,
 ) -> tuple[
     dict[tuple[int, CodecVariant], tuple[int, int]],
     dict[tuple[int, str, CodecVariant], int],
     dict[str, int],
+    dict[tuple[int, CodecVariant], np.ndarray],
 ]:
     """Run the grid's single-launch-per-width measurement.
 
-    Returns (bt_tab, noc_tab, topo_links): point-to-point (data BT, aux
-    BT) per (width, config), fabric gross BT per (width, topology,
-    config), and active link counts per topology.
+    Returns (bt_tab, noc_tab, topo_links, wire_tab): point-to-point (data
+    BT, aux BT) per (width, config), fabric gross BT per (width,
+    topology, config), active link counts per topology, and — when
+    ``activity_windows`` is set — the per-wire BT vector of the workload
+    streams per (width, config) (empty dict otherwise).
     """
     configs_by_width = _configs_by_width(points)
     payloads, topo_rows = _grid_links(points, workload)
@@ -238,6 +271,7 @@ def _measure_grid(
     n_p2p = len(workload.streams)
     bt_tab: dict[tuple[int, CodecVariant], tuple[int, int]] = {}
     noc_tab: dict[tuple[int, str, CodecVariant], int] = {}
+    wire_tab: dict[tuple[int, CodecVariant], np.ndarray] = {}
     link_names = [
         f"{workload.name}[{i}]" for i in range(n_p2p)
     ] + [name for name in topo_rows]
@@ -247,21 +281,24 @@ def _measure_grid(
             "dse.measure", width=width, links=len(payloads),
             configs=len(vs), workload=workload.name,
         ):
-            out = np.asarray(
-                bt_count_axes(
-                    stacked,
-                    None,
-                    valid=valid,
-                    configs=vs,
-                    width=width,
-                    input_lanes=workload.lanes,
-                    block_packets=block_packets,
-                    interpret=interpret,
-                    backend=backend,
-                    chunk_packets=chunk_packets,
-                ),
-                dtype=np.int64,
-            )  # (L, C, 3)
+            raw = bt_count_axes(
+                stacked,
+                None,
+                valid=valid,
+                configs=vs,
+                width=width,
+                input_lanes=workload.lanes,
+                block_packets=block_packets,
+                interpret=interpret,
+                backend=backend,
+                chunk_packets=chunk_packets,
+                activity_windows=activity_windows,
+            )
+        toggles = None
+        if activity_windows is not None:
+            toggles = np.asarray(raw.toggles, dtype=np.int64)
+            raw = raw.bt
+        out = np.asarray(raw, dtype=np.int64)  # (L, C, 3)
         if _obs.active():
             # per-link baseline BT of this width's launch (config 0 is
             # always the unsorted/uncoded baseline)
@@ -276,10 +313,15 @@ def _measure_grid(
                 int(p2p[:, :2].sum()),
                 int(p2p[:, 2].sum()),
             )
+            if toggles is not None:
+                # workload streams share one link in the energy roll-up,
+                # so their per-wire vectors sum (windows collapse too —
+                # the DSE scores totals, the time view stays in obs)
+                wire_tab[(width, v)] = toggles[:n_p2p, ci].sum(axis=(0, 1))
             for name, (row, nlinks) in topo_rows.items():
                 # every route link retransmits the identical queue
                 noc_tab[(width, name, v)] = nlinks * int(out[row, ci].sum())
-    return bt_tab, noc_tab, {n: r[1] for n, r in topo_rows.items()}
+    return bt_tab, noc_tab, {n: r[1] for n, r in topo_rows.items()}, wire_tab
 
 
 def grid_launch_count(
@@ -333,6 +375,7 @@ def evaluate_grid(
     block_packets: int = 64,
     backend: str | None = None,
     chunk_packets: int | None = None,
+    activity_windows: int | None = None,
 ) -> tuple[Evaluation, ...]:
     """Evaluate every design point of a grid against one workload.
 
@@ -345,7 +388,11 @@ def evaluate_grid(
     ``backend`` selects the kernel execution path (pallas | compiled |
     interpret, DESIGN.md §13) and ``chunk_packets`` streams the packet
     axis in fixed-size chunks (``repro.kernels.bt_count_axes``) — both
-    default to the session/platform resolution.
+    default to the session/platform resolution.  ``activity_windows``
+    rides the same launch and resolves each point's BT per wire
+    (``Evaluation.per_wire_bt`` and the hot-wire properties, DESIGN.md
+    §15) — the view that shows which orderings flatten the hot-wire
+    tail rather than just lowering the mean.
     """
     points = tuple(points)
     if not points:
@@ -354,13 +401,14 @@ def evaluate_grid(
     power = power if power is not None else LinkPowerModel()
     lanes = workload.lanes
 
-    bt_tab, noc_tab, topo_links = _measure_grid(
+    bt_tab, noc_tab, topo_links, wire_tab = _measure_grid(
         points,
         workload,
         interpret=interpret,
         block_packets=block_packets,
         backend=backend,
         chunk_packets=chunk_packets,
+        activity_windows=activity_windows,
     )
     num_flits = workload.num_flits
 
@@ -390,6 +438,15 @@ def evaluate_grid(
             base = noc_tab[(pt.width, pt.topology, _BASELINE)]
             noc_red = 1.0 - gross / max(base, 1)
             noc_links = topo_links[pt.topology]
+        per_wire = None
+        if activity_windows is not None:
+            # trim the launch-wide aux columns to this point's own invert
+            # lines so len(per_wire_bt) == data wires + extra_wires (the
+            # contract wire_energy_pj checks); dropped columns are zero
+            pw = wire_tab[(pt.width, pt.codec_variant)]
+            per_wire = tuple(
+                int(b) for b in pw[: 8 * lanes + extra_wires]
+            )
         evals.append(
             Evaluation(
                 point=pt,
@@ -407,6 +464,7 @@ def evaluate_grid(
                 noc_active_links=noc_links,
                 aux_bt=aux_bt,
                 extra_wires=extra_wires,
+                per_wire_bt=per_wire,
             )
         )
         _obs.event(

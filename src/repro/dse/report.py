@@ -45,6 +45,9 @@ _FIELDS = (
     "latency_cycles",
     "noc_bt_reduction",
     "noc_active_links",
+    "hot_wire",
+    "hot_wire_bt",
+    "hot_wire_ratio",
     "on_front",
 )
 
@@ -81,6 +84,11 @@ def point_record(e: Evaluation, *, on_front: bool = False) -> dict:
             None if e.noc_bt_reduction is None else round(e.noc_bt_reduction, 6)
         ),
         "noc_active_links": e.noc_active_links,
+        "hot_wire": e.hot_wire,
+        "hot_wire_bt": e.hot_wire_bt,
+        "hot_wire_ratio": (
+            None if e.hot_wire_ratio is None else round(e.hot_wire_ratio, 4)
+        ),
         "on_front": on_front,
     }
 

@@ -18,7 +18,9 @@
 from .ops import (
     BACKEND_ENV_VAR,
     BACKENDS,
+    AxesActivity,
     CodecVariant,
+    LinkActivity,
     PsuStreamResult,
     Variant,
     bt_count,
@@ -43,6 +45,8 @@ __all__ = [
     "psu_reorder",
     "psu_stream",
     "PsuStreamResult",
+    "AxesActivity",
+    "LinkActivity",
     "bt_count",
     "bt_count_axes",
     "bt_count_axes_sharded",

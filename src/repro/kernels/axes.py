@@ -207,6 +207,7 @@ def _axes_block(
     x,
     w,
     remaining_rows,
+    start_row=None,
     *,
     configs: tuple[CodecVariant, ...],
     width: int,
@@ -216,6 +217,8 @@ def _axes_block(
     pack: str,
     pmax: int,
     emit_stream: bool,
+    window_rows: int = 0,
+    num_windows: int = 0,
 ):
     """Measure one (link, packet-block) cell under every static config.
 
@@ -228,10 +231,19 @@ def _axes_block(
       x / w: (BP, N) int32 packet payloads of this block.
       remaining_rows: int32 scalar — this link's valid flit rows minus the
         rows consumed by earlier blocks (may be <= 0: fully-padded block).
+      start_row: int32 scalar — global flit-row index of this block's first
+        row (activity mode only; windows are indexed globally so chunked
+        and unchunked runs land toggles in the same window).
+      window_rows / num_windows: static activity-window length (flit rows)
+        and total window count; ``num_windows > 0`` enables the per-wire
+        activity outputs (DESIGN.md §15).
 
     Returns:
       (bt (C, 2, PMAX, 3), edge (C, 2, 2, lanes), inv (C, 2, 2, PMAX))
-      int32 partials, plus (order, rank, stream) with ``emit_stream``.
+      int32 partials; with activity also (act (C, 2, NW, WIRES),
+      ones (C, 2, WIRES)) where WIRES = lanes*8 data wires (wire = lane*8
+      + bit, LSB first) followed by PMAX invert-line wires; plus
+      (order, rank, stream) with ``emit_stream``.
     """
     x = x.astype(jnp.int32)  # (BP, N)
     w = w.astype(jnp.int32)
@@ -239,12 +251,41 @@ def _axes_block(
     flits = n // input_lanes
     lanes = input_lanes + weight_lanes
     rows = bp * flits
+    act_on = num_windows > 0
 
     # --- the ONE masking convention: rows at or past this link's valid
     # count contribute nothing (data BT, aux BT, edge flits alike) ---
     valid = jnp.minimum(jnp.int32(rows), remaining_rows)
     row_idx = lax.broadcasted_iota(jnp.int32, (rows, 1), 0)
     bmask = (row_idx[1:] < valid).astype(jnp.int32)  # (rows-1, 1) boundaries
+
+    if act_on:
+        nwires = lanes * 8 + pmax
+        bit_iota = lax.broadcasted_iota(jnp.int32, (1, 1, 8), 2)
+
+        def _wire_bits(arr):  # (T, L) bytes -> (T, L*8) bits, LSB first
+            bits = (arr[:, :, None] >> bit_iota) & 1
+            return bits.reshape(arr.shape[0], arr.shape[1] * 8)
+
+        rmask = (row_idx < valid).astype(jnp.int32)  # (rows, 1) levels
+        # the boundary INTO local row i toggles inside row i's window
+        bwin = (
+            start_row + lax.broadcasted_iota(jnp.int32, (rows - 1, 1), 0) + 1
+        ) // window_rows
+        win_iota = lax.broadcasted_iota(
+            jnp.int32, (rows - 1, num_windows), 1
+        )
+        win_onehot = (bwin == win_iota).astype(jnp.float32)
+
+        def _scatter(toggles):  # (rows-1, W) 0/1 -> (NW, W) window counts
+            return lax.dot_general(
+                win_onehot,
+                toggles.astype(jnp.float32),
+                dimension_numbers=(((0,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            ).astype(jnp.int32)
+
+        acts, ones_rows = [], []
 
     def _last_valid(arr):  # (rows, L) -> (L,): the row at index valid-1
         onehot = (row_idx == valid - 1).astype(jnp.int32)
@@ -345,6 +386,14 @@ def _axes_block(
             bts.append(jnp.pad(part, ((0, 0), (0, pmax - 1), (0, 0))))
             edge_rows.append(jnp.broadcast_to(edge, (2, 2, lanes)))
             inv_rows.append(zero_inv)
+            if act_on:
+                tb = _wire_bits(wire[1:] ^ wire[:-1]) * bmask
+                act = jnp.pad(_scatter(tb), ((0, 0), (0, pmax)))
+                acts.append(jnp.broadcast_to(act, (2, num_windows, nwires)))
+                ones_w = (_wire_bits(wire) * rmask).sum(axis=0)
+                ones_rows.append(jnp.broadcast_to(
+                    jnp.pad(ones_w, (0, pmax)), (2, nwires)
+                ))
 
         elif cfg.codec == "transition":
             # wire_t ^ wire_{t-1} == data_t: boundary flips = data popcount
@@ -365,6 +414,20 @@ def _axes_block(
             bts.append(jnp.pad(part, ((0, 0), (0, pmax - 1), (0, 0))))
             edge_rows.append(jnp.broadcast_to(edge, (2, 2, lanes)))
             inv_rows.append(zero_inv)
+            if act_on:
+                # wire-bit toggle at boundary t == data bit of row t
+                tb = _wire_bits(stream[1:]) * bmask
+                act = jnp.pad(_scatter(tb), ((0, 0), (0, pmax)))
+                acts.append(jnp.broadcast_to(act, (2, num_windows, nwires)))
+                # the wire LEVEL is the running data parity; slot 0 = time
+                # at 1 for a parity-0 entry, slot 1 = this block's parity
+                # (the wrapper flips slot 0 per the carried entry parity)
+                db = _wire_bits(stream) * rmask
+                par = jnp.cumsum(db, axis=0) & 1
+                ones_rows.append(jnp.stack([
+                    jnp.pad((par * rmask).sum(axis=0), (0, pmax)),
+                    jnp.pad(db.sum(axis=0) & 1, (0, pmax)),
+                ]))
 
         else:  # bus_invert
             npart, pw = _partitions(lanes, cfg.partition)
@@ -379,6 +442,9 @@ def _axes_block(
             ) * pw + lax.broadcasted_iota(jnp.int32, (npart, pw), 1)
             in_mask = (lane_id < split_lanes).astype(jnp.int32)
             parts, edges, inv_edges = [], [], []
+            acts_b, ones_b = [], []
+            if act_on:
+                dxr = (d[1:] ^ d[:-1]).reshape(rows - 1, lanes)
             for v in (v0, v1):
                 e = v[1:] ^ v[:-1]  # (rows-1, npart) invert-line flips
                 lane_flips = jnp.where(e[:, :, None] == 1, 8 - dpc, dpc)
@@ -390,6 +456,21 @@ def _axes_block(
                 wire = (d ^ (v[:, :, None] * 0xFF)).reshape(rows, lanes)
                 edges.append(jnp.stack([wire[0], _last_valid(wire)]))
                 inv_edges.append(jnp.stack([v[0], _last_valid(v)]))
+                if act_on:
+                    # wire-bit toggle = data-bit toggle XOR its partition's
+                    # invert-line flip; the invert line itself is a wire
+                    erep = jnp.broadcast_to(
+                        e[:, :, None], (rows - 1, npart, pw * 8)
+                    ).reshape(rows - 1, lanes * 8)
+                    tb = (_wire_bits(dxr) ^ erep) * bmask
+                    aux_t = jnp.pad(e * bmask, ((0, 0), (0, pmax - npart)))
+                    acts_b.append(
+                        _scatter(jnp.concatenate([tb, aux_t], axis=1))
+                    )
+                    ones_b.append(jnp.concatenate([
+                        (_wire_bits(wire) * rmask).sum(axis=0),
+                        jnp.pad((v * rmask).sum(axis=0), (0, pmax - npart)),
+                    ]))
             bts.append(jnp.pad(
                 jnp.stack(parts), ((0, 0), (0, pmax - npart), (0, 0))
             ))
@@ -397,32 +478,40 @@ def _axes_block(
             inv_rows.append(jnp.pad(
                 jnp.stack(inv_edges), ((0, 0), (0, 0), (0, pmax - npart))
             ))
+            if act_on:
+                acts.append(jnp.stack(acts_b))
+                ones_rows.append(jnp.stack(ones_b))
 
     out = (jnp.stack(bts), jnp.stack(edge_rows), jnp.stack(inv_rows))
+    if act_on:
+        out = out + (jnp.stack(acts), jnp.stack(ones_rows))
     return out + emitted if emit_stream else out
 
 
-def _bt_axes_kernel(
-    x_ref,
-    w_ref,
-    valid_ref,
-    bt_ref,
-    edge_ref,
-    inv_edge_ref,
-    order_ref=None,
-    rank_ref=None,
-    stream_ref=None,
-    **static,
-):
+def _bt_axes_kernel(*refs, **static):
     """Pallas grid body: one (link, packet-block) cell via ``_axes_block``."""
+    activity = static.get("num_windows", 0) > 0
+    base_ref = order_ref = rank_ref = stream_ref = act_ref = ones_ref = None
+    if activity:
+        (x_ref, w_ref, valid_ref, base_ref,
+         bt_ref, edge_ref, inv_edge_ref, act_ref, ones_ref) = refs
+    elif static["emit_stream"]:
+        (x_ref, w_ref, valid_ref, bt_ref, edge_ref, inv_edge_ref,
+         order_ref, rank_ref, stream_ref) = refs
+    else:
+        x_ref, w_ref, valid_ref, bt_ref, edge_ref, inv_edge_ref = refs
     bp, n = x_ref.shape[1:]
     flits = n // static["input_lanes"]
     rows = jnp.int32(bp * flits)
     remaining = valid_ref[0, 0] * flits - pl.program_id(1) * rows
-    out = _axes_block(x_ref[0], w_ref[0], remaining, **static)
+    start = base_ref[0, 0] + pl.program_id(1) * rows if activity else None
+    out = _axes_block(x_ref[0], w_ref[0], remaining, start, **static)
     bt_ref[0, 0] = out[0]
     edge_ref[0, 0] = out[1]
     inv_edge_ref[0, 0] = out[2]
+    if activity:
+        act_ref[0, 0] = out[3]
+        ones_ref[0, 0] = out[4]
     if static["emit_stream"]:
         order_ref[0], rank_ref[0], stream_ref[0] = out[3:]
 
@@ -441,6 +530,9 @@ def bt_axes_pallas(
     block_packets: int = 64,
     emit_stream: bool = False,
     interpret: bool | None = None,
+    window_rows: int = 0,
+    num_windows: int = 0,
+    base_row: jax.Array | None = None,
 ):
     """Per-(link, config) coded BT partials of a (L, P, N) batch, ONE launch.
 
@@ -458,6 +550,12 @@ def bt_axes_pallas(
       emit_stream: also emit (order, rank, stream) for ``configs[0]``'s
         ordering — the fused-TX-pipeline mode (requires exactly one config
         with an 'acc'/'app' ordering).
+      window_rows / num_windows: static activity-window length in flit
+        rows and total (global) window count; ``num_windows > 0`` enables
+        the per-wire activity outputs (DESIGN.md §15; incompatible with
+        ``emit_stream``).
+      base_row: int32 scalar — global flit-row index of this launch's
+        first row (chunked streaming offsets it per chunk; default 0).
 
     Returns:
       (partials, edges, inv_edges[, order, rank, stream]):
@@ -470,6 +568,9 @@ def bt_axes_pallas(
           rows (DATA rows for 'transition');
         * int32 (L, G, C, 2, 2, PMAX) per-branch first/last-valid
           invert-line states (bus-invert only, zeros otherwise);
+        * with activity: int32 (L, G, C, 2, NW, WIRES) per-branch window
+          toggles and (L, G, C, 2, WIRES) per-branch wire-level 1-counts
+          (DESIGN.md §15);
         * with ``emit_stream``: int32 (L, P, N) order, (L, P, N) rank and
           (L, P*F, lanes) packed stream.
     """
@@ -477,6 +578,7 @@ def bt_axes_pallas(
         inputs, valid, configs=configs, width=width, input_lanes=input_lanes,
         weight_lanes=weight_lanes, split_lanes=split_lanes, pack=pack,
         block_packets=block_packets, emit_stream=emit_stream,
+        num_windows=num_windows, window_rows=window_rows,
     )
     if interpret is None:
         interpret = default_backend() != "pallas"
@@ -486,6 +588,7 @@ def bt_axes_pallas(
     flits = n // input_lanes
     pmax = max_partitions(configs, lanes)
     gblocks = p // block_packets
+    activity = num_windows > 0
     grid = (links, gblocks)
     kern = functools.partial(
         _bt_axes_kernel,
@@ -497,8 +600,15 @@ def bt_axes_pallas(
         pack=pack,
         pmax=pmax,
         emit_stream=emit_stream,
+        window_rows=window_rows,
+        num_windows=num_windows,
     )
     pk_spec = pl.BlockSpec((1, block_packets, n), lambda l, g: (l, g, 0))
+    in_specs = [
+        pk_spec,
+        pk_spec,
+        pl.BlockSpec((1, 1), lambda l, g: (l, 0)),
+    ]
     out_shape = [
         jax.ShapeDtypeStruct((links, gblocks, nc, 2, pmax, 3), jnp.int32),
         jax.ShapeDtypeStruct((links, gblocks, nc, 2, 2, lanes), jnp.int32),
@@ -509,6 +619,22 @@ def bt_axes_pallas(
         pl.BlockSpec((1, 1, nc, 2, 2, lanes), lambda l, g: (l, g, 0, 0, 0, 0)),
         pl.BlockSpec((1, 1, nc, 2, 2, pmax), lambda l, g: (l, g, 0, 0, 0, 0)),
     ]
+    if activity:
+        nwires = lanes * 8 + pmax
+        in_specs.append(pl.BlockSpec((1, 1), lambda l, g: (0, 0)))
+        out_shape += [
+            jax.ShapeDtypeStruct(
+                (links, gblocks, nc, 2, num_windows, nwires), jnp.int32
+            ),
+            jax.ShapeDtypeStruct((links, gblocks, nc, 2, nwires), jnp.int32),
+        ]
+        out_specs += [
+            pl.BlockSpec(
+                (1, 1, nc, 2, num_windows, nwires),
+                lambda l, g: (l, g, 0, 0, 0, 0),
+            ),
+            pl.BlockSpec((1, 1, nc, 2, nwires), lambda l, g: (l, g, 0, 0, 0)),
+        ]
     if emit_stream:
         out_shape += [
             jax.ShapeDtypeStruct((links, p, n), jnp.int32),
@@ -522,22 +648,22 @@ def bt_axes_pallas(
                 (1, block_packets * flits, lanes), lambda l, g: (l, g, 0)
             ),
         ]
-    return pl.pallas_call(
-        kern,
-        grid=grid,
-        in_specs=[
-            pk_spec,
-            pk_spec,
-            pl.BlockSpec((1, 1), lambda l, g: (l, 0)),
-        ],
-        out_specs=out_specs,
-        out_shape=out_shape,
-        interpret=interpret,
-    )(
+    args = [
         inputs.astype(jnp.int32),
         weights.astype(jnp.int32),
         valid.astype(jnp.int32).reshape(links, 1),
-    )
+    ]
+    if activity:
+        base = jnp.int32(0) if base_row is None else base_row
+        args.append(jnp.asarray(base, jnp.int32).reshape(1, 1))
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(*args)
 
 
 def _validate_axes_call(
@@ -552,6 +678,8 @@ def _validate_axes_call(
     pack,
     block_packets,
     emit_stream,
+    num_windows=0,
+    window_rows=0,
 ):
     """The multi-axis launch contract, shared by every backend."""
     links, p, n = inputs.shape
@@ -572,6 +700,13 @@ def _validate_axes_call(
         split_lanes = input_lanes
     if not 0 <= split_lanes <= lanes:
         raise ValueError(f"split_lanes={split_lanes} outside the {lanes}-lane flit")
+    if num_windows > 0:
+        if window_rows < 1:
+            raise ValueError(
+                f"activity needs window_rows >= 1, got {window_rows}"
+            )
+        if emit_stream:
+            raise ValueError("activity and emit_stream are exclusive modes")
     if emit_stream:
         if len(configs) != 1 or configs[0].codec != "none":
             raise ValueError(
@@ -601,6 +736,9 @@ def bt_axes_compiled(
     pack: str = "lane",
     block_packets: int = 64,
     emit_stream: bool = False,
+    window_rows: int = 0,
+    num_windows: int = 0,
+    base_row: jax.Array | None = None,
 ):
     """The compiled (pure-jnp) backend of the multi-axis measurement.
 
@@ -616,6 +754,7 @@ def bt_axes_compiled(
         inputs, valid, configs=configs, width=width, input_lanes=input_lanes,
         weight_lanes=weight_lanes, split_lanes=split_lanes, pack=pack,
         block_packets=block_packets, emit_stream=emit_stream,
+        num_windows=num_windows, window_rows=window_rows,
     )
     links, p, n = inputs.shape
     lanes = input_lanes + weight_lanes
@@ -623,6 +762,7 @@ def bt_axes_compiled(
     pmax = max_partitions(configs, lanes)
     gblocks = p // block_packets
     rows = block_packets * flits
+    activity = num_windows > 0
     block = functools.partial(
         _axes_block,
         configs=configs,
@@ -633,6 +773,8 @@ def bt_axes_compiled(
         pack=pack,
         pmax=pmax,
         emit_stream=emit_stream,
+        window_rows=window_rows,
+        num_windows=num_windows,
     )
     xb = jnp.moveaxis(
         inputs.astype(jnp.int32).reshape(links, gblocks, block_packets, n), 1, 0
@@ -644,9 +786,23 @@ def bt_axes_compiled(
         valid.astype(jnp.int32)[None, :] * flits
         - jnp.arange(gblocks, dtype=jnp.int32)[:, None] * rows
     )  # (G, L)
-    per_block = jax.vmap(block)  # over the link axis
-    outs = lax.map(lambda args: per_block(*args), (xb, wb, remaining))
+    if activity:
+        base = jnp.int32(0) if base_row is None else base_row
+        starts = (
+            jnp.asarray(base, jnp.int32)
+            + jnp.arange(gblocks, dtype=jnp.int32) * rows
+        )  # (G,)
+        per_block = jax.vmap(block, in_axes=(0, 0, 0, None))
+        outs = lax.map(
+            lambda args: per_block(*args), (xb, wb, remaining, starts)
+        )
+    else:
+        per_block = jax.vmap(block)  # over the link axis
+        outs = lax.map(lambda args: per_block(*args), (xb, wb, remaining))
     bt, edge, inv = (jnp.moveaxis(o, 1, 0) for o in outs[:3])  # (L, G, ...)
+    if activity:
+        act, ones = (jnp.moveaxis(o, 1, 0) for o in outs[3:5])
+        return bt, edge, inv, act, ones
     if not emit_stream:
         return bt, edge, inv
     order, rank, stream = (jnp.moveaxis(o, 1, 0) for o in outs[3:])

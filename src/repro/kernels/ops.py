@@ -62,6 +62,8 @@ __all__ = [
     "psu_reorder",
     "psu_stream",
     "PsuStreamResult",
+    "AxesActivity",
+    "LinkActivity",
     "bt_count",
     "bt_count_axes",
     "bt_count_axes_sharded",
@@ -248,14 +250,40 @@ def _launch_axes(x, w, valid, *, backend, **kw):
     return bt_axes_pallas(x, w, valid, interpret=backend == "interpret", **kw)
 
 
-def _axes_carry(nl: int, configs, lanes: int):
+class AxesActivity(NamedTuple):
+    """:func:`bt_count_axes` result with per-wire switching activity.
+
+    Wire indexing (DESIGN.md §15): ``lanes * 8`` data wires first (wire =
+    lane * 8 + bit, LSB first), then ``PMAX`` invert-line aux wires (only
+    the first ``partitions`` of a bus-invert config ever toggle).
+    """
+
+    bt: jax.Array  # (L, C, 3) per-link, per-config BT totals
+    toggles: jax.Array  # (L, C, NW, WIRES) toggle counts per time window
+    ones: jax.Array  # (L, C, WIRES) flit rows each wire spent at level 1
+
+
+class LinkActivity(NamedTuple):
+    """:func:`bt_count_links` result with per-wire switching activity."""
+
+    bt: jax.Array  # (L, 2) per-link (input, weight) BT totals
+    toggles: jax.Array  # (L, NW, WIRES)
+    ones: jax.Array  # (L, WIRES)
+
+
+def _axes_carry(nl: int, configs, lanes: int, activity: bool = False):
     """The zero inter-chunk fold carry: nothing transmitted yet."""
     pmax = max_partitions(configs, lanes)
-    return {
+    carry = {
         "started": jnp.zeros((nl,), jnp.int32),
         "wire": jnp.zeros((len(configs), nl, lanes), jnp.int32),
         "inv": jnp.zeros((len(configs), nl, pmax), jnp.int32),
     }
+    if activity:
+        # per-wire level parity entering the next chunk ('transition'
+        # signaling: the wire level is the running data parity)
+        carry["parity"] = jnp.zeros((len(configs), nl, lanes * 8), jnp.int32)
+    return carry
 
 
 def _fold_axes(
@@ -268,6 +296,9 @@ def _fold_axes(
     split_lanes: int,
     carry=None,
     return_carry: bool = False,
+    activity=None,
+    window_rows: int = 0,
+    base_row=None,
 ):
     """Fold per-(link, block) kernel partials into (L, C, 3) totals.
 
@@ -285,12 +316,21 @@ def _fold_axes(
     ("inv").  With ``carry=None`` the stream starts cold — block 0 enters
     uninverted and its first flit pays no boundary — which reproduces the
     single-shot fold exactly.
+
+    ``activity`` is the optional (act, ones) kernel output pair
+    (DESIGN.md §15); the fold then also returns the per-wire window
+    toggles (L, C, NW, WIRES) and wire-level 1-counts (L, C, WIRES): the
+    inter-block boundary toggles are scattered into the window of each
+    block's first row (``base_row`` offsets the chunk), bus-invert branch
+    outputs are selected per PARTITION over the wire axis, and transition
+    1-counts are resolved against the carried per-wire entry parity (the
+    "parity" carry slot).
     """
     nl, gblocks = partials.shape[:2]
     lanes = edges.shape[-1]
     pmax = partials.shape[-2]
     if carry is None:
-        carry = _axes_carry(nl, configs, lanes)
+        carry = _axes_carry(nl, configs, lanes, activity=activity is not None)
     started0 = carry["started"]
     has = (valid_rows > 0).astype(jnp.int32)
     # block g holds >= 1 valid row of this link
@@ -310,7 +350,37 @@ def _fold_axes(
         )
         return jnp.stack([in_side, w_side], axis=-1)
 
+    if activity is not None:
+        act_in, ones_in = activity  # (L,G,C,2,NW,WIRES), (L,G,C,2,WIRES)
+        num_windows = act_in.shape[-2]
+        dwires = lanes * 8
+        base = (
+            jnp.int32(0) if base_row is None
+            else jnp.asarray(base_row, jnp.int32)
+        )
+        # global first row of block g -> the window its entry boundary hits
+        g_first = base + jnp.arange(gblocks, dtype=jnp.int32) * rows
+        win_onehot_g = (
+            (g_first // window_rows)[:, None]
+            == jnp.arange(num_windows, dtype=jnp.int32)[None, :]
+        ).astype(jnp.int32)  # (G, NW)
+        valid_blk = jnp.clip(
+            valid_rows[:, None]
+            - jnp.arange(gblocks, dtype=jnp.int32)[None, :] * rows,
+            0,
+            rows,
+        )  # (L, G) valid rows inside block g
+        bit8 = jnp.arange(8, dtype=jnp.int32)
+
+        def _bits8(arr):  # (..., K) bytes -> (..., K*8) bits, LSB first
+            bits = (arr[..., None] >> bit8) & 1
+            return bits.reshape(*arr.shape[:-1], arr.shape[-1] * 8)
+
+        def _scatter_g(bnd):  # (L, G, W) -> (L, NW, W) window scatter
+            return jnp.einsum("lgw,gn->lnw", bnd, win_onehot_g)
+
     totals, wire_out, inv_out = [], [], []
+    acts_out, ones_out, parity_out = [], [], []
     for ci, cfg in enumerate(configs):
         if cfg.codec == "bus_invert":
             npart, pw = _partitions(lanes, cfg.partition)
@@ -347,14 +417,25 @@ def _fold_axes(
                 m3 = m[:, None, None]
                 new_wire = jnp.where(m3 == 1, new_wire, cw)
                 new_inv = jnp.where(m[:, None] == 1, new_inv, civ)
-                return (new_wire, new_inv, jnp.maximum(st, m)), (bnd + sel) * m3
+                ys = (bnd + sel) * m3
+                if activity is not None:
+                    # per-wire boundary toggles + the entry branch per
+                    # partition (selects the kernel's per-branch activity)
+                    stm = (st * m)[:, None]
+                    ys = (
+                        ys,
+                        b,
+                        _bits8((cw ^ first_wire).reshape(nl, lanes)) * stm,
+                        (civ != b).astype(jnp.int32) * stm,
+                    )
+                return (new_wire, new_inv, jnp.maximum(st, m)), ys
 
             carry0 = (
                 carry["wire"][ci].reshape(nl, npart, pw),
                 carry["inv"][ci, :, :npart],
                 started0,
             )
-            (cw, civ, _), contribs = lax.scan(
+            (cw, civ, _), scan_ys = lax.scan(
                 fold,
                 carry0,
                 (
@@ -364,9 +445,36 @@ def _fold_axes(
                     jnp.moveaxis(gmask, 1, 0),
                 ),
             )
+            contribs = scan_ys[0] if activity is not None else scan_ys
             totals.append(contribs.sum(axis=0).sum(axis=1))  # (L, 3)
             wire_out.append(cw.reshape(nl, lanes))
             inv_out.append(jnp.pad(civ, ((0, 0), (0, pmax - npart))))
+            if activity is not None:
+                _, bs, bnd_bits, aux_bnd = scan_ys
+                # map every wire to its partition's entry branch: data wire
+                # lane*8+bit -> partition wire // (8*pw); aux wire i -> i
+                part_of_wire = jnp.concatenate([
+                    jnp.arange(dwires, dtype=jnp.int32) // (8 * pw),
+                    jnp.minimum(
+                        jnp.arange(pmax, dtype=jnp.int32), npart - 1
+                    ),
+                ])
+                bsel = jnp.moveaxis(bs, 0, 1)[:, :, part_of_wire]
+                acts_out.append(jnp.where(
+                    bsel[:, :, None, :] == 1,
+                    act_in[:, :, ci, 1],
+                    act_in[:, :, ci, 0],
+                ).sum(axis=1) + _scatter_g(jnp.concatenate([
+                    jnp.moveaxis(bnd_bits, 0, 1),
+                    jnp.pad(
+                        jnp.moveaxis(aux_bnd, 0, 1),
+                        ((0, 0), (0, 0), (0, pmax - npart)),
+                    ),
+                ], axis=-1)))
+                ones_out.append(jnp.where(
+                    bsel == 1, ones_in[:, :, ci, 1], ones_in[:, :, ci, 0]
+                ).sum(axis=1))
+                parity_out.append(carry["parity"][ci])
         else:
             # branch 0 carries every stateless codec; padded slots are zero
             total = partials[:, :, ci, 0].sum(axis=(1, 2))  # (L, 3)
@@ -374,12 +482,13 @@ def _fold_axes(
             last = edges[:, :, ci, 0, 1, :]
             if cfg.codec == "transition":
                 # boundary flips = each block's first DATA flit bits
-                flips = _popcount_bits(first, 8)
+                bnd_bytes = first
             else:
                 prev = jnp.concatenate(
                     [carry["wire"][ci][:, None], last[:, :-1]], axis=1
                 )
-                flips = _popcount_bits(prev ^ first, 8)
+                bnd_bytes = prev ^ first
+            flips = _popcount_bits(bnd_bytes, 8)
             # boundary into block g counts iff block g is real AND there is
             # a previous flit (g > 0, or the stream already started)
             entry = jnp.concatenate(
@@ -396,14 +505,52 @@ def _fold_axes(
                 jnp.where(has[:, None] == 1, lastw, carry["wire"][ci])
             )
             inv_out.append(carry["inv"][ci])
+            if activity is not None:
+                bb = _bits8(bnd_bytes) * (gmask * entry)[..., None]
+                acts_out.append(
+                    act_in[:, :, ci, 0].sum(axis=1)
+                    + _scatter_g(jnp.pad(bb, ((0, 0), (0, 0), (0, pmax))))
+                )
+                if cfg.codec == "transition":
+                    # resolve slot-0 1-counts against the carried per-wire
+                    # entry parity; slot 1 holds each block's data parity
+                    ones_e0 = ones_in[:, :, ci, 0, :dwires]  # (L, G, D)
+                    pblk = ones_in[:, :, ci, 1, :dwires]
+                    pcarry = carry["parity"][ci]  # (L, D)
+                    pent = (
+                        pcarry[:, None, :]
+                        + jnp.cumsum(pblk, axis=1) - pblk
+                    ) & 1
+                    ones_g = jnp.where(
+                        pent == 1,
+                        valid_blk[..., None] - ones_e0,
+                        ones_e0,
+                    )
+                    ones_out.append(jnp.pad(
+                        ones_g.sum(axis=1), ((0, 0), (0, pmax))
+                    ))
+                    parity_out.append((pcarry + pblk.sum(axis=1)) & 1)
+                else:
+                    ones_out.append(ones_in[:, :, ci, 0].sum(axis=1))
+                    parity_out.append(carry["parity"][ci])
     out = jnp.stack(totals, axis=1).astype(jnp.int32)  # (L, C, 3)
+    res = (out,)
+    if activity is not None:
+        res += (
+            jnp.stack(acts_out, axis=1).astype(jnp.int32),  # (L,C,NW,WIRES)
+            jnp.stack(ones_out, axis=1).astype(jnp.int32),  # (L,C,WIRES)
+        )
     if not return_carry:
-        return out
-    return out, {
+        return res[0] if activity is None else res
+    new_carry = {
         "started": jnp.maximum(started0, has),
         "wire": jnp.stack(wire_out),
         "inv": jnp.stack(inv_out),
     }
+    if activity is not None:
+        new_carry["parity"] = jnp.stack(parity_out)
+        return res + (new_carry,)
+    return out, new_carry
 
 
 def _dispatch_axes(
@@ -420,6 +567,7 @@ def _dispatch_axes(
     block_packets,
     backend,
     chunk_packets=None,
+    activity_windows=None,
 ):
     """Pad, launch (on the resolved backend) and fold — optionally chunked.
 
@@ -428,6 +576,12 @@ def _dispatch_axes(
     the :func:`_fold_axes` carry (bus-invert wire/invert-line state,
     stateless-codec edge flits) across chunk boundaries — bit-exact with
     the single-launch path while bounding live intermediates to one chunk.
+
+    With ``activity_windows`` every launch also accumulates the per-wire
+    window-toggle tensor (DESIGN.md §15): windows are indexed by GLOBAL
+    flit row (each chunk offsets its blocks by ``base_row``), so the
+    chunked path lands every toggle in the same window as the one-shot
+    path and the trimmed :class:`AxesActivity` result is bit-exact.
     """
     links, p, n = inputs.shape
     flits = n // input_lanes
@@ -442,18 +596,32 @@ def _dispatch_axes(
         pack=pack,
         block_packets=bp,
     )
+    wlen = activity_windows
+    nw_real = 0 if wlen is None else -(-(p * flits) // wlen)
     x = inputs.astype(jnp.int32)
     w = weights.astype(jnp.int32)
     if chunk_packets is None:
         pad = (-p) % bp
         x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
         w = jnp.pad(w, ((0, 0), (0, pad), (0, 0)))
-        partials, edges, inv_edges = _launch_axes(
-            x, w, valid, backend=backend, **kw
+        if wlen is None:
+            partials, edges, inv_edges = _launch_axes(
+                x, w, valid, backend=backend, **kw
+            )
+            return _fold_axes(
+                partials, edges, inv_edges, configs, valid * flits,
+                bp * flits, sl,
+            )
+        nw = -(-((p + pad) * flits) // wlen)
+        partials, edges, inv_edges, act, ones = _launch_axes(
+            x, w, valid, backend=backend, window_rows=wlen, num_windows=nw,
+            **kw,
         )
-        return _fold_axes(
-            partials, edges, inv_edges, configs, valid * flits, bp * flits, sl
+        bt, act_t, ones_t = _fold_axes(
+            partials, edges, inv_edges, configs, valid * flits, bp * flits,
+            sl, activity=(act, ones), window_rows=wlen,
         )
+        return AxesActivity(bt, act_t[:, :, :nw_real], ones_t)
     # chunked streaming: the chunk is rounded up to a whole block count
     cp = -(-chunk_packets // bp) * bp
     pad = (-p) % cp
@@ -467,30 +635,50 @@ def _dispatch_axes(
         0,
         cp,
     )  # (nchunks, L) valid packets per chunk
+    nw = 0 if wlen is None else -(-(nchunks * cp * flits) // wlen)
+    bases = jnp.arange(nchunks, dtype=jnp.int32) * (cp * flits)
 
     def step(state, blk):
-        fold_carry, total = state
-        xc, wc, vc = blk
-        partials, edges, inv_edges = _launch_axes(
-            xc, wc, vc, backend=backend, **kw
+        if wlen is None:
+            fold_carry, total = state
+            xc, wc, vc, _ = blk
+            partials, edges, inv_edges = _launch_axes(
+                xc, wc, vc, backend=backend, **kw
+            )
+            bt, fold_carry = _fold_axes(
+                partials, edges, inv_edges, configs, vc * flits, bp * flits,
+                sl, carry=fold_carry, return_carry=True,
+            )
+            return (fold_carry, total + bt), None
+        fold_carry, total, act_tot, ones_tot = state
+        xc, wc, vc, basec = blk
+        partials, edges, inv_edges, act, ones = _launch_axes(
+            xc, wc, vc, backend=backend, window_rows=wlen, num_windows=nw,
+            base_row=basec, **kw,
         )
-        bt, fold_carry = _fold_axes(
-            partials,
-            edges,
-            inv_edges,
-            configs,
-            vc * flits,
-            bp * flits,
-            sl,
-            carry=fold_carry,
-            return_carry=True,
+        bt, act_t, ones_t, fold_carry = _fold_axes(
+            partials, edges, inv_edges, configs, vc * flits, bp * flits, sl,
+            carry=fold_carry, return_carry=True, activity=(act, ones),
+            window_rows=wlen, base_row=basec,
         )
-        return (fold_carry, total + bt), None
+        return (
+            fold_carry, total + bt, act_tot + act_t, ones_tot + ones_t
+        ), None
 
-    carry0 = _axes_carry(links, configs, input_lanes + weight_lanes)
+    lanes = input_lanes + weight_lanes
+    carry0 = _axes_carry(links, configs, lanes, activity=wlen is not None)
     total0 = jnp.zeros((links, len(configs), 3), jnp.int32)
-    (_, total), _ = lax.scan(step, (carry0, total0), (xb, wb, cvalid))
-    return total
+    state0 = (carry0, total0)
+    if wlen is not None:
+        nwires = lanes * 8 + max_partitions(configs, lanes)
+        state0 += (
+            jnp.zeros((links, len(configs), nw, nwires), jnp.int32),
+            jnp.zeros((links, len(configs), nwires), jnp.int32),
+        )
+    state, _ = lax.scan(step, state0, (xb, wb, cvalid, bases))
+    if wlen is None:
+        return state[1]
+    return AxesActivity(state[1], state[2][:, :, :nw_real], state[3])
 
 
 def _paired(inputs, weights, weight_lanes, input_lanes):
@@ -659,6 +847,7 @@ def bt_count(
         "block_packets",
         "backend",
         "chunk_packets",
+        "activity_windows",
     ),
 )
 def _bt_count_axes(
@@ -675,12 +864,23 @@ def _bt_count_axes(
     block_packets: int,
     backend: str,
     chunk_packets: int | None,
+    activity_windows: int | None = None,
 ) -> jax.Array:
     weights, weight_lanes = _paired(inputs, weights, weight_lanes, input_lanes)
     links, p, n = inputs.shape
     nc = len(configs)
     if links == 0 or p == 0:
-        return jnp.zeros((links, nc, 3), jnp.int32)
+        bt = jnp.zeros((links, nc, 3), jnp.int32)
+        if activity_windows is None:
+            return bt
+        lanes = input_lanes + weight_lanes
+        nwires = lanes * 8 + max_partitions(configs, lanes)
+        nw = 0 if p == 0 else -(-(p * (n // input_lanes)) // activity_windows)
+        return AxesActivity(
+            bt,
+            jnp.zeros((links, nc, nw, nwires), jnp.int32),
+            jnp.zeros((links, nc, nwires), jnp.int32),
+        )
     if valid is None:
         valid = jnp.full((links,), p, jnp.int32)
     else:
@@ -700,6 +900,7 @@ def _bt_count_axes(
         block_packets=block_packets,
         backend=backend,
         chunk_packets=chunk_packets,
+        activity_windows=activity_windows,
     )
 
 
@@ -717,6 +918,7 @@ def bt_count_axes(
     interpret: bool | None = None,
     backend: str | None = None,
     chunk_packets: int | None = None,
+    activity_windows: int | None = None,
 ) -> jax.Array:
     """The full multi-axis measurement: per-LINK, per-(ordering, codec)
     config BT of a (L, P, N) packet batch in ONE kernel launch.
@@ -741,20 +943,29 @@ def bt_count_axes(
         many packets (rounded up to a block multiple), threading the
         inter-block fold carry across chunk edges — bit-exact, O(chunk)
         live memory.
+      activity_windows: also accumulate the per-wire switching-activity
+        tensor with this window length in FLIT ROWS (DESIGN.md §15); the
+        return type becomes :class:`AxesActivity` with ``toggles`` of
+        shape (L, C, ceil(P*F / activity_windows), lanes*8 + PMAX) and
+        ``ones`` (time-at-1 per wire, in flit rows) of (L, C, wires).
 
     Returns:
       int32 (L, C, 3): per-link, per-config (input-side BT, weight-side
-      BT, invert-line BT) totals.
+      BT, invert-line BT) totals — or :class:`AxesActivity` when
+      ``activity_windows`` is set.
     """
     if inputs.ndim != 3:
         raise ValueError(f"expected (L, P, N) packets, got {inputs.shape}")
+    if activity_windows is not None and activity_windows < 1:
+        raise ValueError(f"activity_windows must be >= 1, got {activity_windows}")
     resolved = resolve_backend(backend, interpret)
     links, p, _ = (int(d) for d in inputs.shape)
     with _probe("bt_count_axes", resolved,
                 shape=tuple(map(int, inputs.shape)),
                 configs=len(tuple(configs)), width=width,
                 blocks=links * -(-p // max(1, min(block_packets, max(1, p)))),
-                chunked=chunk_packets is not None):
+                chunked=chunk_packets is not None,
+                activity=activity_windows is not None):
         return _entry(_bt_count_axes, resolved)(
             inputs,
             weights,
@@ -768,6 +979,7 @@ def bt_count_axes(
             block_packets=block_packets,
             backend=resolved,
             chunk_packets=chunk_packets,
+            activity_windows=activity_windows,
         )
 
 
@@ -785,6 +997,7 @@ def bt_count_axes_sharded(
     interpret: bool | None = None,
     backend: str | None = None,
     chunk_packets: int | None = None,
+    activity_windows: int | None = None,
     devices: Sequence[jax.Device] | None = None,
 ) -> jax.Array:
     """:func:`bt_count_axes` with the LINK axis sharded across devices.
@@ -810,8 +1023,18 @@ def bt_count_axes_sharded(
     weights, weight_lanes = _paired(inputs, weights, weight_lanes, input_lanes)
     links, p, n = inputs.shape
     nc = len(configs := tuple(configs))
+    lanes = input_lanes + weight_lanes
     if links == 0 or p == 0:
-        return jnp.zeros((links, nc, 3), jnp.int32)
+        bt = jnp.zeros((links, nc, 3), jnp.int32)
+        if activity_windows is None:
+            return bt
+        nwires = lanes * 8 + max_partitions(configs, lanes)
+        nw = 0 if p == 0 else -(-(p * (n // input_lanes)) // activity_windows)
+        return AxesActivity(
+            bt,
+            jnp.zeros((links, nc, nw, nwires), jnp.int32),
+            jnp.zeros((links, nc, nwires), jnp.int32),
+        )
     if valid is None:
         valid = jnp.full((links,), p, jnp.int32)
     else:
@@ -824,8 +1047,14 @@ def bt_count_axes_sharded(
     shard = ltot // nd
     mesh = Mesh(np.asarray(devices), ("links",))
 
+    def _assemble(arr):
+        # scatter this shard's rows into the full-link layout and psum
+        full = jnp.zeros((ltot,) + arr.shape[1:], arr.dtype)
+        idx = (lax.axis_index("links") * shard,) + (0,) * (arr.ndim - 1)
+        return lax.psum(lax.dynamic_update_slice(full, arr, idx), "links")
+
     def local(xs, ws, vs):
-        bt = _dispatch_axes(
+        out = _dispatch_axes(
             xs,
             ws,
             vs,
@@ -838,30 +1067,32 @@ def bt_count_axes_sharded(
             block_packets=block_packets,
             backend=backend,
             chunk_packets=chunk_packets,
+            activity_windows=activity_windows,
         )
-        full = jnp.zeros((ltot, nc, 3), jnp.int32)
-        full = lax.dynamic_update_slice(
-            full, bt, (lax.axis_index("links") * shard, 0, 0)
-        )
-        return lax.psum(full, "links")
+        if activity_windows is None:
+            return _assemble(out)
+        return AxesActivity(*(_assemble(o) for o in out))
 
     spec = PartitionSpec("links")
     with _probe("bt_count_axes_sharded", backend,
                 shape=(ltot, int(p), int(n)), configs=nc, width=width,
-                devices=nd):
+                devices=nd, activity=activity_windows is not None):
         out = shard_map(
             local,
             mesh=mesh,
             in_specs=(spec, spec, spec),
             out_specs=PartitionSpec(),
         )(x, w, v)
-    return out[:links]
+    if activity_windows is None:
+        return out[:links]
+    return AxesActivity(*(o[:links] for o in out))
 
 
 @partial(
     jax.jit,
     static_argnames=(
-        "input_lanes", "width", "block_rows", "backend", "chunk_rows"
+        "input_lanes", "width", "block_rows", "backend", "chunk_rows",
+        "activity_windows",
     ),
 )
 def _bt_count_links(
@@ -873,6 +1104,7 @@ def _bt_count_links(
     block_rows: int,
     backend: str,
     chunk_rows: int | None,
+    activity_windows: int | None = None,
 ) -> jax.Array:
     links, t, lanes = streams.shape
     valid = (
@@ -880,7 +1112,7 @@ def _bt_count_links(
         if lengths is None
         else jnp.minimum(jnp.asarray(lengths, jnp.int32), t)
     )
-    bt = _dispatch_axes(
+    out = _dispatch_axes(
         streams,
         jnp.zeros_like(streams),
         valid,
@@ -893,8 +1125,15 @@ def _bt_count_links(
         block_packets=block_rows,
         backend=backend,
         chunk_packets=chunk_rows,
+        activity_windows=activity_windows,
     )
-    return bt[:, 0, :2]
+    if activity_windows is None:
+        return out[:, 0, :2]
+    # one uncoded config: drop the config axis and the (zero) aux wire
+    return LinkActivity(
+        out.bt[:, 0, :2], out.toggles[:, 0, :, : lanes * 8],
+        out.ones[:, 0, : lanes * 8],
+    )
 
 
 def bt_count_links(
@@ -907,6 +1146,7 @@ def bt_count_links(
     interpret: bool | None = None,
     backend: str | None = None,
     chunk_rows: int | None = None,
+    activity_windows: int | None = None,
 ) -> jax.Array:
     """Per-link BT of a (L, T, lanes) stream batch in ONE kernel launch.
 
@@ -930,9 +1170,14 @@ def bt_count_links(
       block_rows: flit rows per grid step.
       backend / chunk_rows: backend selection and chunked streaming over
         the flit-row axis (see :func:`bt_count_axes`).
+      activity_windows: also accumulate per-wire switching activity with
+        this window length in flit rows; the return type becomes
+        :class:`LinkActivity` with ``toggles`` (L, NW, lanes*8) and
+        ``ones`` (L, lanes*8) over the data wires (wire = lane*8 + bit).
 
     Returns:
-      int32 (L, 2): per-link (input-side, weight-side) bit transitions.
+      int32 (L, 2): per-link (input-side, weight-side) bit transitions —
+      or :class:`LinkActivity` when ``activity_windows`` is set.
     """
     del block_links  # the link axis is unblocked on the unified grid
     links, t, lanes = streams.shape
@@ -942,12 +1187,21 @@ def bt_count_links(
         raise ValueError(
             f"input_lanes={input_lanes} outside the {lanes}-lane flit"
         )
-    if links == 0 or t < 2:
-        return jnp.zeros((links, 2), jnp.int32)
+    if links == 0 or t == 0 or (t < 2 and activity_windows is None):
+        bt = jnp.zeros((links, 2), jnp.int32)
+        if activity_windows is None:
+            return bt
+        nw = -(-int(t) // activity_windows)
+        return LinkActivity(
+            bt,
+            jnp.zeros((links, nw, lanes * 8), jnp.int32),
+            jnp.zeros((links, lanes * 8), jnp.int32),
+        )
     resolved = resolve_backend(backend, interpret)
     with _probe("bt_count_links", resolved,
                 shape=(int(links), int(t), int(lanes)), width=width,
-                chunked=chunk_rows is not None):
+                chunked=chunk_rows is not None,
+                activity=activity_windows is not None):
         return _entry(_bt_count_links, resolved)(
             streams,
             lengths,
@@ -956,6 +1210,7 @@ def bt_count_links(
             block_rows=block_rows,
             backend=resolved,
             chunk_rows=chunk_rows,
+            activity_windows=activity_windows,
         )
 
 
@@ -1014,6 +1269,7 @@ def bt_count_codecs(
     interpret: bool | None = None,
     backend: str | None = None,
     chunk_packets: int | None = None,
+    activity_windows: int | None = None,
 ) -> jax.Array:
     """Coded + ordered BT of (P, N) packets under MANY (ordering, codec)
     configurations in ONE kernel launch.
@@ -1027,7 +1283,9 @@ def bt_count_codecs(
       int32 (C, 3): per-config (input-side BT, weight-side BT, invert-line
       BT) totals.  The invert-line column is the coding overhead the wire
       still pays switching energy for (zero for codecs without extra
-      lines).
+      lines).  With ``activity_windows`` the return type becomes
+      :class:`AxesActivity` with the one-link axis dropped: bt (C, 3),
+      toggles (C, NW, WIRES), ones (C, WIRES).
     """
     weights, weight_lanes = _paired(inputs, weights, weight_lanes, input_lanes)
     out = bt_count_axes(
@@ -1043,8 +1301,11 @@ def bt_count_codecs(
         interpret=interpret,
         backend=backend,
         chunk_packets=chunk_packets,
+        activity_windows=activity_windows,
     )
-    return out[0]
+    if activity_windows is None:
+        return out[0]
+    return AxesActivity(out.bt[0], out.toggles[0], out.ones[0])
 
 
 @partial(jax.jit, static_argnames=("block", "backend"))

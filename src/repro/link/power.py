@@ -61,6 +61,53 @@ class LinkPowerModel:
             + self.static_flit_energy_pj * floor * float(num_flits)
         )
 
+    def wire_energy_pj(
+        self,
+        per_wire_bt,
+        num_flits: int,
+        *,
+        wire_caps=None,
+        data_wires: int | None = None,
+        extra_wires: int = 0,
+    ) -> float:
+        """Wire-resolved link energy from a per-wire BT vector (§15).
+
+        ``per_wire_bt`` is the ``data_wires + extra_wires``-long toggle
+        vector of one link (the ``ActivityProfile.per_wire`` view);
+        ``wire_caps`` is an optional per-wire relative capacitance profile
+        — ``energy_per_transition_pj`` is the per-transition cost of a
+        cap-1.0 wire, so a 1.3 entry models a 30 % longer/loaded net.
+        The static floor is the same widened-register term as
+        ``coded_link_energy_pj``.  With uniform caps (the default) this
+        reproduces ``link_energy_pj`` / ``coded_link_energy_pj`` EXACTLY
+        (same float expression — pinned in tests), so the wire-resolved
+        path is a refinement, never a second model.
+        """
+        bt = [float(b) for b in per_wire_bt]
+        if data_wires is None:
+            data_wires = len(bt) - extra_wires
+        if data_wires <= 0:
+            raise ValueError(f"need data_wires >= 1, got {data_wires}")
+        if data_wires + extra_wires != len(bt):
+            raise ValueError(
+                f"{len(bt)} per-wire entries != {data_wires} data + "
+                f"{extra_wires} extra wires"
+            )
+        if wire_caps is None:
+            weighted = sum(bt)
+        else:
+            caps = [float(c) for c in wire_caps]
+            if len(caps) != len(bt):
+                raise ValueError(
+                    f"{len(caps)} wire_caps != {len(bt)} wires"
+                )
+            weighted = sum(c * b for c, b in zip(caps, bt))
+        floor = 1.0 + extra_wires / float(data_wires)
+        return (
+            self.energy_per_transition_pj * weighted
+            + self.static_flit_energy_pj * floor * float(num_flits)
+        )
+
     def power_reduction(self, bt_reduction: float) -> float:
         """Link-related power reduction predicted from a BT reduction."""
         return self.transfer_factor * bt_reduction

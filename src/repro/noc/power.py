@@ -59,3 +59,21 @@ class NocPowerModel(LinkPowerModel):
         return self.coded_link_energy_pj(
             data_bt, aux_bt, num_flits, data_wires, extra_wires
         ) + self.router_flit_energy_pj * float(num_flits)
+
+    def wire_hop_energy_pj(
+        self,
+        per_wire_bt,
+        num_flits: int,
+        *,
+        wire_caps=None,
+        data_wires: int | None = None,
+        extra_wires: int = 0,
+    ) -> float:
+        """Wire-resolved hop traversal: the per-wire link model (§15) plus
+        the router flit overhead.  With uniform caps this equals
+        ``coded_hop_energy_pj`` of the summed BT exactly — same refinement
+        contract as the base model's ``wire_energy_pj``."""
+        return self.wire_energy_pj(
+            per_wire_bt, num_flits, wire_caps=wire_caps,
+            data_wires=data_wires, extra_wires=extra_wires,
+        ) + self.router_flit_energy_pj * float(num_flits)

@@ -114,14 +114,18 @@ class LinkStreams(NamedTuple):
     ``streams`` is (L, T_max, lanes) uint8; links shorter than T_max are
     padded with copies of their last flit (BT-neutral), ``lengths`` keeps
     the real flit counts.  When the spec names a wire codec, ``streams``
-    is the *coded* wire image and ``aux_bt`` carries each link's
-    invert-line transitions (all zeros otherwise).
+    is the *coded* wire image, ``aux_bt`` carries each link's invert-line
+    transitions (all zeros otherwise), and ``inverts`` keeps the raw
+    (T_link, npart) invert-line states per link (``None`` when the codec
+    adds no wires) — the wire-level activity path needs the actual line
+    levels, not just their transition total.
     """
 
     link_ids: tuple[int, ...]
     streams: jax.Array
     lengths: tuple[int, ...]
     aux_bt: tuple[int, ...] = ()
+    inverts: tuple = ()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -135,6 +139,16 @@ class NocReport:
     links: tuple[LinkStats, ...]
     flow_hops: tuple[tuple[str, int], ...]  # (flow name, max hops to a dst)
     total_links: int  # links in the topology (active or not)
+    # wire-level activity (DESIGN.md §15) — populated only when the run was
+    # measured with ``activity_windows=``.  One (num_windows, wires) toggle
+    # tensor and one (wires,) time-at-1 vector per active link, wires =
+    # wire_lanes*8 data bits + the codec's invert lines; consumed
+    # duck-typed by ``repro.obs.activity.profiles_from_noc`` (noc never
+    # imports repro.obs).
+    activity_window: int = 0
+    wire_lanes: int = 0
+    wire_toggles: tuple = ()
+    wire_ones: tuple = ()
 
     @property
     def active_links(self) -> int:
@@ -283,9 +297,10 @@ def _expand_link_streams(
     # links with the same queued-flow composition carry byte-identical
     # streams (every link of a unicast route, every tree link of a
     # multicast) — assemble each distinct queue once
-    assembled: dict[tuple[int, ...], tuple[jax.Array, int]] = {}
+    assembled: dict[tuple[int, ...], tuple[jax.Array, int, object]] = {}
     streams: list[jax.Array] = []
     aux_bts: list[int] = []
+    inverts: list = []
     for lid in link_ids:
         idxs = tuple(segments[lid])
         entry = assembled.get(idxs)
@@ -300,7 +315,7 @@ def _expand_link_streams(
                 wi = None if wi is None else jnp.take(wi, perm, axis=0)
                 order = jnp.take(order, perm, axis=0)
             stream = assemble_stream(xi, wi, spec, order, spec.pack)
-            aux = 0
+            aux, inv = 0, None
             if spec.codec != "none":
                 # each link's egress encoder codes its own queue; the
                 # batched kernel then measures the coded wire directly
@@ -312,11 +327,18 @@ def _expand_link_streams(
                 coded = codec_by_name(spec.codec).encode(stream)
                 stream = coded.wire
                 aux = int(invert_line_transitions(coded.invert))
-            entry = assembled[idxs] = (stream, aux)
+                inv = (
+                    None if coded.invert is None
+                    else np.asarray(coded.invert)
+                )
+            entry = assembled[idxs] = (stream, aux, inv)
         streams.append(entry[0])
         aux_bts.append(entry[1])
+        inverts.append(entry[2])
     stacked, lengths = stack_link_streams(streams, spec.bytes_per_flit)
-    return LinkStreams(tuple(link_ids), stacked, lengths, tuple(aux_bts))
+    return LinkStreams(
+        tuple(link_ids), stacked, lengths, tuple(aux_bts), tuple(inverts)
+    )
 
 
 def stack_link_streams(
@@ -353,6 +375,7 @@ def simulate_noc(
     interpret: bool | None = None,
     backend: str | None = None,
     chunk_rows: int | None = None,
+    activity_windows: int | None = None,
     name: str = "noc",
 ) -> NocReport:
     """Run the fabric: expand flows to link streams, measure every link.
@@ -362,7 +385,11 @@ def simulate_noc(
     flit overhead per hop).  ``backend`` selects the kernel execution path
     (pallas | compiled | interpret, DESIGN.md §13); ``chunk_rows`` streams
     the flit-row axis in fixed-size chunks for fabrics whose stacked link
-    tensor would not fit in memory at once.
+    tensor would not fit in memory at once.  ``activity_windows`` (a flit
+    count) additionally measures per-wire × per-time-window switching
+    activity on every link (DESIGN.md §15): the report gains
+    ``wire_toggles`` / ``wire_ones`` and each link fires a
+    ``link.activity`` probe event.
     """
     power = power if power is not None else NocPowerModel()
     with _obs.span(
@@ -373,7 +400,7 @@ def simulate_noc(
         report = _simulate_noc(
             topo, flows, spec, sort_at=sort_at, power=power,
             interpret=interpret, backend=backend, chunk_rows=chunk_rows,
-            name=name,
+            activity_windows=activity_windows, name=name,
         )
     if _obs.active():
         # per-link egress telemetry (the rows behind repro.obs.report)
@@ -383,6 +410,18 @@ def simulate_noc(
                 num_flits=s.num_flits, bt_input=s.bt_input,
                 bt_weight=s.bt_weight, bt_aux=s.bt_aux,
                 energy_pj=s.energy_pj,
+            )
+        for i, s in enumerate(report.links if report.activity_window else ()):
+            pw = report.wire_toggles[i].sum(axis=0)
+            hot = int(np.lexsort((np.arange(len(pw)), -pw))[0])
+            _obs.event(
+                "link.activity", link=s.link, src=s.src, dst=s.dst,
+                window_flits=report.activity_window,
+                num_windows=-(-s.num_flits // report.activity_window),
+                data_lanes=report.wire_lanes,
+                toggles_total=int(pw.sum()),
+                per_wire=[int(v) for v in pw],
+                hot_wire=hot, hot_wire_toggles=int(pw[hot]),
             )
     return report
 
@@ -397,6 +436,7 @@ def _simulate_noc(
     interpret: bool | None,
     backend: str | None,
     chunk_rows: int | None,
+    activity_windows: int | None,
     name: str,
 ) -> NocReport:
     ls = expand_link_streams(topo, flows, spec, sort_at=sort_at)
@@ -406,17 +446,25 @@ def _simulate_noc(
 
         extra_wires = codec_by_name(spec.codec).extra_wires(spec.bytes_per_flit)
     stats: list[LinkStats] = []
+    wire_toggles: tuple = ()
+    wire_ones: tuple = ()
     if ls.link_ids:
-        bt = np.asarray(
-            bt_count_links(
-                ls.streams,
-                input_lanes=spec.input_lanes,
-                lengths=ls.lengths,
-                interpret=interpret,
-                backend=backend,
-                chunk_rows=chunk_rows,
-            )
+        out = bt_count_links(
+            ls.streams,
+            input_lanes=spec.input_lanes,
+            lengths=ls.lengths,
+            interpret=interpret,
+            backend=backend,
+            chunk_rows=chunk_rows,
+            activity_windows=activity_windows,
         )
+        if activity_windows is not None:
+            wire_toggles, wire_ones = _link_wire_activity(
+                out, ls, activity_windows, extra_wires
+            )
+            bt = np.asarray(out.bt)
+        else:
+            bt = np.asarray(out)
         for (lid, length, aux, (bi, bw)) in zip(
             ls.link_ids, ls.lengths, ls.aux_bt, bt.astype(int).tolist()
         ):
@@ -449,4 +497,37 @@ def _simulate_noc(
         links=tuple(stats),
         flow_hops=flow_hops,
         total_links=topo.num_links,
+        activity_window=activity_windows or 0,
+        wire_lanes=spec.bytes_per_flit if activity_windows else 0,
+        wire_toggles=wire_toggles,
+        wire_ones=wire_ones,
     )
+
+
+def _link_wire_activity(
+    out, ls: LinkStreams, window: int, extra_wires: int
+) -> tuple[tuple, tuple]:
+    """Per-link full-wire activity: the kernel's data-wire tensors widened
+    with the codec invert lines' toggles/ones, computed from the raw line
+    states ``expand_link_streams`` kept (the invert recurrence is already
+    paid there — only window bucketing happens here, in numpy)."""
+    tog = np.asarray(out.toggles).astype(np.int64)  # (L, NW, lanes*8)
+    one = np.asarray(out.ones).astype(np.int64)  # (L, lanes*8)
+    nw = tog.shape[1]
+    inverts = ls.inverts if ls.inverts else (None,) * len(ls.link_ids)
+    wire_toggles, wire_ones = [], []
+    for i, (length, inv) in enumerate(zip(ls.lengths, inverts)):
+        aux_t = np.zeros((nw, extra_wires), np.int64)
+        aux_o = np.zeros(extra_wires, np.int64)
+        if inv is not None and length >= 1:
+            iv = np.asarray(inv[:length], np.int64)
+            aux_o[: iv.shape[1]] = iv.sum(axis=0)
+            if length >= 2:
+                flips = (iv[1:] != iv[:-1]).astype(np.int64)
+                # boundary into row t lands in window t // window — the
+                # same global indexing as the kernel's data wires
+                widx = np.arange(1, length) // window
+                np.add.at(aux_t[:, : iv.shape[1]], widx, flips)
+        wire_toggles.append(np.concatenate([tog[i], aux_t], axis=1))
+        wire_ones.append(np.concatenate([one[i], aux_o]))
+    return tuple(wire_toggles), tuple(wire_ones)

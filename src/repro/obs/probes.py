@@ -21,6 +21,9 @@ fans out to all active collectors.  The probe vocabulary:
   noc.simulate       span   ``noc.simulate_noc``
   noc.link           event  one per measured NoC link (the per-link BT
                             telemetry behind ``repro.obs.report``)
+  link.activity      event  one per link measured with wire-level
+                            activity (``activity_windows=``) — per-wire
+                            toggle telemetry (DESIGN.md §15)
   dse.measure        span   each per-width multi-axis launch in
                             ``dse.evaluate_grid``
   dse.link           event  one per measurement link of a DSE grid launch
@@ -44,10 +47,36 @@ from contextlib import contextmanager
 
 from repro import _obs_hooks
 
+from .activity import wire_name
 from .metrics import Registry
 from .trace import Tracer
 
-__all__ = ["collect", "tracing", "active_registries", "active_tracers"]
+__all__ = [
+    "PROBE_KINDS",
+    "collect",
+    "tracing",
+    "active_registries",
+    "active_tracers",
+]
+
+# the canonical probe vocabulary — kind -> form.  This dict IS the source
+# of truth the DESIGN.md §14 table must mirror (a guard test parses the
+# table and fails on drift), so adding a probe point means updating both.
+PROBE_KINDS: dict[str, str] = {
+    "kernel.dispatch": "span",
+    "link.tx": "span",
+    "link.stage": "span",
+    "link.report": "event",
+    "link.activity": "event",
+    "noc.expand": "span",
+    "noc.simulate": "span",
+    "noc.link": "event",
+    "dse.measure": "span",
+    "dse.link": "event",
+    "dse.point": "event",
+    "codec.stream": "event",
+    "bench.module": "span",
+}
 
 # label keys lifted from span payloads into metric series identity —
 # everything else stays trace-only (unbounded-cardinality values like
@@ -95,6 +124,27 @@ def _record_event(reg: Registry, kind: str, data: dict) -> None:
         reg.counter("link.bt", side="aux", **lab).inc(data["aux_bt"])
         reg.counter("link.flits", **lab).inc(data["num_flits"])
         reg.counter("link.energy_pj", **lab).inc(data["energy_pj"])
+    elif kind == "link.activity":
+        lab = {
+            "link": data["link"], "src": data["src"], "dst": data["dst"],
+        }
+        reg.counter("link.activity.toggles", **lab).inc(
+            data["toggles_total"]
+        )
+        reg.counter("link.activity.windows", **lab).inc(
+            data["num_windows"]
+        )
+        reg.counter(
+            "link.activity.hot_wire_toggles",
+            wire=wire_name(data["hot_wire"], data["data_lanes"]),
+            **lab,
+        ).inc(data["hot_wire_toggles"])
+        # per-wire distribution as a histogram (bounded series count —
+        # wire *values* stream through one series per link, never one
+        # series per wire)
+        hist = reg.histogram("link.activity.wire_toggles", **lab)
+        for v in data["per_wire"]:
+            hist.observe(v)
     elif kind == "dse.link":
         lab = {"link": data["link"], "width": data["width"]}
         reg.counter("dse.link.bt", **lab).inc(data["bt"])

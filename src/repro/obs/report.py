@@ -22,6 +22,9 @@ __all__ = [
     "top_links",
     "format_links",
     "write_links_csv",
+    "activity_table",
+    "top_wires",
+    "write_activity_csv",
     "metrics_dict",
     "write_metrics_json",
     "read_metrics_json",
@@ -123,11 +126,89 @@ def write_links_csv(path: str, registry: Registry) -> list[dict]:
     return rows
 
 
+ACTIVITY_FIELDS = (
+    "link",
+    "src",
+    "dst",
+    "toggles",
+    "windows",
+    "wire_mean",
+    "wire_max",
+    "hot_wire",
+    "hot_wire_toggles",
+)
+
+
+def activity_table(registry: Registry) -> list[dict]:
+    """One flat record per link seen by the ``link.activity`` probe —
+    the wire-resolved companion to :func:`link_table` (totals, per-wire
+    spread, and the hottest net of each link)."""
+    rows: dict[tuple[int, int, int], dict] = {}
+    for series in registry.series("link.activity.toggles"):
+        lab = series.labels
+        key = (int(lab["link"]), int(lab["src"]), int(lab["dst"]))
+        slab = {"link": lab["link"], "src": lab["src"], "dst": lab["dst"]}
+        hist = registry.histogram("link.activity.wire_toggles", **slab)
+        hot_wire, hot_tog = "", 0
+        for s in registry.series("link.activity.hot_wire_toggles"):
+            hl = s.labels
+            if (int(hl["link"]), int(hl["src"]), int(hl["dst"])) == key:
+                if s.value >= hot_tog:
+                    hot_wire, hot_tog = hl["wire"], int(s.value)
+        rows[key] = {
+            "link": key[0],
+            "src": key[1],
+            "dst": key[2],
+            "toggles": int(series.value),
+            "windows": int(
+                registry.value("link.activity.windows", **slab)
+            ),
+            "wire_mean": round(hist.mean, 3),
+            "wire_max": int(hist.max) if hist.count else 0,
+            "hot_wire": hot_wire,
+            "hot_wire_toggles": hot_tog,
+        }
+    return [rows[k] for k in sorted(rows)]
+
+
+def top_wires(registry: Registry, n: int = 5) -> list[dict]:
+    """The n hottest (link, wire) pairs by toggle count, descending —
+    the hot-wire-tail summary the bench prints."""
+    pairs = [
+        {
+            "link": int(s.labels["link"]),
+            "src": int(s.labels["src"]),
+            "dst": int(s.labels["dst"]),
+            "wire": s.labels["wire"],
+            "toggles": int(s.value),
+        }
+        for s in registry.series("link.activity.hot_wire_toggles")
+    ]
+    pairs.sort(key=lambda r: (-r["toggles"], r["link"], r["wire"]))
+    return pairs[:n]
+
+
+def write_activity_csv(path: str, registry: Registry) -> list[dict]:
+    """Write (and return) the per-link activity summary CSV (the full
+    per-wire heatmap CSV comes from ``repro.obs.activity.write_wires_csv``
+    — this one is the registry-derived roll-up)."""
+    rows = activity_table(registry)
+    _ensure_parent(path)
+    with open(path, "w", newline="") as f:
+        writer = csv.DictWriter(f, fieldnames=ACTIVITY_FIELDS)
+        writer.writeheader()
+        writer.writerows(rows)
+    return rows
+
+
 def metrics_dict(registry: Registry) -> dict:
     """The registry as one JSON-safe document (counters/gauges/histograms
     plus the derived per-link table)."""
     doc = registry.to_dict()
     doc["links"] = link_table(registry)
+    act = activity_table(registry)
+    if act:  # only present when wire activity was measured — artifacts
+        doc["activity"] = act  # without it stay byte-identical to PR 7
     return doc
 
 

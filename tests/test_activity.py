@@ -1,0 +1,439 @@
+"""Wire-level switching-activity telemetry (DESIGN.md §15).
+
+Pins the tentpole invariants: the kernels' ``activity_windows=`` output is
+bit-exact across backends and chunked/sharded execution, per-wire toggles
+sum to the same gross BT the scalar accounting reports (on every measured
+link, for every ordering x codec), the sequential numpy reference
+reproduces the kernel per wire AND per window, uniform-capacitance
+``wire_energy_pj`` equals the scalar energy expressions exactly, and the
+SAIF/VCD exports round-trip consistently with the heatmap CSV.
+"""
+
+import csv
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given
+from hypothesis import strategies as st
+
+from repro.kernels import (
+    CodecVariant,
+    bt_count_axes,
+    bt_count_axes_sharded,
+    bt_count_codecs,
+    bt_count_links,
+)
+from repro.link import LinkPowerModel, LinkSpec
+from repro.noc import TrafficFlow, simulate_noc
+from repro.noc.power import NocPowerModel
+from repro.noc.topology import mesh
+from repro.obs import (
+    ActivityProfile,
+    link_profiles,
+    parse_saif,
+    profile_from_arrays,
+    profiles_from_noc,
+    wire_name,
+    write_saif,
+    write_vcd,
+    write_wires_csv,
+)
+
+_CONFIGS = (
+    CodecVariant("none"),
+    CodecVariant("none", codec="gray"),
+    CodecVariant("none", codec="sign_magnitude"),
+    CodecVariant("none", codec="transition"),
+    CodecVariant("none", codec="bus_invert", partition=None),
+    CodecVariant("none", codec="bus_invert", partition=4),
+    CodecVariant("acc", codec="bus_invert", partition=None),
+    CodecVariant("acc", codec="transition"),
+    CodecVariant("app", k=4, codec="gray"),
+)
+
+
+def _stream(p, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(0, 256, (p, n), dtype=np.uint8))
+
+
+# ----------------------------------------------------- numpy reference
+
+
+def _ref_wire(stream, codec, npart):
+    """Sequential wire image: (T, lanes) data -> (wire rows, invert rows)."""
+    d = np.asarray(stream, np.int64) & 0xFF
+    t, lanes = d.shape
+    if codec in ("none", "gray", "sign_magnitude"):
+        if codec == "gray":
+            d = d ^ (d >> 1)
+        elif codec == "sign_magnitude":
+            neg = d >= 0x80
+            mag = np.where(neg, (0x100 - d) & 0xFF, d)
+            d = np.where(neg, 0x80 | (mag & 0x7F), mag)
+        return d, None
+    if codec == "transition":
+        w = np.zeros_like(d)
+        prev = np.zeros(lanes, np.int64)
+        for i in range(t):
+            w[i] = prev ^ d[i]
+            prev = w[i]
+        return w, None
+    pw = lanes // npart
+    dg = d.reshape(t, npart, pw)
+    v = np.zeros((t, npart), np.int64)
+    w = np.zeros_like(dg)
+    prevw = None
+    for i in range(t):
+        if i:
+            hd = np.array([
+                bin(int(x)).count("1") for x in (dg[i] ^ prevw).flatten()
+            ]).reshape(npart, pw).sum(-1)
+            v[i] = (2 * hd > 8 * pw).astype(np.int64)
+        w[i] = dg[i] ^ (v[i][:, None] * 0xFF)
+        prevw = w[i]
+    return w.reshape(t, lanes), v
+
+
+def _ref_activity(stream, codec, npart, wlen, nwires):
+    """(toggles (NW, nwires), ones (nwires,)) by direct simulation."""
+    t, lanes = np.asarray(stream).shape
+    w, v = _ref_wire(stream, codec, npart)
+    bits = ((w[:, :, None] >> np.arange(8)) & 1).reshape(t, lanes * 8)
+    tog = np.zeros((-(-t // wlen), nwires), np.int64)
+    for i in range(1, t):
+        tog[i // wlen, : lanes * 8] += bits[i] ^ bits[i - 1]
+        if v is not None:
+            tog[i // wlen, lanes * 8 : lanes * 8 + npart] += v[i] ^ v[i - 1]
+    ones = np.zeros(nwires, np.int64)
+    ones[: lanes * 8] = bits.sum(0)
+    if v is not None:
+        ones[lanes * 8 : lanes * 8 + npart] = v.sum(0)
+    return tog, ones
+
+
+# --------------------------------------------------- kernel bit-exactness
+
+
+def test_activity_matches_sequential_reference_per_wire_and_window():
+    """Identity orderings: the kernel's toggle tensor and time-at-1 equal
+    direct sequential simulation of the coded wire, for every codec."""
+    p, n, lanes, wlen = 13, 16, 8, 5
+    x = _stream(p, n, seed=3)
+    flits = n // lanes
+    out = bt_count_axes(
+        x[None], None, configs=_CONFIGS, input_lanes=lanes,
+        block_packets=4, activity_windows=wlen,
+    )
+    nwires = out.toggles.shape[-1]
+    stream = np.asarray(
+        np.asarray(x, np.int64).reshape(p, lanes, flits)
+        .transpose(0, 2, 1).reshape(p * flits, lanes)
+    )
+    for ci, cfg in enumerate(_CONFIGS):
+        if cfg.key != "none":
+            continue  # the stream the kernel orders is x as-is only here
+        npart = 0
+        if cfg.codec == "bus_invert":
+            npart = 1 if cfg.partition is None else lanes // cfg.partition
+        tog, ones = _ref_activity(stream, cfg.codec, npart, wlen, nwires)
+        np.testing.assert_array_equal(
+            np.asarray(out.toggles)[0, ci], tog, err_msg=str(cfg)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(out.ones)[0, ci], ones, err_msg=str(cfg)
+        )
+
+
+def test_activity_bit_exact_across_backends_chunked_sharded():
+    """The acceptance matrix: compiled vs interpret, chunked vs single
+    shot, sharded vs unsharded all produce identical activity tensors,
+    and the bt plane never drifts from the activity-free measurement."""
+    p, n, lanes = 22, 16, 8
+    x = _stream(p, n, seed=5)[None]
+    kw = dict(
+        configs=_CONFIGS, input_lanes=lanes, block_packets=4,
+        activity_windows=3,
+    )
+    ref = bt_count_axes(x, None, backend="compiled", **kw)
+    plain = bt_count_axes(
+        x, None, configs=_CONFIGS, input_lanes=lanes, block_packets=4,
+        backend="compiled",
+    )
+    np.testing.assert_array_equal(np.asarray(ref.bt), np.asarray(plain))
+    variants = {
+        "interpret": bt_count_axes(x, None, backend="interpret", **kw),
+        "chunk7": bt_count_axes(
+            x, None, backend="compiled", chunk_packets=7, **kw
+        ),
+        "chunk4": bt_count_axes(
+            x, None, backend="compiled", chunk_packets=4, **kw
+        ),
+        "sharded": bt_count_axes_sharded(x, None, **kw),
+    }
+    for label, got in variants.items():
+        for field, a, b in zip(ref._fields, ref, got):
+            np.testing.assert_array_equal(
+                np.asarray(a), np.asarray(b), err_msg=f"{label}/{field}"
+            )
+
+
+@pytest.mark.parametrize("width", [4, 8])
+@pytest.mark.parametrize(
+    "ordering,codec,partition",
+    [
+        ("none", "none", None),
+        ("none", "bus_invert", 4),
+        ("acc", "gray", None),
+        ("acc", "transition", None),
+        ("acc", "bus_invert", None),
+        ("app", "sign_magnitude", None),
+    ],
+)
+def test_per_wire_sums_to_gross_bt(width, ordering, codec, partition):
+    """The tentpole invariant, ordering x codec x width 4/8 at a P that is
+    not a multiple of the kernel block: per-wire toggles sum exactly to
+    the gross BT (data + aux) the scalar accounting reports."""
+    cfg = CodecVariant(
+        ordering, 4 if ordering == "app" else None, False, codec, partition
+    )
+    x = _stream(11, 16, seed=width)  # P=11, block_packets=4 -> ragged block
+    out = bt_count_axes(
+        x[None], None, configs=(cfg,), input_lanes=8, width=width,
+        block_packets=4, activity_windows=6,
+    )
+    gross = int(np.asarray(out.bt)[0, 0].sum())
+    assert int(np.asarray(out.toggles)[0, 0].sum()) == gross
+    # and the per-wire vector prices identically through the power model
+    per_wire = np.asarray(out.toggles)[0, 0].sum(axis=0)
+    pm = LinkPowerModel()
+    extra = int((per_wire[64:] > 0).sum())  # active aux wires
+    assert pm.wire_energy_pj(
+        per_wire[: 64 + extra], 22, extra_wires=extra
+    ) == pm.coded_link_energy_pj(
+        int(per_wire[:64].sum()), int(per_wire[64:].sum()), 22, 64, extra
+    )
+
+
+@given(
+    seed=st.integers(0, 2**16),
+    p=st.integers(1, 17),
+    wlen=st.integers(1, 9),
+    ci=st.integers(0, len(_CONFIGS) - 1),
+)
+def test_property_per_wire_activity_sums_to_gross_bt(seed, p, wlen, ci):
+    cfg = _CONFIGS[ci]
+    x = _stream(p, 16, seed=seed)
+    out = bt_count_axes(
+        x[None], None, configs=(cfg,), input_lanes=8, block_packets=4,
+        activity_windows=wlen,
+    )
+    assert int(np.asarray(out.toggles).sum()) == int(np.asarray(out.bt).sum())
+
+
+def test_links_activity_jagged_lengths_match_reference():
+    rng = np.random.default_rng(9)
+    streams = jnp.asarray(rng.integers(0, 256, (3, 11, 8), dtype=np.uint8))
+    lengths = (11, 7, 1)
+    la = bt_count_links(streams, input_lanes=8, lengths=lengths,
+                        activity_windows=4)
+    bt = bt_count_links(streams, input_lanes=8, lengths=lengths)
+    np.testing.assert_array_equal(np.asarray(la.bt), np.asarray(bt))
+    for li, ln in enumerate(lengths):
+        tog, ones = _ref_activity(
+            np.asarray(streams)[li, :ln], "none", 0, 4, 64
+        )
+        got = np.asarray(la.toggles)[li]
+        np.testing.assert_array_equal(got[: tog.shape[0]], tog)
+        assert got[tog.shape[0]:].sum() == 0  # past-length windows empty
+        np.testing.assert_array_equal(np.asarray(la.ones)[li], ones)
+
+
+# --------------------------------------------------------- ActivityProfile
+
+
+def test_profile_summaries_and_invariant_check():
+    toggles = np.array([[3, 0, 1], [1, 0, 2]])
+    ones = np.array([4, 0, 5])
+    p = ActivityProfile("l0", 4, 8, 0, toggles, ones)  # 3 aux-only wires?
+    # data_lanes=0 means every wire is aux — wire_name covers both kinds
+    assert p.num_windows == 2 and p.num_wires == 3
+    assert p.gross_bt == 7
+    np.testing.assert_array_equal(p.per_wire, [4, 0, 3])
+    np.testing.assert_array_equal(p.waveform, [4, 3])
+    np.testing.assert_array_equal(p.t0, [4, 8, 3])
+    p.check(7)
+    with pytest.raises(ValueError, match="gross BT"):
+        p.check(8)
+    counts, edges = p.rate_histogram(bins=7)
+    assert counts.sum() == 3 and len(edges) == 8
+    assert p.hottest_wires(2) == [("inv0", 4), ("inv2", 3)]
+    assert wire_name(0, 2) == "lane0_b0"
+    assert wire_name(15, 2) == "lane1_b7"
+    assert wire_name(16, 2) == "inv0"
+
+
+def test_profile_rejects_inconsistent_shapes():
+    with pytest.raises(ValueError, match="wires"):
+        ActivityProfile("x", 4, 8, 2, np.zeros((2, 3)), np.zeros(3))
+    with pytest.raises(ValueError, match="ones"):
+        ActivityProfile("x", 4, 8, 0, np.zeros((2, 3)), np.zeros(2))
+    with pytest.raises(ValueError, match="window_flits"):
+        ActivityProfile("x", 0, 8, 0, np.zeros((2, 3)), np.zeros(3))
+
+
+# ------------------------------------------------------------- SAIF / VCD
+
+
+def test_saif_round_trip_consistent_with_heatmap_csv(tmp_path):
+    """The acceptance criterion: the SAIF a run emits parses back with
+    T0/T1/TC consistent with the per-wire heatmap CSV on every net."""
+    streams = jnp.asarray(
+        np.random.default_rng(2).integers(0, 256, (2, 9, 4), dtype=np.uint8)
+    )
+    lengths = (9, 5)
+    la = bt_count_links(streams, input_lanes=4, lengths=lengths,
+                        activity_windows=4)
+    profs = link_profiles(la, window_flits=4, lengths=lengths, data_lanes=4)
+    saif_path = str(tmp_path / "act.saif")
+    csv_path = str(tmp_path / "wires.csv")
+    write_saif(saif_path, profs, design="t")
+    write_wires_csv(csv_path, profs)
+    doc = parse_saif(saif_path)
+    assert doc["duration"] == max(lengths)
+    with open(csv_path) as f:
+        rows = list(csv.DictReader(f))
+    assert rows, "empty heatmap CSV"
+    for r in rows:
+        net = doc["instances"][r["profile"]][r["net"]]
+        assert net["TC"] == int(r["toggles"])
+        assert net["T1"] == int(r["t1"])
+        assert net["TX"] == 0 and net["IG"] == 0
+        assert net["T0"] + net["T1"] == doc["duration"]
+    # total TC across the SAIF == total gross BT of the measurement
+    total_tc = sum(
+        net["TC"]
+        for nets in doc["instances"].values()
+        for net in nets.values()
+    )
+    assert total_tc == int(np.asarray(la.bt).sum())
+
+
+def test_vcd_transitions_equal_profile_toggles(tmp_path):
+    stream = np.random.default_rng(4).integers(0, 256, (7, 2), np.int64)
+    text = write_vcd(str(tmp_path / "w.vcd"), stream, name="l")
+    # count value-change lines after the $dumpvars block
+    body = text.split("$end\n", 2)[-1].split("$dumpvars")[-1]
+    changes = [
+        ln for ln in body.splitlines()
+        if ln and ln[0] in "01" and not ln.startswith("#")
+    ]
+    changes = changes[16:]  # drop the 16 initial-value dump lines
+    prof = profile_from_arrays(
+        "l", *_ref_activity(stream, "none", 0, 7, 16),
+        window_flits=7, duration_flits=7, data_lanes=2,
+    )
+    assert len(changes) == prof.gross_bt
+
+
+# ------------------------------------------------------- power refinement
+
+
+def test_wire_energy_uniform_caps_reproduce_scalar_model_exactly():
+    pm = LinkPowerModel()
+    per_wire = [3, 0, 7, 1, 9, 2, 4, 4]
+    assert pm.wire_energy_pj(per_wire, 10) == pm.link_energy_pj(30, 10)
+    assert pm.wire_energy_pj(
+        per_wire, 10, extra_wires=2
+    ) == pm.coded_link_energy_pj(24, 6, 10, 6, 2)
+    npm = NocPowerModel()
+    assert npm.wire_hop_energy_pj(
+        per_wire, 10, extra_wires=2
+    ) == npm.coded_hop_energy_pj(24, 6, 10, 6, 2)
+    # a non-uniform capacitance profile actually changes the answer
+    caps = [1.0] * 7 + [2.0]
+    assert pm.wire_energy_pj(per_wire, 10, wire_caps=caps) == pytest.approx(
+        pm.link_energy_pj(30, 10) + pm.energy_per_transition_pj * 4
+    )
+    with pytest.raises(ValueError, match="wire_caps"):
+        pm.wire_energy_pj(per_wire, 10, wire_caps=[1.0])
+    with pytest.raises(ValueError, match="per-wire"):
+        pm.wire_energy_pj(per_wire, 10, data_wires=4)
+
+
+# -------------------------------------------------------- NoC + DSE paths
+
+
+def test_simulate_noc_activity_profiles_and_energy_identity():
+    rng = np.random.default_rng(7)
+    topo = mesh(3, 3)
+    flows = [
+        TrafficFlow("f0", 0, (8,), jnp.asarray(
+            rng.integers(0, 256, (5, 64), dtype=np.uint8))),
+        TrafficFlow("f1", 2, (6,), jnp.asarray(
+            rng.integers(0, 256, (3, 64), dtype=np.uint8))),
+    ]
+    for codec in ("none", "bus_invert4"):
+        spec = LinkSpec(key="acc", codec=codec, input_lanes=16,
+                        weight_lanes=0)
+        rep = simulate_noc(topo, flows, spec, activity_windows=4)
+        base = simulate_noc(topo, flows, spec)
+        # activity measurement never changes the scalar accounting
+        assert rep.links == base.links
+        profs = profiles_from_noc(rep)
+        assert len(profs) == rep.active_links
+        pm = NocPowerModel()
+        ew = profs[0].aux_wires
+        for p, s in zip(profs, rep.links):
+            p.check(s.gross_bt)  # per-wire sums to gross, every link
+            assert pm.wire_hop_energy_pj(
+                p.per_wire, s.num_flits,
+                data_wires=p.data_wires, extra_wires=ew,
+            ) == s.energy_pj
+
+
+def test_evaluate_grid_activity_per_wire_and_hot_wire_fields():
+    from repro.dse import DesignPoint, Workload, evaluate_grid
+    from repro.dse.report import point_record
+
+    rng = np.random.default_rng(1)
+    wl = Workload(
+        "wl",
+        (jnp.asarray(rng.integers(0, 256, (7, 32), dtype=np.uint8)),),
+        lanes=16,
+    )
+    pts = [
+        DesignPoint("psu", 16, 8, None, ordering="acc"),
+        DesignPoint("psu", 16, 8, None, ordering="acc", codec="bus_invert"),
+        DesignPoint("psu", 16, 8, None, ordering="none"),
+    ]
+    ev = evaluate_grid(pts, wl, activity_windows=4)
+    plain = evaluate_grid(pts, wl)
+    pm = LinkPowerModel()
+    for a, b in zip(ev, plain):
+        assert (a.total_bt, a.aux_bt, a.energy_pj) == (
+            b.total_bt, b.aux_bt, b.energy_pj
+        )
+        assert len(a.per_wire_bt) == 8 * wl.lanes + a.extra_wires
+        assert sum(a.per_wire_bt) == a.gross_bt
+        assert pm.wire_energy_pj(
+            a.per_wire_bt, a.num_flits, extra_wires=a.extra_wires
+        ) == a.energy_pj
+        rec = point_record(a)
+        assert rec["hot_wire"] == a.hot_wire
+        assert rec["hot_wire_bt"] == a.hot_wire_bt
+        assert a.hot_wire_ratio >= 1.0
+        # the plain path reports the wire fields as absent, not wrong
+        assert b.per_wire_bt is None and b.hot_wire is None
+        assert point_record(b)["hot_wire_ratio"] is None
+
+
+def test_codecs_kernel_activity_invariant():
+    x = _stream(9, 32, seed=8)
+    out = bt_count_codecs(
+        x, None, configs=_CONFIGS[:6], input_lanes=16, activity_windows=5
+    )
+    bt = np.asarray(out.bt)
+    for ci in range(len(_CONFIGS[:6])):
+        assert int(np.asarray(out.toggles)[ci].sum()) == int(bt[ci].sum())
