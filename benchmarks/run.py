@@ -12,6 +12,8 @@ derived`` CSV (the harness contract).
   codec_bt         -> ordering vs coding vs composed (repro.codec tables)
   kernel_bench     -> kernel microbenchmarks (per-backend wall rows)
   roofline_report  -> deliverable (g) tables from the dry-run records
+  model_traffic    -> captured real-model streams: per-scenario BT/power
+                      campaign + trained-weight recalibration (§16)
 
 Usage: ``python -m benchmarks.run [--json] [--trace] [--activity]
 [module ...]`` runs
@@ -66,6 +68,7 @@ MODULES = (
     "codec_bt",
     "kernel_bench",
     "roofline_report",
+    "model_traffic",
 )
 
 

@@ -16,11 +16,17 @@ until someone actually turns it on.
 
 from __future__ import annotations
 
-__all__ = ["SINK", "active", "event", "span"]
+__all__ = ["SINK", "TAP", "active", "capturing", "event", "span", "tap"]
 
 # The installed sink (repro.obs.probes._Sink) or None.  Probes read this
 # once per call; repro.obs flips it when the first collector activates.
 SINK = None
+
+# The installed traffic tap (repro.obs.capture._Tap) or None.  A separate
+# slot from SINK because tap payloads carry ARRAYS (weights, KV slices,
+# gradients), not the JSON-safe scalars the probe sink expects.  Same
+# zero-cost contract: with the slot empty a tap site is one None test.
+TAP = None
 
 
 class _NullSpan:
@@ -59,3 +65,23 @@ def event(kind: str, **data) -> None:
     s = SINK
     if s is not None:
         s.event(kind, data)
+
+
+def capturing() -> bool:
+    """True while at least one traffic-capture session is active."""
+    return TAP is not None
+
+
+def tap(kind: str, **payload) -> None:
+    """Offer tensors at a traffic-tap site (no-op when no capture active).
+
+    ``kind`` names the tap point (e.g. ``"serve.kv"``); ``payload`` may
+    carry jax arrays or pytrees of them.  Tap sites inside jitted
+    functions fire with tracers during tracing — the installed tap drops
+    those whole-payload (it performs NO jax operations on them), so the
+    traced jaxpr stays byte-identical whether capture is absent,
+    installed, or active (tests/test_capture.py pins this).
+    """
+    t = TAP
+    if t is not None:
+        t.tap(kind, payload)

@@ -25,6 +25,8 @@ from typing import Any, Dict
 import jax
 import jax.numpy as jnp
 
+from repro import _obs_hooks
+
 from .config import ModelConfig
 from .layers import dense_init
 
@@ -102,6 +104,10 @@ def moe_block(
         combine = combine + sel * top_p[:, :, j, None, None].astype(dt)
 
     expert_in = jnp.einsum("gsec,gsd->gecd", dispatch, xg)
+    # traffic tap: expert_in is exactly the ICI dispatch payload.  Under
+    # jit it is a tracer and the tap drops the firing whole; eager capture
+    # drivers record real dispatch bytes.
+    _obs_hooks.tap("moe.dispatch", expert_in=expert_in)
     h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", expert_in, params["gate"].astype(dt)))
     h = h * jnp.einsum("gecd,edf->gecf", expert_in, params["up"].astype(dt))
     expert_out = jnp.einsum("gecf,efd->gecd", h, params["down"].astype(dt))

@@ -7,10 +7,11 @@
 #   simulate.py - flows -> per-link streams -> batched BT / energy report
 #   power.py    - per-hop energy: link wire model + router flit overhead
 #   adapters.py - real workloads (conv platform, decode weights, gradient
-#                 all-reduce) as NoC flows
+#                 all-reduce, MoE dispatch) as NoC flows
 from .adapters import (
     conv_platform_flows,
     decode_weight_flows,
+    moe_dispatch_flows,
     packetize,
     ring_allreduce_flows,
 )
@@ -48,4 +49,5 @@ __all__ = [
     "conv_platform_flows",
     "decode_weight_flows",
     "ring_allreduce_flows",
+    "moe_dispatch_flows",
 ]

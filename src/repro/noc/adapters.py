@@ -39,7 +39,20 @@ __all__ = [
     "conv_platform_flows",
     "decode_weight_flows",
     "ring_allreduce_flows",
+    "moe_dispatch_flows",
 ]
+
+
+def _wire_bytes(x: jax.Array) -> jax.Array:
+    """A tensor's int8 wire image as flat uint8 bytes.
+
+    int8/uint8 inputs ARE already their wire image (e.g. captured streams
+    from ``repro.obs.capture``) and pass through untouched — re-quantizing
+    them would rescale the bytes and distort the measured distribution.
+    """
+    if x.dtype in (jnp.dtype(jnp.uint8), jnp.dtype(jnp.int8)):
+        return jnp.ravel(x).astype(jnp.uint8)
+    return jnp.ravel(int8_view(x)).astype(jnp.uint8)
 
 
 def packetize(data: jax.Array, elems: int) -> jax.Array:
@@ -119,7 +132,7 @@ def decode_weight_flows(
             "input-only spec (weight_lanes=0)"
         )
     topo.coords(src)  # validates the router id
-    pkts = packetize(int8_view(weight).astype(jnp.uint8), spec.elems_per_packet)
+    pkts = packetize(_wire_bytes(weight), spec.elems_per_packet)
     if max_packets is not None:
         pkts = pkts[:max_packets]
     return [
@@ -154,7 +167,7 @@ def ring_allreduce_flows(
         raise ValueError("ring all-reduce needs >= 2 routers")
     if spec.weight_lanes:
         raise ValueError("gradient traffic is one-sided; use weight_lanes=0")
-    pkts = packetize(int8_view(grad).astype(jnp.uint8), spec.elems_per_packet)
+    pkts = packetize(_wire_bytes(grad), spec.elems_per_packet)
     shard = max(pkts.shape[0] // len(order), 1)
     flows = []
     for i, r in enumerate(order):
@@ -169,5 +182,54 @@ def ring_allreduce_flows(
                 dsts=(order[(i + 1) % len(order)],),
                 inputs=pkts[lo:hi],
             )
+        )
+    return flows
+
+
+def moe_dispatch_flows(
+    expert_in: jax.Array,
+    topo: Topology,
+    src: int,
+    expert_routers: Sequence[int],
+    spec: LinkSpec = LinkSpec(),
+) -> list[TrafficFlow]:
+    """MoE dispatch: each expert's capacity buffer unicast to its router.
+
+    ``expert_in`` is the (G, E, C, D) dispatched buffer of
+    ``repro.models.moe.moe_block`` (or its captured int8 wire image from
+    ``repro.obs.capture``); expert e's slice ``expert_in[:, e]`` flows from
+    the dispatch router ``src`` to ``expert_routers[e % len]`` — the ICI
+    all-to-all leg of DESIGN.md §5 on the modeled fabric.  Tokens inside a
+    capacity buffer are an unordered set, which is exactly the permutation
+    freedom the paper's sorting unit exploits (``sort_at`` in
+    ``simulate_noc``).
+    """
+    if spec.weight_lanes:
+        raise ValueError("dispatch traffic is one-sided; use weight_lanes=0")
+    if expert_in.ndim != 4:
+        raise ValueError(
+            f"expert_in must be (groups, experts, capacity, d_model), "
+            f"got shape {tuple(expert_in.shape)}"
+        )
+    if not expert_routers:
+        raise ValueError("moe dispatch needs >= 1 expert router")
+    topo.coords(src)  # validates the router id
+    flows = []
+    for e in range(expert_in.shape[1]):
+        data = _wire_bytes(expert_in[:, e])
+        if int(data.size) < spec.elems_per_packet:
+            continue  # padded expert with an empty (sub-packet) buffer
+        flows.append(
+            TrafficFlow(
+                name=f"moe/expert{e}",
+                src=src,
+                dsts=(expert_routers[e % len(expert_routers)],),
+                inputs=packetize(data, spec.elems_per_packet),
+            )
+        )
+    if not flows:
+        raise ValueError(
+            f"no expert buffer reaches one {spec.elems_per_packet}-byte "
+            "packet; capture more tokens or shrink the packet"
         )
     return flows

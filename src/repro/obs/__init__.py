@@ -7,6 +7,9 @@
 #   report.py   - per-link BT tables, top-N hottest links, CSV/JSON dumps
 #   activity.py - wire-level switching-activity profiles (DESIGN.md §15)
 #   saif.py     - SAIF / VCD export of measured activity for EDA flows
+#   capture.py  - real-model traffic capture: taps on the model zoo
+#                 recording int8 wire streams for the BT stack
+#                 (DESIGN.md §16)
 #
 # Disabled by default with provably zero cost: production modules import
 # only repro._obs_hooks (a None-test per probe, fired OUTSIDE any traced
@@ -21,6 +24,18 @@ from .activity import (
     wire_records,
     write_wires_csv,
 )
+from .capture import (
+    TAP_SCENARIOS,
+    CapturedStream,
+    CaptureSession,
+    capture,
+    capture_lenet_conv,
+    capture_moe_dispatch,
+    capture_serve_decode,
+    capture_train_step,
+    load_session,
+    save_session,
+)
 from .metrics import Counter, Gauge, Histogram, Registry, registry_from_dict
 from .probes import (
     PROBE_KINDS,
@@ -32,14 +47,18 @@ from .probes import (
 from .report import (
     activity_table,
     format_links,
+    format_scenarios,
     link_table,
     metrics_dict,
     read_metrics_json,
+    scenario_table,
     top_links,
     top_wires,
     write_activity_csv,
     write_links_csv,
     write_metrics_json,
+    write_scenarios_csv,
+    write_scenarios_json,
 )
 from .saif import parse_saif, write_saif, write_vcd
 from .trace import Tracer
@@ -63,6 +82,20 @@ __all__ = [
     "activity_table",
     "top_wires",
     "write_activity_csv",
+    "scenario_table",
+    "format_scenarios",
+    "write_scenarios_csv",
+    "write_scenarios_json",
+    "TAP_SCENARIOS",
+    "CapturedStream",
+    "CaptureSession",
+    "capture",
+    "capture_serve_decode",
+    "capture_train_step",
+    "capture_moe_dispatch",
+    "capture_lenet_conv",
+    "save_session",
+    "load_session",
     "metrics_dict",
     "write_metrics_json",
     "read_metrics_json",

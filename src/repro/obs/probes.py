@@ -29,6 +29,9 @@ fans out to all active collectors.  The probe vocabulary:
   dse.link           event  one per measurement link of a DSE grid launch
   dse.point          event  one per evaluated design point
   codec.stream       event  per-stream totals in ``codec.compare_streams``
+  capture.stream     event  one per stream recorded by a traffic-capture
+                            session (``repro.obs.capture``) — bytes per
+                            scenario/stream
   bench.module       span   ``benchmarks/run.py --trace`` around each
                             module run
   =================  =====  ==============================================
@@ -75,6 +78,7 @@ PROBE_KINDS: dict[str, str] = {
     "dse.link": "event",
     "dse.point": "event",
     "codec.stream": "event",
+    "capture.stream": "event",
     "bench.module": "span",
 }
 
@@ -157,6 +161,10 @@ def _record_event(reg: Registry, kind: str, data: dict) -> None:
             "codec.stream.bt", workload=data["workload"],
             stream=data["stream"],
         ).inc(data["bt"])
+    elif kind == "capture.stream":
+        lab = {"scenario": data["scenario"], "stream": data["stream"]}
+        reg.counter("capture.bytes", **lab).inc(data["bytes"])
+        reg.counter("capture.streams", **lab).inc()
     else:  # unknown kinds still count — new probes degrade gracefully
         reg.counter(f"{kind}.calls", **_labels(kind, data)).inc()
 

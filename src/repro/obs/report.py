@@ -25,6 +25,10 @@ __all__ = [
     "activity_table",
     "top_wires",
     "write_activity_csv",
+    "scenario_table",
+    "format_scenarios",
+    "write_scenarios_csv",
+    "write_scenarios_json",
     "metrics_dict",
     "write_metrics_json",
     "read_metrics_json",
@@ -199,6 +203,97 @@ def write_activity_csv(path: str, registry: Registry) -> list[dict]:
         writer.writeheader()
         writer.writerows(rows)
     return rows
+
+
+SCENARIO_FIELDS = (
+    "scenario",
+    "streams",
+    "num_bytes",
+    "num_flits",
+    "bt_base",
+    "red_acc",
+    "red_app",
+    "red_composed",
+    "energy_base_pj",
+    "energy_app_pj",
+    "noc_red_acc",
+    "hot_link",
+    "hot_wire",
+)
+
+
+def scenario_table(records: Sequence[dict]) -> list[dict]:
+    """Normalized per-scenario campaign records (DESIGN.md §16).
+
+    ``records`` come from real-traffic capture campaigns
+    (``benchmarks/model_traffic.py``): one dict per scenario with captured
+    stream totals, DSE-measured BT under baseline/ACC/APP/codec-composed
+    ordering, link energy, and the hottest link/wire of the scenario's NoC
+    run.  Missing fields become ``""`` so partial campaigns still emit
+    well-formed tables; reduction/energy floats are rounded for diffable
+    artifacts.
+    """
+    out = []
+    for rec in records:
+        row = {k: rec.get(k, "") for k in SCENARIO_FIELDS}
+        for k in ("red_acc", "red_app", "red_composed", "noc_red_acc"):
+            if row[k] != "":
+                row[k] = round(float(row[k]), 6)
+        for k in ("energy_base_pj", "energy_app_pj"):
+            if row[k] != "":
+                row[k] = round(float(row[k]), 3)
+        out.append(row)
+    out.sort(key=lambda r: str(r["scenario"]))
+    return out
+
+
+def format_scenarios(records: Sequence[dict]) -> str:
+    """Aligned text table of scenario records (the bench / README view)."""
+    rows = scenario_table(records)
+    head = (
+        f"{'scenario':>16s} {'streams':>8s} {'bytes':>10s} {'flits':>8s} "
+        f"{'base BT':>10s} {'ACC red':>8s} {'APP red':>8s} {'+codec':>8s} "
+        f"{'E base pJ':>11s} {'E app pJ':>10s}"
+    )
+    lines = [head, "-" * len(head)]
+
+    def pct(v):
+        return f"{100 * v:7.2f}%" if v != "" else f"{'-':>8s}"
+
+    for r in rows:
+        lines.append(
+            f"{str(r['scenario']):>16s} {str(r['streams']):>8s} "
+            f"{str(r['num_bytes']):>10s} {str(r['num_flits']):>8s} "
+            f"{str(r['bt_base']):>10s} {pct(r['red_acc'])} "
+            f"{pct(r['red_app'])} {pct(r['red_composed'])} "
+            f"{str(r['energy_base_pj']):>11s} {str(r['energy_app_pj']):>10s}"
+        )
+    return "\n".join(lines)
+
+
+def write_scenarios_csv(path: str, records: Sequence[dict]) -> list[dict]:
+    """Write (and return) the per-scenario campaign CSV."""
+    rows = scenario_table(records)
+    _ensure_parent(path)
+    with open(path, "w", newline="") as f:
+        writer = csv.DictWriter(f, fieldnames=SCENARIO_FIELDS)
+        writer.writeheader()
+        writer.writerows(rows)
+    return rows
+
+
+def write_scenarios_json(
+    path: str, records: Sequence[dict], meta: dict | None = None
+) -> dict:
+    """Write (and return) the scenario campaign as one JSON document —
+    the table plus campaign-level metadata (e.g. the recalibration
+    comparison against the §10 synthetic numbers)."""
+    doc = {"scenarios": scenario_table(records), **(meta or {})}
+    _ensure_parent(path)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=False)
+        f.write("\n")
+    return doc
 
 
 def metrics_dict(registry: Registry) -> dict:

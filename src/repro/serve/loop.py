@@ -17,6 +17,7 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
+from repro import _obs_hooks
 from repro.models import decode_step, prefill
 from repro.models.config import ModelConfig
 
@@ -68,6 +69,9 @@ def generate(
     logits, cache = prefill_fn(
         params, prompts, frames=frames, inputs_embeds=inputs_embeds
     )
+    # traffic tap (None test when no capture active): the decode weight
+    # stream is multicast once per step — one firing represents it
+    _obs_hooks.tap("serve.weights", params=params)
     key = jax.random.key(seed)
     out_toks, out_lp = [], []
     tok = None
@@ -83,6 +87,9 @@ def generate(
         out_toks.append(tok[:, 0])
         tok = tok.astype(jnp.int32)
         logits, cache = decode_fn(params, cache, tok)
+        # cache is concrete here (decode_fn already ran): the new KV /
+        # SSM-state bytes of this step are the per-token link traffic
+        _obs_hooks.tap("serve.kv", cache=cache, step=i)
     return GenerateResult(
         tokens=jnp.stack(out_toks, axis=1), logprobs=jnp.stack(out_lp, axis=1)
     )

@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro import _obs_hooks
 from repro.models import encdec_forward, forward, lm_loss
 from repro.models.config import ModelConfig
 from repro.optim import AdamWConfig, OptState, update
@@ -78,6 +79,10 @@ def make_train_step(
             )
             grads = jax.tree.map(lambda g: g / microbatches, grads)
             loss = loss / microbatches
+        # traffic tap: the gradient tree is exactly the ring all-reduce
+        # payload.  Under jit grads are tracers and the tap drops the
+        # firing whole (jaxpr-identical); eager callers record real bytes.
+        _obs_hooks.tap("train.grads", grads=grads)
         new_params, new_opt, metrics = update(opt_cfg, grads, opt_state, params)
         return new_params, new_opt, {"loss": loss, **metrics}
 
