@@ -14,6 +14,9 @@ derived`` CSV (the harness contract).
   roofline_report  -> deliverable (g) tables from the dry-run records
   model_traffic    -> captured real-model streams: per-scenario BT/power
                       campaign + trained-weight recalibration (§16)
+  fleet_noc        -> fleet-scale serving fabric (§17): batched expansion
+                      vs legacy loop, one-launch pin, BT + contention
+                      latency on a 16x16 mesh of multi-tenant decode flows
 
 Usage: ``python -m benchmarks.run [--json] [--trace] [--activity]
 [module ...]`` runs
@@ -69,6 +72,7 @@ MODULES = (
     "kernel_bench",
     "roofline_report",
     "model_traffic",
+    "fleet_noc",
 )
 
 

@@ -11,6 +11,7 @@
 #   report.py   - JSON / CSV artifacts for the bench trajectory
 from .evaluate import Evaluation, Workload, evaluate_grid, grid_launch_count
 from .pareto import (
+    AREA_BT_LATENCY_OBJECTIVES,
     AREA_BT_OBJECTIVES,
     DEFAULT_OBJECTIVES,
     Objective,
@@ -27,6 +28,7 @@ from .space import (
     expand_grid,
     k_sweep,
     parse_topology,
+    topology_route_hops,
 )
 
 __all__ = [
@@ -41,9 +43,11 @@ __all__ = [
     "evaluate_grid",
     "grid_launch_count",
     "parse_topology",
+    "topology_route_hops",
     "Objective",
     "DEFAULT_OBJECTIVES",
     "AREA_BT_OBJECTIVES",
+    "AREA_BT_LATENCY_OBJECTIVES",
     "dominates",
     "pareto_front",
     "knee_point",

@@ -56,7 +56,7 @@ from repro.kernels import (
 )
 from repro.link import LinkPowerModel
 
-from .space import DesignPoint, parse_topology
+from .space import DesignPoint, topology_route_hops
 
 __all__ = ["Workload", "Evaluation", "evaluate_grid", "grid_launch_count"]
 
@@ -130,6 +130,9 @@ class Evaluation:
     # per-wire BT over the workload streams (data wires then invert lines,
     # DESIGN.md §15) — populated when evaluated with ``activity_windows=``
     per_wire_bt: tuple[int, ...] | None = None
+    # wormhole traversal of the point's NoC route under the contention
+    # model (``repro.noc.latency``, DESIGN.md §17) — set when topology is
+    noc_latency_ns: float | None = None
 
     @property
     def label(self) -> str:
@@ -179,6 +182,14 @@ class Evaluation:
         """Time to sort one N-element window at the paper's 500 MHz."""
         return self.timing.sort_time_ns(self.point.n)
 
+    @property
+    def total_latency_ns(self) -> float:
+        """Sort latency plus the NoC traversal of the workload (when the
+        point names a topology) — the latency axis of the
+        AREA_BT_LATENCY Pareto plane.  Point-to-point designs pay the
+        sorting unit only, fabric designs add the wormhole route."""
+        return self.latency_ns + (self.noc_latency_ns or 0.0)
+
 
 def _configs_by_width(
     points: tuple[DesignPoint, ...],
@@ -207,8 +218,6 @@ def _grid_links(
     and the fold scales it by the route length.  Returns
     (payloads, {topology: (row index, link count)}).
     """
-    from repro.noc import hop_count  # deferred: keep dse importable alone
-
     streams = [jnp.asarray(s) for s in workload.streams]
     payloads = list(streams)
     topo_rows: dict[str, tuple[int, int]] = {}
@@ -216,9 +225,7 @@ def _grid_links(
         pt.topology for pt in points if pt.topology is not None
     )
     for name in names:
-        topo = parse_topology(name)
-        far = max(range(topo.num_routers), key=lambda r: hop_count(topo, 0, r))
-        nlinks = hop_count(topo, 0, far)
+        nlinks = topology_route_hops(name)
         q = streams[0] if len(streams) == 1 else jnp.concatenate(streams, axis=0)
         topo_rows[name] = (len(payloads), nlinks)
         payloads.append(q)
@@ -376,6 +383,7 @@ def evaluate_grid(
     backend: str | None = None,
     chunk_packets: int | None = None,
     activity_windows: int | None = None,
+    latency=None,
 ) -> tuple[Evaluation, ...]:
     """Evaluate every design point of a grid against one workload.
 
@@ -392,7 +400,11 @@ def evaluate_grid(
     rides the same launch and resolves each point's BT per wire
     (``Evaluation.per_wire_bt`` and the hot-wire properties, DESIGN.md
     §15) — the view that shows which orderings flatten the hot-wire
-    tail rather than just lowering the mean.
+    tail rather than just lowering the mean.  ``latency`` (a
+    ``repro.noc.NocLatencyModel``; pass nothing for the default timing
+    constants) prices each topology point's NoC traversal — the whole
+    workload crossing the evaluation route under the wormhole model
+    (DESIGN.md §17) — into ``Evaluation.noc_latency_ns``.
     """
     points = tuple(points)
     if not points:
@@ -400,6 +412,12 @@ def evaluate_grid(
     _validate_workload(workload)
     power = power if power is not None else LinkPowerModel()
     lanes = workload.lanes
+    from repro.noc.latency import (  # deferred: keep dse importable alone
+        NocLatencyModel,
+        route_latency_ns,
+    )
+
+    latency = latency if latency is not None else NocLatencyModel()
 
     bt_tab, noc_tab, topo_links, wire_tab = _measure_grid(
         points,
@@ -432,12 +450,15 @@ def evaluate_grid(
 
             extra_wires = codec_by_name(pt.codec).extra_wires(lanes)
         acc_total = psu_area(pt.n, pt.width).total
-        noc_red = noc_links = None
+        noc_red = noc_links = noc_lat = None
         if pt.topology is not None:
             gross = noc_tab[(pt.width, pt.topology, pt.codec_variant)]
             base = noc_tab[(pt.width, pt.topology, _BASELINE)]
             noc_red = 1.0 - gross / max(base, 1)
             noc_links = topo_links[pt.topology]
+            # the whole workload crossing the evaluation route (router 0
+            # to the farthest router) under the wormhole model
+            noc_lat = route_latency_ns(noc_links, num_flits, latency)
         per_wire = None
         if activity_windows is not None:
             # trim the launch-wide aux columns to this point's own invert
@@ -465,6 +486,7 @@ def evaluate_grid(
                 aux_bt=aux_bt,
                 extra_wires=extra_wires,
                 per_wire_bt=per_wire,
+                noc_latency_ns=noc_lat,
             )
         )
         _obs.event(

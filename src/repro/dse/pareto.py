@@ -28,6 +28,7 @@ __all__ = [
     "Objective",
     "DEFAULT_OBJECTIVES",
     "AREA_BT_OBJECTIVES",
+    "AREA_BT_LATENCY_OBJECTIVES",
     "dominates",
     "pareto_front",
     "knee_point",
@@ -51,6 +52,17 @@ DEFAULT_OBJECTIVES: tuple[Objective, ...] = (
 # measured conv streams the knee of this front is the paper's own k=4
 # choice (asserted in tests/test_dse.py).
 AREA_BT_OBJECTIVES: tuple[Objective, ...] = DEFAULT_OBJECTIVES[:2]
+
+# The fleet-scale plane (DESIGN.md §17): area vs BT reduction vs
+# END-TO-END latency — sort window plus the point's NoC traversal under
+# the wormhole/contention model (``Evaluation.total_latency_ns``).  For
+# point-to-point designs it degrades gracefully to the sort latency, so
+# mixed grids rank on one consistent axis; the knee on the reference
+# fleet grid is pinned in tests/test_dse.py.
+AREA_BT_LATENCY_OBJECTIVES: tuple[Objective, ...] = (
+    *AREA_BT_OBJECTIVES,
+    Objective("total_latency_ns", lambda e: e.total_latency_ns),
+)
 
 
 def _values(e: Evaluation, objectives: Sequence[Objective]) -> tuple[float, ...]:

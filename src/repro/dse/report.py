@@ -43,6 +43,8 @@ _FIELDS = (
     "energy_pj",
     "latency_ns",
     "latency_cycles",
+    "noc_latency_ns",
+    "total_latency_ns",
     "noc_bt_reduction",
     "noc_active_links",
     "hot_wire",
@@ -80,6 +82,10 @@ def point_record(e: Evaluation, *, on_front: bool = False) -> dict:
         "energy_pj": round(e.energy_pj, 3),
         "latency_ns": round(e.latency_ns, 3),
         "latency_cycles": e.timing.latency_cycles,
+        "noc_latency_ns": (
+            None if e.noc_latency_ns is None else round(e.noc_latency_ns, 3)
+        ),
+        "total_latency_ns": round(e.total_latency_ns, 3),
         "noc_bt_reduction": (
             None if e.noc_bt_reduction is None else round(e.noc_bt_reduction, 6)
         ),

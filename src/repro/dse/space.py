@@ -27,6 +27,7 @@ points for `repro.dse.evaluate.evaluate_grid`.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import re
 
 from repro.core.area import (
@@ -48,6 +49,7 @@ __all__ = [
     "k_sweep",
     "area_reduction",
     "parse_topology",
+    "topology_route_hops",
 ]
 
 FAMILIES = ("psu", "bitonic", "csn")
@@ -72,6 +74,18 @@ def parse_topology(name: str):
         return ring(int(m.group(4)))
     builder = mesh if m.group(1) == "mesh" else torus
     return builder(int(m.group(2)), int(m.group(3)))
+
+
+@functools.lru_cache(maxsize=None)
+def topology_route_hops(name: str) -> int:
+    """Hop count of a topology's DSE evaluation route: router 0 to the
+    farthest router under XY routing — the one home of the 'how long is
+    the fabric' question (``dse.evaluate``'s measurement row scaling AND
+    the wormhole latency objective both read it)."""
+    from repro.noc import hop_count  # deferred: keep space.py light
+
+    topo = parse_topology(name)
+    return max(hop_count(topo, 0, r) for r in range(topo.num_routers))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -181,6 +195,12 @@ class DesignPoint:
         if self.family == "csn":
             return csn_area(self.n, self.width)
         return psu_area(self.n, self.width, self.k)
+
+    def noc_hops(self) -> int | None:
+        """Hops of this point's NoC evaluation route (None off-fabric)."""
+        if self.topology is None:
+            return None
+        return topology_route_hops(self.topology)
 
     def timing(self) -> PSUTiming:
         """Pipelined sort timing at the paper's 500 MHz clock."""

@@ -16,6 +16,10 @@ traffic patterns (DESIGN.md §9):
     sharded over the routers of a ring schedule, each shard hopping to the
     next router — one step of a ring reduce-scatter, the ICI collective
     pattern of DESIGN.md §5 on the modeled fabric.
+  * **Fleet decode** (DESIGN.md §17, the ``fleet_noc`` benchmark):
+    multi-tenant decode weight broadcast — users x layers x shards
+    multicast flows on a large grid, tenants pinned to rows, shards to
+    column groups; the merge-heavy traffic the contention model prices.
 
 Adapters only build ``TrafficFlow``s; ordering/packing/measuring stay in
 :mod:`repro.noc.simulate`.
@@ -38,6 +42,7 @@ __all__ = [
     "packetize",
     "conv_platform_flows",
     "decode_weight_flows",
+    "fleet_decode_flows",
     "ring_allreduce_flows",
     "moe_dispatch_flows",
 ]
@@ -143,6 +148,82 @@ def decode_weight_flows(
             inputs=pkts,
         )
     ]
+
+
+def fleet_decode_flows(
+    weights: jax.Array,
+    topo: Topology,
+    *,
+    users: int,
+    layers: int,
+    shards: int,
+    spec: LinkSpec = LinkSpec(input_lanes=16, weight_lanes=0),
+    packets_per_flow: int = 2,
+) -> list[TrafficFlow]:
+    """Multi-tenant decode weight traffic: users x layers x shards flows.
+
+    The fleet-serving pattern behind the ROADMAP's 16x16 north star (and
+    the ``fleet_noc`` benchmark): tenant ``u`` is pinned to grid row
+    ``u % rows`` — its memory-controller router sits at column 0 and its
+    PEs are the remaining routers of the row.  For every decode layer
+    ``l``, weight shard ``s`` multicasts from the tenant's memory router
+    to the ``s``-th contiguous group of the row's PE columns (the
+    tensor-parallel shard placement), so flows of co-located tenants and
+    of every layer merge on the row's column-0 egress links — exactly the
+    merge-point contention ``noc.latency`` prices.
+
+    Payloads are deterministic strided slices of ``weights``'s int8 wire
+    image (tiled if the tensor is smaller than one flow), so every flow
+    carries distinct but reproducible bytes.
+    """
+    if spec.weight_lanes:
+        raise ValueError(
+            "fleet decode traffic is a one-sided broadcast; use an "
+            "input-only spec (weight_lanes=0)"
+        )
+    if users < 1 or layers < 1 or shards < 1:
+        raise ValueError(
+            f"need users/layers/shards >= 1, got {users}/{layers}/{shards}"
+        )
+    if packets_per_flow < 1:
+        raise ValueError(f"packets_per_flow must be >= 1, got {packets_per_flow}")
+    pe_cols = topo.cols - 1
+    if pe_cols < shards:
+        raise ValueError(
+            f"{shards} shards need {shards} PE columns; a {topo.rows}x"
+            f"{topo.cols} grid has {pe_cols} (column 0 is the memory router)"
+        )
+    data = _wire_bytes(weights)
+    need = packets_per_flow * spec.elems_per_packet
+    if int(data.size) < need:
+        data = jnp.tile(data, -(-need // int(data.size)))
+    span = int(data.size) - need  # highest valid slice start
+    flows = []
+    for u in range(users):
+        row = u % topo.rows
+        mem = topo.router(row, 0)
+        for layer in range(layers):
+            for s in range(shards):
+                lo = s * pe_cols // shards
+                hi = (s + 1) * pe_cols // shards
+                dsts = tuple(
+                    topo.router(row, 1 + c) for c in range(lo, hi)
+                )
+                fi = (u * layers + layer) * shards + s
+                # coprime stride walks the wire image without re-slicing
+                # the same window for co-located tenants
+                off = 0 if span == 0 else (fi * 7919) % (span + 1)
+                flows.append(
+                    TrafficFlow(
+                        name=f"u{u}/l{layer}/s{s}",
+                        src=mem,
+                        dsts=dsts,
+                        inputs=data[off : off + need].reshape(
+                            packets_per_flow, spec.elems_per_packet
+                        ),
+                    )
+                )
+    return flows
 
 
 def ring_allreduce_flows(

@@ -42,12 +42,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import _obs_hooks as _obs
+from repro.codec.schemes import codec_by_name, invert_line_transitions
 from repro.kernels import bt_count_links
 from repro.link import ENCODE_STAGES, LinkSpec, make_order, row_bucket_order
 from repro.link.framing import assemble_stream
 
+from .fabric import FabricStreams, FlowBatch, expand_fabric, validate_flow
+from .latency import FabricLatency, NocLatencyModel, fabric_latency
 from .power import NocPowerModel
-from .routing import hop_count, multicast_links
+from .routing import compile_fabric, hop_count, multicast_links
 from .topology import Topology
 
 __all__ = [
@@ -56,6 +59,7 @@ __all__ = [
     "LinkStreams",
     "NocReport",
     "expand_link_streams",
+    "fabric_to_link_streams",
     "stack_link_streams",
     "simulate_noc",
 ]
@@ -149,6 +153,9 @@ class NocReport:
     wire_lanes: int = 0
     wire_toggles: tuple = ()
     wire_ones: tuple = ()
+    # contention-model results (DESIGN.md §17) — populated only when the
+    # run was simulated with ``latency=``
+    latency: FabricLatency | None = None
 
     @property
     def active_links(self) -> int:
@@ -186,32 +193,9 @@ class NocReport:
         return 1.0 - self.gross_bt / max(base.gross_bt, 1e-9)
 
 
-def _validate_flow(flow: TrafficFlow, spec: LinkSpec) -> None:
-    if flow.inputs.ndim != 2 or flow.inputs.shape[-1] != spec.elems_per_packet:
-        raise ValueError(
-            f"flow {flow.name!r}: payload {tuple(flow.inputs.shape)} != "
-            f"(P, {spec.elems_per_packet}) for this spec"
-        )
-    if flow.inputs.shape[0] == 0:
-        raise ValueError(f"flow {flow.name!r}: zero packets")
-    if spec.weight_lanes and flow.weights is None:
-        raise ValueError(
-            f"flow {flow.name!r}: spec has weight lanes but no weight payload"
-        )
-    if flow.weights is not None:
-        if not spec.weight_lanes:
-            raise ValueError(
-                f"flow {flow.name!r}: weight payload on an input-only spec"
-            )
-        if flow.weights.shape != (
-            flow.inputs.shape[0],
-            spec.weight_elems_per_packet,
-        ):
-            raise ValueError(
-                f"flow {flow.name!r}: weight payload "
-                f"{tuple(flow.weights.shape)} != "
-                f"(P, {spec.weight_elems_per_packet})"
-            )
+# flow validation lives with the batched path now; the legacy reference
+# loop below shares it
+_validate_flow = validate_flow
 
 
 def _packet_perm(
@@ -238,33 +222,66 @@ def expand_link_streams(
 
     Element ordering (the spec's KEY stage) is applied per packet at the
     source; ``sort_at='hop'`` additionally re-orders each link's packet
-    queue by popcount bucket.  All ordering/packing here is plain jnp (the
+    queue by popcount bucket.  All ordering/packing is plain jnp (the
     registered ``repro.link`` stages); the Pallas work of a NoC run is the
     single batched BT launch in :func:`simulate_noc`.
+
+    Compatibility wrapper: since the fleet-scale refactor (DESIGN.md §17)
+    this delegates to the batched fabric pipeline (``noc.fabric``) and
+    re-expands its distinct-queue streams into the legacy per-link view —
+    bit-exact vs :func:`_expand_link_streams_reference` (asserted in
+    ``tests/test_fabric.py``).  New code should keep the
+    :class:`~repro.noc.fabric.FabricStreams` form instead: it measures Q
+    distinct queues, not L links.
     """
-    if sort_at not in ("source", "hop"):
-        raise ValueError(f"sort_at must be 'source' or 'hop', got {sort_at!r}")
-    if spec.key == "row_bucket":
-        raise ValueError(
-            "NoC flows carry packets, which use the packet-granularity key "
-            "stages ('none', 'column_major', 'acc', 'app'); 'row_bucket' is "
-            "a row-stream stage (TxPipeline.measure_rows)"
-        )
-    with _obs.span(
-        "noc.expand",
-        topology=f"{topo.kind}{topo.rows}x{topo.cols}",
-        sort_at=sort_at, flows=len(flows),
-    ):
-        return _expand_link_streams(topo, flows, spec, sort_at=sort_at)
+    plan = compile_fabric(topo, [(f.src, f.dsts) for f in flows])
+    batch = FlowBatch.from_flows(flows, spec)
+    fs = expand_fabric(plan, batch, spec, sort_at=sort_at)
+    return fabric_to_link_streams(fs)
 
 
-def _expand_link_streams(
+def fabric_to_link_streams(fs: FabricStreams) -> LinkStreams:
+    """Per-link view of a fabric expansion: one gather of the distinct-queue
+    streams per the plan's link->queue table.  Invert-line states stay
+    device arrays, trimmed to each link's real flit count (the legacy
+    ``LinkStreams.inverts`` contract); only the scalar aux counts sync to
+    host here, once for the whole fabric."""
+    plan = fs.plan
+    if not plan.link_ids:
+        lanes = int(fs.streams.shape[-1])
+        return LinkStreams((), jnp.zeros((0, 1, lanes), jnp.uint8), ())
+    lq = jnp.asarray(plan.link_queue, jnp.int32)
+    stacked = jnp.take(fs.streams, lq, axis=0)
+    lengths = fs.link_lengths()
+    if fs.aux_bt is None:
+        aux = (0,) * len(plan.link_ids)
+        inverts: tuple = ()
+    else:
+        aux_q = np.asarray(fs.aux_bt).astype(int).tolist()
+        aux = tuple(aux_q[qi] for qi in plan.link_queue)
+        if fs.inverts is None:
+            inverts = (None,) * len(plan.link_ids)
+        else:
+            inverts = tuple(
+                fs.inverts[qi, : lengths[i]]
+                for i, qi in enumerate(plan.link_queue)
+            )
+    return LinkStreams(plan.link_ids, stacked, lengths, aux, inverts)
+
+
+def _expand_link_streams_reference(
     topo: Topology,
     flows: Sequence[TrafficFlow],
     spec: LinkSpec,
     *,
     sort_at: str,
 ) -> LinkStreams:
+    """The original per-flow expansion loop, kept verbatim as the pinned
+    bit-exactness reference for the batched fabric pipeline (DESIGN.md
+    §17) — O(flows + links) traced host ops, so never use it at fleet
+    scale.  ``tests/test_fabric.py`` asserts the batched path reproduces
+    its streams / lengths / aux counts / invert states byte for byte on
+    every test fabric."""
     encode = ENCODE_STAGES[spec.encode]
     # per-flow: encoded payloads + element order, computed ONCE at the source
     per_flow = []
@@ -318,19 +335,13 @@ def _expand_link_streams(
             aux, inv = 0, None
             if spec.codec != "none":
                 # each link's egress encoder codes its own queue; the
-                # batched kernel then measures the coded wire directly
-                from repro.codec.schemes import (
-                    codec_by_name,
-                    invert_line_transitions,
-                )
-
+                # batched kernel then measures the coded wire directly.
+                # invert-line state stays on device — the activity path
+                # trims/materializes it only when asked to
                 coded = codec_by_name(spec.codec).encode(stream)
                 stream = coded.wire
                 aux = int(invert_line_transitions(coded.invert))
-                inv = (
-                    None if coded.invert is None
-                    else np.asarray(coded.invert)
-                )
+                inv = coded.invert
             entry = assembled[idxs] = (stream, aux, inv)
         streams.append(entry[0])
         aux_bts.append(entry[1])
@@ -376,20 +387,29 @@ def simulate_noc(
     backend: str | None = None,
     chunk_rows: int | None = None,
     activity_windows: int | None = None,
+    latency: NocLatencyModel | None = None,
     name: str = "noc",
 ) -> NocReport:
     """Run the fabric: expand flows to link streams, measure every link.
 
-    All links are measured by one ``bt_count_links`` launch; per-link
-    energies roll up through ``NocPowerModel`` (wire switching + router
-    flit overhead per hop).  ``backend`` selects the kernel execution path
+    The expansion is the batched fabric pipeline (DESIGN.md §17): routing
+    compiled once into a ``FabricPlan``, payloads stacked into a
+    ``FlowBatch``, and every distinct link queue assembled/coded in
+    vmapped stages — then ONE ``bt_count_links`` launch measures the
+    whole fabric (links sharing a queue composition carry byte-identical
+    streams, so each distinct queue is measured once).  Per-link energies
+    roll up through ``NocPowerModel`` (wire switching + router flit
+    overhead per hop).  ``backend`` selects the kernel execution path
     (pallas | compiled | interpret, DESIGN.md §13); ``chunk_rows`` streams
     the flit-row axis in fixed-size chunks for fabrics whose stacked link
     tensor would not fit in memory at once.  ``activity_windows`` (a flit
     count) additionally measures per-wire × per-time-window switching
     activity on every link (DESIGN.md §15): the report gains
     ``wire_toggles`` / ``wire_ones`` and each link fires a
-    ``link.activity`` probe event.
+    ``link.activity`` probe event.  ``latency`` (a ``NocLatencyModel``)
+    additionally evaluates the hop-contention model over the plan's queue
+    tables — the report gains per-link/per-flow ``FabricLatency`` rows and
+    contended links fire ``noc.contend`` probe events.
     """
     power = power if power is not None else NocPowerModel()
     with _obs.span(
@@ -400,7 +420,7 @@ def simulate_noc(
         report = _simulate_noc(
             topo, flows, spec, sort_at=sort_at, power=power,
             interpret=interpret, backend=backend, chunk_rows=chunk_rows,
-            activity_windows=activity_windows, name=name,
+            activity_windows=activity_windows, latency=latency, name=name,
         )
     if _obs.active():
         # per-link egress telemetry (the rows behind repro.obs.report)
@@ -437,38 +457,51 @@ def _simulate_noc(
     backend: str | None,
     chunk_rows: int | None,
     activity_windows: int | None,
+    latency: NocLatencyModel | None,
     name: str,
 ) -> NocReport:
-    ls = expand_link_streams(topo, flows, spec, sort_at=sort_at)
+    plan = compile_fabric(topo, [(f.src, f.dsts) for f in flows])
+    batch = FlowBatch.from_flows(flows, spec)
+    fs = expand_fabric(plan, batch, spec, sort_at=sort_at)
     extra_wires = 0
     if spec.codec != "none":
-        from repro.codec.schemes import codec_by_name
-
         extra_wires = codec_by_name(spec.codec).extra_wires(spec.bytes_per_flit)
     stats: list[LinkStats] = []
     wire_toggles: tuple = ()
     wire_ones: tuple = ()
-    if ls.link_ids:
+    if plan.link_ids:
+        # ONE launch over the Q distinct queues; per-link rows are table
+        # lookups (dedup'd links carry byte-identical streams)
         out = bt_count_links(
-            ls.streams,
+            fs.streams,
             input_lanes=spec.input_lanes,
-            lengths=ls.lengths,
+            lengths=fs.lengths,
             interpret=interpret,
             backend=backend,
             chunk_rows=chunk_rows,
             activity_windows=activity_windows,
         )
         if activity_windows is not None:
-            wire_toggles, wire_ones = _link_wire_activity(
-                out, ls, activity_windows, extra_wires
+            qtog, qone = _queue_wire_activity(
+                out, fs.lengths, fs.inverts, activity_windows, extra_wires
             )
+            wire_toggles = tuple(qtog[qi] for qi in plan.link_queue)
+            wire_ones = tuple(qone[qi] for qi in plan.link_queue)
             bt = np.asarray(out.bt)
         else:
             bt = np.asarray(out)
-        for (lid, length, aux, (bi, bw)) in zip(
-            ls.link_ids, ls.lengths, ls.aux_bt, bt.astype(int).tolist()
-        ):
-            u, v = topo.links[lid]
+        bt_rows = bt.astype(int).tolist()
+        aux_q = (
+            [0] * plan.num_queues
+            if fs.aux_bt is None
+            else np.asarray(fs.aux_bt).astype(int).tolist()
+        )
+        table = topo.link_table
+        for lid, qi in zip(plan.link_ids, plan.link_queue):
+            length = fs.lengths[qi]
+            bi, bw = bt_rows[qi]
+            aux = aux_q[qi]
+            u, v = int(table[lid, 0]), int(table[lid, 1])
             stats.append(
                 LinkStats(
                     link=lid,
@@ -486,6 +519,13 @@ def _simulate_noc(
                     bt_aux=aux,
                 )
             )
+    fabric_lat = None
+    if latency is not None:
+        fabric_lat = fabric_latency(
+            plan,
+            [c * spec.flits_per_packet for c in batch.counts],
+            latency,
+        )
     flow_hops = tuple(
         (f.name, max(hop_count(topo, f.src, d) for d in f.dsts)) for f in flows
     )
@@ -501,26 +541,28 @@ def _simulate_noc(
         wire_lanes=spec.bytes_per_flit if activity_windows else 0,
         wire_toggles=wire_toggles,
         wire_ones=wire_ones,
+        latency=fabric_lat,
     )
 
 
-def _link_wire_activity(
-    out, ls: LinkStreams, window: int, extra_wires: int
-) -> tuple[tuple, tuple]:
-    """Per-link full-wire activity: the kernel's data-wire tensors widened
-    with the codec invert lines' toggles/ones, computed from the raw line
-    states ``expand_link_streams`` kept (the invert recurrence is already
-    paid there — only window bucketing happens here, in numpy)."""
-    tog = np.asarray(out.toggles).astype(np.int64)  # (L, NW, lanes*8)
-    one = np.asarray(out.ones).astype(np.int64)  # (L, lanes*8)
+def _queue_wire_activity(
+    out, lengths: tuple[int, ...], inverts, window: int, extra_wires: int
+) -> tuple[list, list]:
+    """Per-queue full-wire activity: the kernel's data-wire tensors widened
+    with the codec invert lines' toggles/ones.  The invert recurrence was
+    already paid on device in the batched expansion; the (Q, T, npart)
+    line-state tensor crosses to host ONCE here and only window bucketing
+    happens per queue, in numpy."""
+    tog = np.asarray(out.toggles).astype(np.int64)  # (Q, NW, lanes*8)
+    one = np.asarray(out.ones).astype(np.int64)  # (Q, lanes*8)
     nw = tog.shape[1]
-    inverts = ls.inverts if ls.inverts else (None,) * len(ls.link_ids)
+    inv_all = None if inverts is None else np.asarray(inverts, np.int64)
     wire_toggles, wire_ones = [], []
-    for i, (length, inv) in enumerate(zip(ls.lengths, inverts)):
+    for i, length in enumerate(lengths):
         aux_t = np.zeros((nw, extra_wires), np.int64)
         aux_o = np.zeros(extra_wires, np.int64)
-        if inv is not None and length >= 1:
-            iv = np.asarray(inv[:length], np.int64)
+        if inv_all is not None and length >= 1:
+            iv = inv_all[i, :length]
             aux_o[: iv.shape[1]] = iv.sum(axis=0)
             if length >= 2:
                 flips = (iv[1:] != iv[:-1]).astype(np.int64)
@@ -530,4 +572,4 @@ def _link_wire_activity(
                 np.add.at(aux_t[:, : iv.shape[1]], widx, flips)
         wire_toggles.append(np.concatenate([tog[i], aux_t], axis=1))
         wire_ones.append(np.concatenate([one[i], aux_o]))
-    return tuple(wire_toggles), tuple(wire_ones)
+    return wire_toggles, wire_ones

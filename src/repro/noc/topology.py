@@ -75,6 +75,24 @@ class Topology:
         """All routers in one grid row (the weight-broadcast multicast set)."""
         return tuple(row * self.cols + c for c in range(self.cols))
 
+    def column_routers(self, col: int) -> tuple[int, ...]:
+        """All routers in one grid column (a shard's PE placement in the
+        fleet decode workload, ``noc.adapters.fleet_decode_flows``)."""
+        if not 0 <= col < self.cols:
+            raise ValueError(f"column {col} outside 0..{self.cols - 1}")
+        return tuple(r * self.cols + col for r in range(self.rows))
+
+    @functools.cached_property
+    def link_table(self):
+        """The directed link endpoints as one (num_links, 2) int32 numpy
+        array — the O(1)-per-lookup form the fleet-scale report builders
+        index instead of unpacking ``links`` tuples link by link."""
+        import numpy as np
+
+        if not self.links:
+            return np.zeros((0, 2), np.int32)
+        return np.asarray(self.links, np.int32)
+
 
 def _grid_links(rows: int, cols: int, wrap: bool) -> tuple[tuple[int, int], ...]:
     """Directed neighbor links in deterministic (router, +col, -col, +row,

@@ -21,6 +21,8 @@ fans out to all active collectors.  The probe vocabulary:
   noc.simulate       span   ``noc.simulate_noc``
   noc.link           event  one per measured NoC link (the per-link BT
                             telemetry behind ``repro.obs.report``)
+  noc.contend        event  one per contended link (>= 2 merged flows) of
+                            a ``noc.latency`` contention-model evaluation
   link.activity      event  one per link measured with wire-level
                             activity (``activity_windows=``) — per-wire
                             toggle telemetry (DESIGN.md §15)
@@ -74,6 +76,7 @@ PROBE_KINDS: dict[str, str] = {
     "noc.expand": "span",
     "noc.simulate": "span",
     "noc.link": "event",
+    "noc.contend": "event",
     "dse.measure": "span",
     "dse.link": "event",
     "dse.point": "event",
@@ -121,6 +124,14 @@ def _record_event(reg: Registry, kind: str, data: dict) -> None:
         reg.counter("noc.link.bt", side="aux", **lab).inc(data["bt_aux"])
         reg.counter("noc.link.flits", **lab).inc(data["num_flits"])
         reg.counter("noc.link.energy_pj", **lab).inc(data["energy_pj"])
+    elif kind == "noc.contend":
+        lab = {
+            "link": data["link"], "src": data["src"], "dst": data["dst"],
+        }
+        reg.counter("noc.contend.flows", **lab).inc(data["flows"])
+        reg.counter("noc.contend.wait_cycles", **lab).inc(
+            data["wait_cycles"]
+        )
     elif kind == "link.report":
         lab = {"stream": data["name"]}
         reg.counter("link.bt", side="input", **lab).inc(data["bt_input"])

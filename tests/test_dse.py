@@ -31,6 +31,7 @@ from repro.core import (  # noqa: E402
     popcount,
 )
 from repro.dse import (  # noqa: E402
+    AREA_BT_LATENCY_OBJECTIVES,
     AREA_BT_OBJECTIVES,
     DesignPoint,
     Evaluation,
@@ -308,6 +309,35 @@ def test_noc_point_evaluates_per_link():
     assert noc.noc_bt_reduction is not None
     # same single-link BT either way (the NoC axis is additive)
     assert noc.total_bt == plain.total_bt
+
+
+def test_area_bt_latency_plane_and_knee():
+    """The AREA_BT_LATENCY plane (DESIGN.md §17): topology points pay the
+    wormhole traversal of the workload, and the 3-objective knee is still
+    the paper's APP k=4 point-to-point design."""
+    rng = np.random.default_rng(12)
+    stream = jnp.asarray(rng.integers(0, 256, (96, 64), dtype=np.uint8))
+    workload = Workload("rand", (stream,), lanes=16)
+    pts = (
+        DesignPoint(ordering="acc", k=None),
+        DesignPoint(ordering="app", k=4),
+        DesignPoint(ordering="app", k=4, topology="mesh3x3"),
+    )
+    acc, app4, app4_mesh = evaluate_grid(pts, workload)
+    # wormhole pin: 4 hops x (3+1) head cycles + 383 body cycles @ 2 ns
+    assert acc.noc_latency_ns is None and app4.noc_latency_ns is None
+    assert app4_mesh.noc_latency_ns == pytest.approx(798.0)
+    assert app4.total_latency_ns == app4.latency_ns
+    assert app4_mesh.total_latency_ns == pytest.approx(
+        app4_mesh.latency_ns + 798.0
+    )
+    # the fabric point ties p2p APP on area and BT but pays the route ->
+    # dominated out of the 3-objective plane
+    plane = pareto_front((acc, app4, app4_mesh), AREA_BT_LATENCY_OBJECTIVES)
+    assert app4_mesh not in plane
+    assert acc in plane and app4 in plane  # area/BT trade survives
+    knee = knee_point(plane, AREA_BT_LATENCY_OBJECTIVES)
+    assert knee.point == app4.point
 
 
 # ------------------------------------------------------------- artifacts

@@ -1,0 +1,102 @@
+"""Property tests for large-fabric routing (hypothesis; auto-skip when
+hypothesis is not installed — see conftest.py).
+
+The batched fabric pipeline trusts ``compile_fabric``'s tables blindly, so
+the router itself gets the adversarial treatment: XY validity on the
+16x16 acceptance mesh, shortest-wrap tie-breaking on tori, and multicast
+tree link dedup on arbitrary destination sets.
+"""
+
+from hypothesis import given, strategies as st
+
+from repro.noc import (
+    compile_fabric,
+    hop_count,
+    mesh,
+    multicast_links,
+    route,
+    torus,
+    unicast_links,
+)
+
+MESH = mesh(16, 16)
+ROUTERS = st.integers(min_value=0, max_value=MESH.num_routers - 1)
+
+
+@given(src=ROUTERS, dst=ROUTERS)
+def test_mesh16_xy_route_is_valid_and_minimal(src, dst):
+    path = route(MESH, src, dst)
+    assert path[0] == src and path[-1] == dst
+    # link-connected: every step is a physical directed link (link_id
+    # raises on anything else)
+    for u, v in zip(path[:-1], path[1:]):
+        MESH.link_id(u, v)
+    # minimal: exactly the Manhattan distance
+    (r0, c0), (r1, c1) = MESH.coords(src), MESH.coords(dst)
+    assert len(path) - 1 == abs(r0 - r1) + abs(c0 - c1)
+    # dimension order: all column correction strictly before row correction
+    rows_changed = [MESH.coords(p)[0] != r0 for p in path]
+    cols_wrong = [MESH.coords(p)[1] != c1 for p in path]
+    assert all(
+        not wrong for moved, wrong in zip(rows_changed, cols_wrong) if moved
+    )
+
+
+@given(
+    rows=st.integers(min_value=2, max_value=9),
+    cols=st.integers(min_value=2, max_value=9),
+    src=st.integers(min_value=0, max_value=80),
+    dst=st.integers(min_value=0, max_value=80),
+)
+def test_torus_routes_take_shortest_wrap(rows, cols, src, dst):
+    topo = torus(rows, cols)
+    src %= topo.num_routers
+    dst %= topo.num_routers
+    (r0, c0), (r1, c1) = topo.coords(src), topo.coords(dst)
+    dr = min((r1 - r0) % rows, (r0 - r1) % rows)
+    dc = min((c1 - c0) % cols, (c0 - c1) % cols)
+    assert hop_count(topo, src, dst) == dr + dc
+    # tie-break toward + : an exact half-way offset must step forward
+    path = route(topo, src, dst)
+    if cols % 2 == 0 and (c1 - c0) % cols == cols // 2:
+        first = topo.coords(path[1])[1]
+        assert first == (c0 + 1) % cols
+
+
+@given(
+    src=ROUTERS,
+    dsts=st.lists(ROUTERS, min_size=1, max_size=12),
+)
+def test_mesh16_multicast_tree_dedups_links(src, dsts):
+    tree = multicast_links(MESH, src, tuple(dsts))
+    # each physical link carries ONE copy (the tree-multicast accounting)
+    assert len(tree) == len(set(tree))
+    # the tree is exactly the union of the unicast routes
+    union = set()
+    for d in dsts:
+        if d != src:
+            union.update(unicast_links(MESH, src, d))
+    assert set(tree) == union
+
+
+@given(
+    endpoints=st.lists(
+        st.tuples(ROUTERS, st.lists(ROUTERS, min_size=1, max_size=4)),
+        min_size=1,
+        max_size=16,
+    )
+)
+def test_compile_fabric_tables_are_consistent(endpoints):
+    eps = [(s, tuple(d)) for s, d in endpoints]
+    plan = compile_fabric(MESH, eps)
+    assert plan.num_flows == len(eps)
+    assert list(plan.link_ids) == sorted(plan.link_ids)
+    # every link's queue is exactly the flows whose tree crosses it, in
+    # injection (= flow index) order — the bit-exactness invariant
+    for lid in plan.link_ids:
+        q = plan.queue_of(lid)
+        assert q == tuple(
+            fi for fi, links in enumerate(plan.flow_links) if lid in links
+        )
+    # queue table covers every active link and nothing else
+    assert set(plan.link_queue) == set(range(plan.num_queues))
